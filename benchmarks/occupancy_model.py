@@ -1,0 +1,90 @@
+"""Analytic wave/occupancy/latency model of the three attention schedules.
+
+This reproduces the paper's evaluation methodology on hardware we don't
+have: a device is W equal workers (GPU: SMs x CTAs-per-SM; TPU: cores x
+pipeline slots). A decode-attention problem is (batch, kv-heads, ctx, tile):
+
+  FlashAttention-2: one CTA per (batch, head) segment; no ctx parallelism.
+      makespan = tiles_per_seg * ceil(segments / W)
+  FlashDecoding:   fixed split s (paper's heuristic: smallest s covering W);
+      makespan = ceil(tiles/s) * ceil(segments*s / W) + s * eps_reduce
+  LeanAttention:   stream-K — total tiles split exactly evenly;
+      makespan = ceil(total_tiles / W) + eps_reduce  (single fused launch,
+      constant reduction overhead — paper §IV-C)
+
+All times in LeanTile units; eps_launch per kernel launch (FD pays 2:
+attention + reduction kernels), eps_reduce per merge of one partial.
+This is the model behind every paper-figure benchmark; EXPERIMENTS.md
+compares its outputs against the paper's measured speedups.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core.leantile import fixed_split_factor
+
+
+@dataclass(frozen=True)
+class Device:
+    name: str
+    workers: int            # SMs x max CTAs/SM (GPU) | cores x pipe (TPU)
+    eps_reduce: float = 0.15   # cost of merging one partial, in tile units
+    eps_launch: float = 2.0    # kernel launch overhead, in tile units
+
+
+A100 = Device("A100", workers=108 * 2)
+H100 = Device("H100", workers=132 * 2)
+A100x8 = Device("8xA100", workers=864 * 2)
+TPU_V5E = Device("TPUv5e-core", workers=16)   # 2 TensorCores x 8 pipe slots
+
+
+def tiles_of(ctx: int, tile: int) -> int:
+    return -(-ctx // tile)
+
+
+def fa2_makespan(lens: Sequence[int], H: int, tile: int, dev: Device):
+    segs = len(lens) * H
+    waves = -(-segs // dev.workers)
+    # heterogeneous: each wave bounded by its slowest member; with one wave
+    # per segment-batch the max length dominates
+    t = tiles_of(max(lens), tile)
+    return t * waves + dev.eps_launch
+
+
+def fd_makespan(lens: Sequence[int], H: int, tile: int, dev: Device):
+    segs = len(lens) * H
+    s = fixed_split_factor(max(lens), segs, tile, dev.workers)
+    t_split = -(-tiles_of(max(lens), tile) // s)
+    waves = -(-(segs * s) // dev.workers)
+    red = dev.eps_reduce * s + (dev.eps_launch if s > 1 else 0.0)
+    return t_split * waves + red + dev.eps_launch
+
+
+def lean_makespan(lens: Sequence[int], H: int, tile: int, dev: Device):
+    total = sum(tiles_of(c, tile) for c in lens) * H
+    return -(-total // dev.workers) + dev.eps_reduce + dev.eps_launch
+
+
+def occupancy(lens: Sequence[int], H: int, tile: int, dev: Device,
+              makespan: float) -> float:
+    total = sum(tiles_of(c, tile) for c in lens) * H
+    return min(1.0, total / (dev.workers * max(makespan, 1e-9)))
+
+
+def speedups(lens: Sequence[int], H: int, tile: int, dev: Device) -> dict:
+    fa2 = fa2_makespan(lens, H, tile, dev)
+    fd = fd_makespan(lens, H, tile, dev)
+    la = lean_makespan(lens, H, tile, dev)
+    return {
+        "fa2": fa2,
+        "fd": fd,
+        "la": la,
+        "la_vs_fd": fd / la,
+        "la_vs_fa2": fa2 / la,
+        "occ_fa2": occupancy(lens, H, tile, dev, fa2),
+        "occ_fd": occupancy(lens, H, tile, dev, fd),
+        "occ_la": occupancy(lens, H, tile, dev, la),
+    }

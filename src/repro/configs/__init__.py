@@ -1,0 +1,41 @@
+"""Architecture registry: ``get_config(name)`` / ``get_smoke_config(name)``.
+
+One module per assigned architecture; ids use the assignment's dashed names.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from repro.models import ModelConfig
+from .shapes import SHAPES, ShapeSpec, input_specs, shape_applicable
+
+ARCH_IDS: List[str] = [
+    "musicgen-large",
+    "recurrentgemma-9b",
+    "llama-3.2-vision-11b",
+    "qwen2-moe-a2.7b",
+    "qwen3-moe-30b-a3b",
+    "xlstm-350m",
+    "yi-34b",
+    "gemma3-4b",
+    "mistral-nemo-12b",
+    "nemotron-4-15b",
+]
+
+
+def _module(name: str):
+    mod = name.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    return _module(name).config()
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    if name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    return _module(name).smoke_config()

@@ -1,0 +1,71 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+  train_4k     seq=4,096   global_batch=256   -> lowers train_step
+  prefill_32k  seq=32,768  global_batch=32    -> lowers prefill forward
+  decode_32k   seq=32,768  global_batch=128   -> lowers serve_step (1 token)
+  long_500k    seq=524,288 global_batch=1     -> lowers serve_step (1 token);
+               only for sub-quadratic archs (see ``shape_applicable``)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, init_cache
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# archs with sub-quadratic / bounded-KV attention run long_500k
+LONG_CTX_ARCHS = {"recurrentgemma-9b", "xlstm-350m", "gemma3-4b"}
+
+
+def shape_applicable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch.split("-smoke")[0] in LONG_CTX_ARCHS
+    return True
+
+
+def _has_xattn(cfg: ModelConfig) -> bool:
+    return any("xattn" in pat for pat, _ in cfg.stages)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the lowered step —
+    weak-type-correct, shardable, no device allocation."""
+    spec = SHAPES[shape]
+    B, S = spec.global_batch, spec.seq_len
+    f = jax.ShapeDtypeStruct
+
+    if spec.kind in ("train", "prefill"):
+        out = {"tokens": f((B, S), jnp.int32)}
+        if _has_xattn(cfg):
+            out["img_emb"] = f((B, cfg.cross_kv_len, cfg.d_model), jnp.bfloat16)
+        return out
+
+    # decode: one new token against a cache of S tokens
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    out = {
+        "tokens": f((B, 1), jnp.int32),
+        "cur_len": f((), jnp.int32),
+        "cache": cache,
+    }
+    if _has_xattn(cfg):
+        out["img_emb"] = f((B, cfg.cross_kv_len, cfg.d_model), jnp.bfloat16)
+    return out

@@ -1,0 +1,12 @@
+"""Core LeanAttention machinery: associative merge, stream-K schedule,
+reference schedules, mesh-level sequence-parallel decode."""
+from .merge import AttnPartial, merge, merge_n, tree_merge, segment_merge, finalize
+from .leantile import LeanSchedule, make_schedule, default_tile_size
+from .attention import (
+    mha_decode_ref,
+    mha_prefill_ref,
+    fixed_split_decode,
+    lean_decode_jnp,
+    chunk_partial,
+)
+from .distributed import sp_decode_attention, lean_merge_collective

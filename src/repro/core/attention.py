@@ -1,0 +1,294 @@
+"""Reference decode/prefill attention paths (pure jnp) + schedule executors.
+
+Three *schedules* from the paper, all computing bit-identical exact attention:
+
+  * ``mha_decode_ref``        — oracle: one fused softmax over the full context.
+  * ``fixed_split_decode``    — FlashDecoding: split context into ``s`` equal
+                                chunks per (batch, head), merge partials.
+  * ``lean_decode_jnp``       — LeanAttention: execute a
+                                :class:`~repro.core.leantile.LeanSchedule`
+                                (equal LeanTiles per worker, pieces merged by
+                                the associative operator).
+
+The Pallas kernels in :mod:`repro.kernels` implement the same schedules for
+TPU; these jnp versions are their oracles and the CPU/dry-run execution path.
+
+Decode shapes: ``q (B, Hq, d)``, ``k/v (B, Hkv, S, d)`` with GQA group
+``g = Hq // Hkv``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .leantile import LeanSchedule
+from .merge import AttnPartial, finalize, merge_n, segment_merge
+
+NEG_INF = -1e30  # finite mask value: keeps (m, l) stats well-defined
+
+
+def _length_mask(scores: jax.Array, ctx_lens: Optional[jax.Array], offset: int = 0):
+    """Mask score positions >= per-batch context length. scores: (B,...,S)."""
+    if ctx_lens is None:
+        return scores
+    S = scores.shape[-1]
+    pos = jnp.arange(S) + offset
+    mask = pos[None, :] < ctx_lens[:, None]            # (B, S)
+    mask = mask.reshape(mask.shape[0], *([1] * (scores.ndim - 2)), S)
+    return jnp.where(mask, scores, NEG_INF)
+
+
+def mha_decode_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    ctx_lens: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Oracle decode attention (single new token per sequence)."""
+    B, Hq, d = q.shape
+    _, Hkv, S, _ = k.shape
+    g = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    qg = q.reshape(B, Hkv, g, d)
+    # k/v stay in cache dtype (bf16): f32 copies of a 32k-token cache would
+    # double decode HBM traffic; accumulation is f32 via the einsum.
+    s = jnp.einsum(
+        "bhgd,bhsd->bhgs", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    s = _length_mask(s, ctx_lens)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bhgs,bhsd->bhgd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(B, Hq, d).astype(q.dtype)
+
+
+def chunk_partial(
+    q: jax.Array,
+    k_chunk: jax.Array,
+    v_chunk: jax.Array,
+    scale: float,
+    valid_len: Optional[jax.Array] = None,
+) -> AttnPartial:
+    """Un-scaled partial attention of q against one KV chunk (paper §IV-A).
+
+    q: (..., g, d); k_chunk/v_chunk: (..., t, d); valid_len: scalar or
+    broadcastable — tokens beyond it are masked.
+    Returns AttnPartial with o: (..., g, d), m/l: (..., g).
+    """
+    s = jnp.einsum(
+        "...gd,...td->...gt", q, k_chunk,
+        preferred_element_type=jnp.float32,
+    ) * scale
+    if valid_len is not None:
+        t = s.shape[-1]
+        pos = jnp.arange(t)
+        s = jnp.where(pos < valid_len, s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    a = jnp.exp(s - m[..., None])
+    l = jnp.sum(a, axis=-1)
+    o = jnp.einsum(
+        "...gt,...td->...gd", a.astype(v_chunk.dtype), v_chunk,
+        preferred_element_type=jnp.float32,
+    )
+    return AttnPartial(o=o, m=m, l=l)
+
+
+def fixed_split_decode(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    num_splits: int,
+    ctx_lens: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """FlashDecoding baseline: fixed-split along context + merge (§III-C)."""
+    B, Hq, d = q.shape
+    _, Hkv, S, _ = k.shape
+    g = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    split = -(-S // num_splits)
+    pad = split * num_splits - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    ks = k.reshape(B, Hkv, num_splits, split, d)
+    vs = v.reshape(B, Hkv, num_splits, split, d)
+    qg = q.reshape(B, Hkv, 1, g, d)
+    lens = ctx_lens if ctx_lens is not None else jnp.full((B,), S)
+    valid = jnp.clip(
+        lens[:, None] - jnp.arange(num_splits)[None, :] * split, 0, split
+    )  # (B, s)
+    parts = chunk_partial(
+        qg,
+        ks,
+        vs,
+        scale,
+        valid_len=valid[:, None, :, None, None],
+    )  # o: (B, Hkv, s, g, d)
+    parts = jax.tree.map(lambda a: jnp.moveaxis(a, 2, 0), parts)
+    out = finalize(merge_n(parts))
+    return out.reshape(B, Hq, d).astype(q.dtype)
+
+
+def lean_decode_jnp(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    sched: LeanSchedule,
+    ctx_lens: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Execute a LeanSchedule in pure jnp (vectorized over all iterations).
+
+    Faithful to the paper's two phases: (1) every worker computes un-scaled
+    partials for its equal share of LeanTiles; (2) pieces are reduced per
+    segment with the associative re-scaling operator. Here phase 1 is
+    expressed as a single batched gather+einsum over all G*T iterations and
+    phase 2 as segment ops — the *schedule* (who computes what, and which
+    partials exist) is exactly the kernel's.
+    """
+    B, Hq, d = q.shape
+    _, Hkv, S, _ = k.shape
+    g = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    t = sched.tile_size
+
+    it_seg = jnp.asarray(sched.iter_seg)
+    it_tile = jnp.asarray(sched.iter_tile)
+    it_piece = jnp.asarray(sched.iter_piece)
+    it_len = jnp.asarray(sched.iter_len)
+    it_valid = jnp.asarray(sched.iter_valid)
+    seg_b = jnp.asarray(sched.seg_batch)
+    seg_h = jnp.asarray(sched.seg_head)
+
+    # clamp padding iters onto segment 0 / tile 0 (masked out afterwards)
+    safe_seg = jnp.where(it_valid == 1, it_seg, 0)
+    b_of = seg_b[safe_seg]
+    h_of = seg_h[safe_seg]
+
+    Smax = k.shape[2]
+    start = it_tile * t
+    pos = start[:, None] + jnp.arange(t)[None, :]           # (I, t)
+    pos_c = jnp.minimum(pos, Smax - 1)
+    k_tiles = k[b_of[:, None], h_of[:, None], pos_c]        # (I, t, d)
+    v_tiles = v[b_of[:, None], h_of[:, None], pos_c]
+    q_tiles = q.reshape(B, Hkv, g, d)[b_of, h_of]           # (I, g, d)
+
+    tok_valid = (pos - start[:, None]) < it_len[:, None]    # (I, t)
+    sf = jnp.einsum("igd,itd->igt", q_tiles.astype(jnp.float32),
+                    k_tiles.astype(jnp.float32)) * scale
+    sf = jnp.where(tok_valid[:, None, :], sf, NEG_INF)
+    sf = jnp.where((it_valid == 1)[:, None, None], sf, NEG_INF)
+    m = jnp.max(sf, axis=-1)                                # (I, g)
+    a = jnp.where(sf > NEG_INF / 2, jnp.exp(sf - m[..., None]), 0.0)
+    l = jnp.sum(a, axis=-1)
+    o = jnp.einsum("igt,itd->igd", a, v_tiles.astype(jnp.float32))
+    m = jnp.where((it_valid == 1)[:, None], m, -jnp.inf)
+
+    # phase 2a: iterations -> pieces (what the kernel accumulates in VMEM)
+    piece = segment_merge(AttnPartial(o=o, m=m, l=l), it_piece, sched.num_pieces)
+    # phase 2b: pieces -> segments (the paper's reduction / fix-up phase)
+    piece_seg = jnp.asarray(sched.piece_seg)
+    seg = segment_merge(piece, piece_seg, sched.num_segments)
+    out = finalize(seg)                                     # (S, g, d)
+    return out.reshape(B, Hkv * g, d).astype(q.dtype)
+
+
+def mha_prefill_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    q_chunk: int = 512,
+    unroll: bool = False,
+) -> jax.Array:
+    """Exact prefill attention, scanned over q chunks (flash-style memory:
+    O(q_chunk * Lk) scores live at once instead of O(Lq * Lk)).
+
+    Used as the train-path attention when ``attn_q_chunk`` is set — one of
+    the §Perf memory-term optimizations. ``unroll=True`` replaces the scan
+    with a python loop (flop-count mode: XLA cost analysis counts while-loop
+    bodies once, so the roofline measurement needs every iteration visible).
+    """
+    B, Hq, Lq, d = q.shape
+    _, Hkv, Lk, _ = k.shape
+    g = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    pad = (-Lq) % q_chunk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0))) if pad else q
+    nq = (Lq + pad) // q_chunk
+    qc = qp.reshape(B, Hkv, g, nq, q_chunk, d)
+    qc = jnp.moveaxis(qc, 3, 0)                 # (nq, B, Hkv, g, qc, d)
+    kpos = jnp.arange(Lk)
+
+    def chunk(ci, qchunk):
+        s = jnp.einsum(
+            "bhgqd,bhkd->bhgqk", qchunk, k,
+            preferred_element_type=jnp.float32,
+        ) * scale
+        qpos = ci * q_chunk + jnp.arange(q_chunk) + q_offset
+        ok = jnp.ones((q_chunk, Lk), dtype=bool)
+        if causal:
+            ok &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            ok &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(ok[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(v.dtype), v,
+            preferred_element_type=jnp.float32,
+        )
+
+    if unroll:
+        out = jnp.stack([chunk(i, qc[i]) for i in range(nq)])
+    else:
+        out = jax.lax.map(lambda args: chunk(*args), (jnp.arange(nq), qc))
+    out = jnp.moveaxis(out, 0, 3).reshape(B, Hq, Lq + pad, d)
+    return out[:, :, :Lq].astype(q.dtype)
+
+
+def mha_prefill_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Oracle prefill attention. q: (B, Hq, Lq, d), k/v: (B, Hkv, Lk, d).
+
+    ``window``: sliding-window size (local attention); None = global.
+    ``q_offset``: absolute position of q[0] (for chunked prefill).
+    """
+    B, Hq, Lq, d = q.shape
+    _, Hkv, Lk, _ = k.shape
+    g = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    qg = q.reshape(B, Hkv, g, Lq, d)
+    s = jnp.einsum(
+        "bhgqd,bhkd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    qpos = jnp.arange(Lq) + q_offset
+    kpos = jnp.arange(Lk)
+    ok = jnp.ones((Lq, Lk), dtype=bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        ok &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bhgqk,bhkd->bhgqd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(B, Hq, Lq, d).astype(q.dtype)

@@ -1,0 +1,214 @@
+"""LeanTile stream-K scheduler (paper §IV-B/IV-C), host-side.
+
+The schedule linearizes every LeanTile iteration of a decode-attention
+problem across ``batch -> kv_head -> context`` (the paper's constant-stride
+linearization), then splits that flat iteration list into ``G`` contiguous,
+*equal-size* ranges — one per worker. A worker's range may cross segment
+(output-tile) boundaries; each maximal same-segment run inside a worker is a
+"piece" whose un-scaled partial result is later reduced with the associative
+softmax re-scaling operator (:mod:`repro.core.merge`).
+
+Terminology (matching the paper):
+  segment   = one output tile = one (batch, kv_head) pair in decode
+  LeanTile  = ``tile_size`` KV tokens of one segment
+  worker    = the TPU analogue of a CTA: one grid step of the Pallas kernel
+              (or one device in the distributed setting)
+  piece     = (worker x segment) contiguous run -> one partial (o, m, l)
+  host piece= the first piece of a segment (paper's "host block")
+
+Ragged batches (heterogeneous context lengths) fall out naturally: tiles per
+segment just differ, the linearization stays contiguous (paper Fig. 6).
+
+Everything here is plain numpy executed on the host: in serving, context
+lengths are concrete host values each step, so schedules are cheap to build
+and are passed to the Pallas kernel as scalar-prefetch descriptor arrays.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "LeanSchedule",
+    "make_schedule",
+    "default_tile_size",
+    "fixed_split_factor",
+]
+
+
+def default_tile_size(head_dim: int) -> int:
+    """Paper §IV-B found 256 tokens (d=64) / 128 tokens (d=128) optimal on
+    A100. On TPU the constraint is MXU/VMEM alignment: the KV tile is the
+    matmul N dimension, so keep it a multiple of 128 lanes; 256 keeps the
+    (tile x d) VMEM working set ~64-128 KiB. Swept in EXPERIMENTS.md §Perf."""
+    return 256 if head_dim <= 64 else 128
+
+
+@dataclass(frozen=True)
+class LeanSchedule:
+    """Static-shape stream-K schedule + merge metadata.
+
+    All descriptor arrays have length ``num_workers * tiles_per_worker``
+    (padded); padded iters have ``iter_valid == 0`` and point at the
+    dedicated garbage piece ``num_pieces`` (partial buffers are allocated
+    with ``num_pieces + 1`` rows).
+    """
+
+    tile_size: int
+    num_workers: int          # G
+    tiles_per_worker: int     # ceil(total_tiles / G)
+    total_tiles: int
+    num_segments: int         # S = B * H_kv
+    num_pieces: int           # P <= S + G - 1
+
+    # per-iteration descriptors, each (G * tiles_per_worker,) int32
+    iter_seg: np.ndarray      # segment id (S for padding)
+    iter_tile: np.ndarray     # kv-tile index within the segment
+    iter_piece: np.ndarray    # partial slot accumulated into (P for padding)
+    iter_first: np.ndarray    # 1 -> first iter of its piece (reset scratch)
+    iter_last: np.ndarray     # 1 -> last iter of its piece (flush partial)
+    iter_len: np.ndarray      # valid tokens in this tile (<= tile_size)
+    iter_valid: np.ndarray    # 1 -> real work
+
+    # merge metadata
+    piece_seg: np.ndarray     # (P,) segment of each piece
+    piece_host: np.ndarray    # (P,) 1 -> first piece of its segment
+    seg_batch: np.ndarray     # (S,) batch index of segment
+    seg_head: np.ndarray      # (S,) kv-head index of segment
+    seg_len: np.ndarray       # (S,) context length
+
+    @property
+    def grid_iters(self) -> int:
+        return self.num_workers * self.tiles_per_worker
+
+    def max_pieces_per_worker(self) -> int:
+        counts = np.zeros(self.num_workers, dtype=np.int64)
+        T = self.tiles_per_worker
+        for g in range(self.num_workers):
+            sl = self.iter_piece[g * T : (g + 1) * T]
+            sl = sl[self.iter_valid[g * T : (g + 1) * T] == 1]
+            counts[g] = len(np.unique(sl))
+        return int(counts.max(initial=0))
+
+
+def make_schedule(
+    ctx_lens: Sequence[int],
+    num_kv_heads: int,
+    tile_size: int,
+    num_workers: int,
+) -> LeanSchedule:
+    """Build the LeanAttention stream-K schedule.
+
+    Args:
+      ctx_lens: context length per batch element (ragged OK, paper Fig. 6).
+      num_kv_heads: KV heads per element; q-head GQA groups ride along.
+      tile_size: LeanTile granularity in KV tokens.
+      num_workers: G — grid size (TPU: cores x pipeline factor; mesh: devices).
+    """
+    ctx_lens = np.asarray(list(ctx_lens), dtype=np.int64)
+    if np.any(ctx_lens <= 0):
+        raise ValueError("context lengths must be positive")
+    B, H = len(ctx_lens), int(num_kv_heads)
+    S = B * H
+    # tiles per segment; segments ordered batch-major (b * H + h)
+    tiles_per_batch = (ctx_lens + tile_size - 1) // tile_size
+    seg_tiles = np.repeat(tiles_per_batch, H)           # (S,)
+    seg_len = np.repeat(ctx_lens, H)                    # (S,)
+    seg_batch = np.repeat(np.arange(B, dtype=np.int64), H)
+    seg_head = np.tile(np.arange(H, dtype=np.int64), B)
+
+    total = int(seg_tiles.sum())
+    G = int(num_workers)
+    T = max(1, -(-total // G))                          # ceil
+    padded = G * T
+
+    seg_off = np.zeros(S + 1, dtype=np.int64)
+    np.cumsum(seg_tiles, out=seg_off[1:])
+
+    # flat iter -> (segment, tile-within-segment)
+    flat = np.arange(padded, dtype=np.int64)
+    valid = (flat < total).astype(np.int32)
+    seg_of = np.searchsorted(seg_off, np.minimum(flat, total - 1), side="right") - 1
+    tile_of = np.minimum(flat, total - 1) - seg_off[seg_of]
+
+    # pieces: a new piece starts when (a) iter 0 of a worker, or (b) the
+    # segment changes from the previous iter — restricted to valid iters.
+    worker_of = flat // T
+    new_piece = np.zeros(padded, dtype=bool)
+    v = valid.astype(bool)
+    new_piece[v] = True
+    idx = np.flatnonzero(v)
+    if len(idx) > 1:
+        prev = idx[:-1]
+        cur = idx[1:]
+        same_worker = worker_of[cur] == worker_of[prev]
+        same_seg = seg_of[cur] == seg_of[prev]
+        contiguous = cur == prev + 1
+        new_piece[cur] = ~(same_worker & same_seg & contiguous)
+        new_piece[idx[0]] = True
+    piece_of = np.cumsum(new_piece) - 1                 # valid iters: 0..P-1
+    P = int(piece_of[v].max(initial=-1)) + 1 if v.any() else 0
+    piece_of = np.where(v, piece_of, P)                 # padding -> garbage
+
+    is_first = np.where(v, new_piece, 0).astype(np.int32)
+    is_last = np.zeros(padded, dtype=np.int32)
+    if len(idx):
+        # a valid iter is last-of-piece if the next valid-in-same-worker iter
+        # starts a new piece, or it is the worker's final valid iter.
+        nxt = np.roll(new_piece, -1)
+        nxt[-1] = True
+        boundary = (np.arange(padded) % T) == (T - 1)
+        is_last[v] = (nxt[v] | boundary[v]).astype(np.int32)
+        # also: the very last valid iter overall
+        is_last[idx[-1]] = 1
+
+    # tile token counts (last tile of a segment may be short)
+    tlen = np.where(
+        v,
+        np.minimum(seg_len[seg_of] - tile_of * tile_size, tile_size),
+        0,
+    )
+
+    piece_seg = np.full(P, -1, dtype=np.int64)
+    piece_seg[piece_of[v]] = seg_of[v]
+    # host piece = piece containing tile 0 of its segment
+    piece_host = np.zeros(P, dtype=np.int32)
+    first_tile_mask = v & (tile_of == 0)
+    piece_host[piece_of[first_tile_mask]] = 1
+
+    i32 = lambda a: np.ascontiguousarray(a, dtype=np.int32)
+    return LeanSchedule(
+        tile_size=tile_size,
+        num_workers=G,
+        tiles_per_worker=T,
+        total_tiles=total,
+        num_segments=S,
+        num_pieces=P,
+        iter_seg=i32(np.where(v, seg_of, S)),
+        iter_tile=i32(tile_of),
+        iter_piece=i32(piece_of),
+        iter_first=i32(is_first),
+        iter_last=i32(is_last),
+        iter_len=i32(tlen),
+        iter_valid=i32(valid),
+        piece_seg=i32(piece_seg),
+        piece_host=i32(piece_host),
+        seg_batch=i32(seg_batch),
+        seg_head=i32(seg_head),
+        seg_len=i32(seg_len),
+    )
+
+
+def fixed_split_factor(
+    ctx_len: int, num_segments: int, tile_size: int, num_workers: int
+) -> int:
+    """FlashDecoding's heuristic: pick the smallest split factor s such that
+    ``num_segments * s`` covers the workers, capped by tiles available.
+    (Used by the fixed-split baseline and the occupancy model.)"""
+    tiles = -(-ctx_len // tile_size)
+    s = 1
+    while num_segments * s < num_workers and s < tiles:
+        s += 1
+    return min(s, tiles)

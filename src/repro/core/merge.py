@@ -1,0 +1,149 @@
+"""Softmax re-scaling as an associative reduction operator (paper §IV-A).
+
+A *partial attention triple* ``(o, m, l)`` summarises exact attention over an
+arbitrary contiguous chunk of KV positions:
+
+    s   = q @ k_chunk.T / sqrt(d)          (scores for the chunk)
+    m   = rowmax(s)
+    l   = rowsum(exp(s - m))
+    o   = exp(s - m) @ v_chunk             ("un-scaled" output)
+
+The paper proves that the FlashAttention re-scaling correction
+
+    m'  = max(m_x, m_y)
+    l'  = exp(m_x - m') l_x + exp(m_y - m') l_y
+    o'  = exp(m_x - m') o_x + exp(m_y - m') o_y
+
+is *associative*, so partial triples over *unequal-length* chunks can be
+reduced in any grouping and still yield exact attention:
+
+    attn = o_total / l_total
+
+Everything in this module is pure jnp and jit/vmap/shard_map friendly.
+Shapes: ``o: (..., d)``, ``m: (...)``, ``l: (...)`` with matching leading
+dims (typically ``(rows,)`` or ``(heads, rows)``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AttnPartial(NamedTuple):
+    """Un-scaled partial attention output plus softmax statistics."""
+
+    o: jax.Array  # (..., d)   un-scaled output
+    m: jax.Array  # (...)      running row max
+    l: jax.Array  # (...)      running exp-sum
+
+    @property
+    def dtype(self):
+        return self.o.dtype
+
+
+# Identity element: m = -inf, l = 0, o = 0.  merge(identity, x) == x.
+def identity_like(o_shape, dtype=jnp.float32) -> AttnPartial:
+    stat_shape = o_shape[:-1]
+    return AttnPartial(
+        o=jnp.zeros(o_shape, dtype),
+        m=jnp.full(stat_shape, -jnp.inf, dtype),
+        l=jnp.zeros(stat_shape, dtype),
+    )
+
+
+def merge(x: AttnPartial, y: AttnPartial) -> AttnPartial:
+    """The paper's softmax re-scaling operator f(x, y). Associative & exact.
+
+    Safe under the identity element (-inf maxes) — uses a guarded exp so that
+    merging two identities does not produce NaN from ``exp(-inf - -inf)``.
+    """
+    m_new = jnp.maximum(x.m, y.m)
+    # Guard: where m_new is -inf (both inputs empty), scale factors are 0.
+    safe_m = jnp.where(jnp.isinf(m_new) & (m_new < 0), 0.0, m_new)
+    ax = jnp.where(jnp.isinf(x.m) & (x.m < 0), 0.0, jnp.exp(x.m - safe_m))
+    ay = jnp.where(jnp.isinf(y.m) & (y.m < 0), 0.0, jnp.exp(y.m - safe_m))
+    l_new = ax * x.l + ay * y.l
+    o_new = ax[..., None] * x.o + ay[..., None] * y.o
+    return AttnPartial(o=o_new, m=m_new, l=l_new)
+
+
+def finalize(p: AttnPartial, eps: float = 0.0) -> jax.Array:
+    """Turn a fully-reduced partial into the exact attention output o / l."""
+    denom = p.l if eps == 0.0 else p.l + eps
+    return p.o / denom[..., None]
+
+
+def merge_n(partials: AttnPartial) -> AttnPartial:
+    """Reduce a stacked AttnPartial (leading axis = chunks) with one pass.
+
+    Equivalent to folding ``merge`` over axis 0 but vectorized:
+    m* = max_i m_i ; l* = sum_i e^{m_i - m*} l_i ; o* = sum_i e^{m_i - m*} o_i.
+    This *is* the associative reduction evaluated in one shot — exactness
+    follows from the paper's Theorem (§IV-A).
+    """
+    m_star = jnp.max(partials.m, axis=0)
+    safe_m = jnp.where(jnp.isinf(m_star) & (m_star < 0), 0.0, m_star)
+    scale = jnp.where(
+        jnp.isinf(partials.m) & (partials.m < 0),
+        0.0,
+        jnp.exp(partials.m - safe_m),
+    )
+    l_star = jnp.sum(scale * partials.l, axis=0)
+    o_star = jnp.sum(scale[..., None] * partials.o, axis=0)
+    return AttnPartial(o=o_star, m=m_star, l=l_star)
+
+
+def tree_merge(partials: AttnPartial) -> AttnPartial:
+    """Binary-tree reduction using ``merge`` (log-depth). Used by the
+    distributed path where each level is one collective-permute hop."""
+    n = partials.o.shape[0]
+    p = partials
+    while n > 1:
+        half = n // 2
+        lo = jax.tree.map(lambda a: a[:half], p)
+        hi = jax.tree.map(lambda a: a[half : 2 * half], p)
+        merged = merge(lo, hi)
+        if n % 2:
+            tail = jax.tree.map(lambda a: a[2 * half : n], p)
+            merged = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), merged, tail
+            )
+        p = merged
+        n = (n + 1) // 2
+    return jax.tree.map(lambda a: a[0], p)
+
+
+def segment_merge(
+    partials: AttnPartial, segment_ids: jax.Array, num_segments: int
+) -> AttnPartial:
+    """Merge P partial triples into S segments (decode "fix-up" phase).
+
+    ``partials`` leading axis is P pieces; ``segment_ids: (P,) int32`` maps
+    each piece to its output tile. Pieces with ``segment_id >= num_segments``
+    (padding) are dropped. This is LeanAttention's reduction phase expressed
+    as XLA segment ops — exact, fully parallel, no atomics needed on TPU.
+    """
+    m_seg = jax.ops.segment_max(
+        partials.m, segment_ids, num_segments=num_segments
+    )  # (S, ...) ; empty segments get -inf
+    m_per_piece = m_seg[segment_ids]
+    safe = jnp.where(jnp.isinf(m_per_piece) & (m_per_piece < 0), 0.0, m_per_piece)
+    scale = jnp.where(
+        jnp.isinf(partials.m) & (partials.m < 0),
+        0.0,
+        jnp.exp(partials.m - safe),
+    )
+    l_seg = jax.ops.segment_sum(
+        scale * partials.l, segment_ids, num_segments=num_segments
+    )
+    o_seg = jax.ops.segment_sum(
+        scale[..., None] * partials.o, segment_ids, num_segments=num_segments
+    )
+    return AttnPartial(o=o_seg, m=m_seg, l=l_seg)
+
+
+def logsumexp(p: AttnPartial) -> jax.Array:
+    """L = m + log(l) — the statistic FlashAttention stores for backward."""
+    return p.m + jnp.log(p.l)

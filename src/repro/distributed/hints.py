@@ -1,0 +1,94 @@
+"""Activation sharding hints.
+
+Model code is mesh-agnostic; the launcher installs a mesh here and the model
+drops `hint(x, 'dp', None, 'model')` constraints at activation boundaries
+(scan bodies, big intermediates). Without an installed mesh the calls are
+no-ops, so smoke tests and single-device runs are untouched.
+
+Axis vocabulary: 'dp' -> ('pod','data') when the mesh has a pod axis else
+('data',); 'data'/'model' -> themselves; None -> replicated. Dims that do
+not divide their axis product are silently replicated (e.g. 8 kv-heads on a
+16-way model axis).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def set_activation_mesh(mesh: Optional[Mesh], dp=None):
+    """Install mesh + the axes 'dp' hints map to. ``dp=None`` -> the default
+    (pod, data). Pure-DP layouts (small models) pass
+    dp=('pod','data','model'); 'model' hints then become no-ops."""
+    _state.mesh = mesh
+    _state.dp = dp
+
+
+def get_activation_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def get_dp_axes(mesh: Mesh):
+    dp = getattr(_state, "dp", None)
+    if dp is None:
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return tuple(a for a in dp if a in mesh.axis_names)
+
+
+@contextmanager
+def activation_mesh(mesh: Optional[Mesh], dp=None):
+    prev = (get_activation_mesh(), getattr(_state, "dp", None))
+    set_activation_mesh(mesh, dp)
+    try:
+        yield
+    finally:
+        set_activation_mesh(*prev)
+
+
+def _dp_candidates(mesh: Mesh):
+    """Axis combos for 'dp' hints, largest first, mirroring best_dp_spec."""
+    dp = get_dp_axes(mesh)
+    cands = [dp]
+    if "model" in dp:
+        cands.append(tuple(a for a in dp if a != "model"))
+    if cands[-1] != ("data",) and "data" in mesh.axis_names:
+        cands.append(("data",))
+    return [c for c in cands if c]
+
+
+def _resolve(axis, mesh: Mesh, dim: int):
+    if axis is None:
+        return None
+    if axis == "dp":
+        for names in _dp_candidates(mesh):
+            size = int(np.prod([mesh.shape[a] for a in names]))
+            if size > 1 and dim % size == 0 and dim >= size:
+                return names if len(names) > 1 else names[0]
+        return None
+    if axis in get_dp_axes(mesh):   # consumed by DP (pure-DP layout)
+        return None
+    if axis in mesh.axis_names:
+        size = mesh.shape[axis]
+        if size > 1 and dim % size == 0 and dim >= size:
+            return axis
+    return None
+
+
+def hint(x, *axes):
+    """with_sharding_constraint when a mesh is installed; else identity."""
+    mesh = get_activation_mesh()
+    if mesh is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"hint rank mismatch: {axes} vs {x.shape}")
+    spec = [_resolve(ax, mesh, dim) for dim, ax in zip(x.shape, axes)]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec))
+    )

@@ -1,0 +1,284 @@
+"""Parameter / activation / cache sharding policy (FSDP x TP x EP x SP).
+
+Mesh axes:
+  pod    (multi-pod only) — pure data parallel across pods; gradients cross
+         the DCN once per step. Params are replicated across pods.
+  data   — batch DP + FSDP: every param's non-TP large dim is sharded here,
+         so optimizer state is fully sharded (ZeRO-1/3 hybrid via XLA
+         all-gather-at-use / reduce-scatter-grads).
+  model  — tensor parallel: heads / d_ff / vocab / experts.
+
+Rules are name-keyed with a size-aware generic fallback; dims that do not
+divide their axis are replicated (e.g. kv-heads < 16 stay replicated, the
+standard MQA treatment).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import ModelConfig
+
+
+def choose_layout(cfg: ModelConfig) -> str:
+    """'2d' = FSDP(data) x TP(model); 'dp_only' = batch over every axis
+    (small models that cannot profitably tensor-parallelize — the model
+    axis would idle or add pure overhead)."""
+    from repro.models import count_params
+
+    return "dp_only" if count_params(cfg) < 2_000_000_000 else "2d"
+
+
+def dp_axes(mesh: Mesh, layout: str = "2d"):
+    base = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if layout == "dp_only":
+        base = base + ("model",)
+    return base
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and n % mesh.shape[axis] == 0 and n >= mesh.shape[axis]
+
+
+def best_dp_spec(dim: int, mesh: Mesh, layout: str = "2d"):
+    """Largest axis combination that divides a batch-like dim."""
+    cands = []
+    full = dp_axes(mesh, layout)
+    cands.append(full)
+    if "model" in full:
+        cands.append(tuple(a for a in full if a != "model"))
+    if len(cands[-1]) > 1:
+        cands.append(("data",))
+    import numpy as _np
+
+    for c in cands:
+        size = int(_np.prod([mesh.shape[a] for a in c]))
+        if dim % size == 0 and dim >= size:
+            return c if len(c) > 1 else c[0]
+    return None
+
+
+def _leaf_spec(path: str, shape, mesh: Mesh, cfg: ModelConfig,
+               layout: str = "2d") -> P:
+    """PartitionSpec for one parameter leaf. ``path`` is '/'-joined keys;
+    stacked per-unit leaves carry a leading `reps` dim handled by caller."""
+    d = len(shape)
+
+    if layout == "dp_only":
+        # pure-DP: no TP. FSDP over 'data' ONLY: sharding weights across the
+        # model axis makes XLA emit output-dim-sharded partial matmuls and
+        # re-gather ACTIVATIONS (measured 3.5 GiB/layer on xlstm prefill);
+        # data-only FSDP gathers the (small) weights instead.
+        spec = [None] * d
+        if d >= 2:
+            order = sorted(range(d), key=lambda i: -shape[i])
+            i = order[0]
+            if _div(shape[i], mesh, "data"):
+                spec[i] = "data"
+        return P(*spec)
+
+    def last_model_rest_data(*, model_dim=-1, data_dim=None):
+        spec = [None] * d
+        md = model_dim % d
+        if _div(shape[md], mesh, "model"):
+            spec[md] = "model"
+        if data_dim is None:
+            # largest remaining dim
+            cands = [i for i in range(d) if i != md]
+            cands.sort(key=lambda i: -shape[i])
+            dd = cands[0] if cands else None
+        else:
+            dd = data_dim % d
+        if dd is not None and _div(shape[dd], mesh, "data"):
+            spec[dd] = "data"
+        return P(*spec)
+
+    if re.search(r"(^|/)embed$", path):
+        return P("model", "data")      # vocab -> model, d_model -> data
+    if re.search(r"(^|/)unembed$", path):
+        return P("data", "model")
+    if re.search(r"/(ln1|ln2|ln_x|ln_inner|q_norm|k_norm|final_norm|lam|b_if|b|xgate)$", path):
+        return P(*([None] * d))
+    if re.search(r"/moe/(wg|wu)$", path):           # (E, D, F)
+        if _div(shape[0], mesh, "model"):           # EP
+            return P("model", "data", None)
+        return P(None, "data", "model")             # expert-TP
+    if re.search(r"/moe/wd$", path):                # (E, F, D)
+        if _div(shape[0], mesh, "model"):
+            return P("model", None, "data")
+        return P(None, "model", "data")
+    if re.search(r"/moe/router$", path):
+        return P("data", None)
+    if re.search(r"/(wo|wd|w_out|w_down)$", path):  # row-parallel (down)
+        return last_model_rest_data(model_dim=-2, data_dim=-1)
+    if d >= 2:
+        return last_model_rest_data()               # col-parallel (up) default
+    return P(*([None] * d))
+
+
+def param_specs(params: Any, mesh: Mesh, cfg: ModelConfig,
+                layout: str = "2d", mode: str = "train"):
+    """Pytree of PartitionSpec matching ``params``. Stacked stage leaves
+    (leading reps dim) get a leading None.
+
+    mode='train': FSDP over 'data' + TP over 'model' (ZeRO-style).
+    mode='serve': TP over 'model' only — params replicate across 'data'
+    (re-gathering FSDP shards every decode step would swamp the ICI)."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    paths = {}
+
+    def path_str(kp):
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+        return "/".join(parts)
+
+    def strip_data(spec: P) -> P:
+        def fix(ax):
+            if ax == "data":
+                return None
+            if isinstance(ax, tuple):
+                kept = tuple(a for a in ax if a != "data")
+                return kept if len(kept) > 1 else (kept[0] if kept else None)
+            return ax
+
+        return P(*(fix(a) for a in spec))
+
+    def spec_for(kp, leaf):
+        p = path_str(kp)
+        shape = leaf.shape
+        stacked = p.startswith("stages/")
+        if stacked:
+            base = _leaf_spec(p, shape[1:], mesh, cfg, layout)
+            out = P(None, *base)
+        else:
+            out = _leaf_spec(p, shape, mesh, cfg, layout)
+        return strip_data(out) if mode == "serve" else out
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def decode_plan(cfg: ModelConfig, mesh: Mesh, batch: int, layout: str):
+    """How decode attention parallelizes for this (arch, batch, mesh):
+
+      heads    — kv heads shard over 'model', batch over dp (classic TP)
+      seq_model— kv heads don't divide 'model': KV sequence shards over
+                 'model' and partials merge with the lean operator
+      seq_all  — batch too small for 'data': KV sequence shards over
+                 ('data','model') — full-mesh sequence-parallel decode
+                 (the paper's multi-GPU regime)
+    """
+    model = mesh.shape.get("model", 1)
+    bdp = best_dp_spec(batch, mesh, layout)
+    kv_ok = (
+        layout != "dp_only"
+        and cfg.n_kv_heads % model == 0
+        and cfg.n_heads % model == 0
+    )
+    if bdp is not None and kv_ok:
+        return {"mode": "heads", "seq_axes": None, "batch_spec": bdp}
+    if bdp is not None:
+        return {"mode": "seq_model", "seq_axes": ("model",),
+                "batch_spec": bdp}
+    return {"mode": "seq_all", "seq_axes": ("data", "model"),
+            "batch_spec": None}
+
+
+def cache_specs(cache: Any, mesh: Mesh, batch: int, layout: str = "2d",
+                plan=None, cache_len: int = 0):
+    """Decode-cache specs, consistent with ``decode_plan``: full-length KV
+    caches (S == cache_len) take the plan's sequence sharding; bounded
+    window caches stay local."""
+    n_data = mesh.shape["data"]
+    bdp = best_dp_spec(batch, mesh, layout)
+    use_model = layout != "dp_only" and not (
+        isinstance(bdp, tuple) and "model" in bdp
+    ) and bdp != "model"
+    seq_axes = plan["seq_axes"] if plan else None
+
+    def seq_spec_for(S):
+        if seq_axes is None or S != cache_len or S <= 1:
+            return None
+        import numpy as _np
+
+        n = int(_np.prod([mesh.shape[a] for a in seq_axes]))
+        if S % n:
+            return None
+        return seq_axes if len(seq_axes) > 1 else seq_axes[0]
+
+    def spec_for(kp, leaf):
+        shape = leaf.shape  # leading reps dim from stacking
+        name = str(kp[-1].key) if hasattr(kp[-1], "key") else ""
+        d = len(shape)
+        spec = [None] * d
+        if name in ("k", "v", "xk", "xv"):
+            # (reps, B, Hkv, S, hd)
+            if bdp is not None:
+                spec[1] = bdp
+            if name in ("k", "v"):
+                spec[3] = seq_spec_for(shape[3])
+            if (
+                spec[3] is None
+                and use_model
+                and plan is not None
+                and plan["mode"] == "heads"
+                and _div(shape[2], mesh, "model")
+            ):
+                spec[2] = "model"
+        elif name in ("C",):                        # (reps, B, H, hd, hd)
+            if bdp is not None:
+                spec[1] = bdp
+            if use_model:
+                if _div(shape[2], mesh, "model"):
+                    spec[2] = "model"
+                elif _div(shape[3], mesh, "model"):
+                    spec[3] = "model"
+        elif name in ("n", "h", "c", "m"):
+            if bdp is not None:
+                spec[1] = bdp
+            if use_model and d >= 3 and _div(shape[-1], mesh, "model"):
+                spec[-1] = "model"
+        elif name == "conv":                        # (reps, B, 3, W)
+            if bdp is not None:
+                spec[1] = bdp
+            if use_model and _div(shape[-1], mesh, "model"):
+                spec[-1] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def batch_specs(mesh: Mesh, batch: int, has_img: bool = False,
+                layout: str = "2d"):
+    bspec = best_dp_spec(batch, mesh, layout)
+    out = {"tokens": P(bspec, None)}
+    if has_img:
+        out["img_emb"] = P(bspec, None, None)
+    return out
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def with_sharding(sds_tree, spec_tree, mesh: Mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct pytree (for .lower())."""
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)
+        ),
+        sds_tree,
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
+    )

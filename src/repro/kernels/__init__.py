@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: decode attention.
+
+lean_decode  — stream-K LeanAttention decode (the paper's contribution)
+flash_decode — fixed-split FlashDecoding baseline
+flash_prefill — FlashAttention-2 prefill (causal + sliding window, GQA)
+ops.py jit'd wrappers; ref.py pure-jnp oracles.
+Validated on CPU via interpret=True; TPU is the compile target.
+"""
+from .ops import lean_decode, flash_decode, flash_prefill, default_num_workers

@@ -1,0 +1,304 @@
+"""LeanAttention decode kernel — Pallas/TPU stream-K implementation.
+
+TPU adaptation of paper Algorithms 1+2. The grid is ``(G, T)``:
+
+  * axis 0 (``G`` workers) is declared *parallel* — on hardware these are the
+    units the Megacore/multi-chip runtime may distribute; every worker gets
+    exactly ``T = ceil(total_tiles / G)`` LeanTile iterations (the stream-K
+    equalized load, paper Eq. 2);
+  * axis 1 (``T`` iterations per worker) is *arbitrary* (sequential): the
+    online-softmax accumulation of Algorithm 1 runs in VMEM scratch across
+    these steps, crossing (batch, head) segment boundaries as the schedule
+    dictates.
+
+Scalar-prefetch descriptors (built host-side by
+:func:`repro.core.leantile.make_schedule`) drive the K/V BlockSpec index maps
+— this is how a worker's iteration stream walks arbitrary tiles of arbitrary
+segments with zero dynamic control flow on the data path.
+
+Where the CUDA version uses a spin-lock "host block" fix-up inside one kernel
+(GPU CTAs are co-resident; TPU grid steps are not), we emit each piece's
+un-scaled partial ``(o, m, l)`` to HBM and reduce per segment in a second,
+cheap phase (see ``ops.lean_decode``): the associative softmax re-scaling
+merge of §IV-A, either as XLA segment ops or the Pallas ``lean_merge`` kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.leantile import LeanSchedule
+
+NEG_INF = -1e30
+
+# descriptor row layout in the packed (7, G*T) scalar-prefetch array
+DESC_SEG, DESC_TILE, DESC_PIECE, DESC_FIRST, DESC_LAST, DESC_LEN, DESC_VALID = range(7)
+
+
+def pack_descriptors(sched: LeanSchedule) -> np.ndarray:
+    """Pack schedule descriptor arrays into one (7, G*T) int32 array."""
+    return np.stack(
+        [
+            sched.iter_seg,
+            sched.iter_tile,
+            sched.iter_piece,
+            sched.iter_first,
+            sched.iter_last,
+            sched.iter_len,
+            sched.iter_valid,
+        ]
+    ).astype(np.int32)
+
+
+def _lean_decode_kernel(
+    desc_ref,      # (7, I) scalar-prefetch descriptors
+    q_ref,         # (1, gq, d)     current segment's query group
+    k_ref,         # (1, tile, d)   current LeanTile of K
+    v_ref,         # (1, tile, d)   current LeanTile of V
+    o_ref,         # (1, gq, d)     partial un-scaled output (piece slot)
+    m_ref,         # (1, gq)        partial row-max
+    l_ref,         # (1, gq)        partial exp-sum
+    acc_ref,       # VMEM (gq, d) f32
+    m_acc_ref,     # VMEM (gq, 1) f32
+    l_acc_ref,     # VMEM (gq, 1) f32
+    *,
+    scale: float,
+    tiles_per_worker: int,
+):
+    g = pl.program_id(0)
+    t = pl.program_id(1)
+    i = g * tiles_per_worker + t
+
+    first = desc_ref[DESC_FIRST, i]
+    last = desc_ref[DESC_LAST, i]
+    vlen = desc_ref[DESC_LEN, i]
+    valid = desc_ref[DESC_VALID, i]
+
+    @pl.when(valid == 1)
+    def _work():
+        @pl.when(first == 1)
+        def _reset():  # Algorithm 1 lines 8-9
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            m_acc_ref[...] = jnp.full_like(m_acc_ref, NEG_INF)
+            l_acc_ref[...] = jnp.zeros_like(l_acc_ref)
+
+        q = q_ref[0].astype(jnp.float32)                       # (gq, d)
+        k = k_ref[0].astype(jnp.float32)                       # (tile, d)
+        v = v_ref[0].astype(jnp.float32)
+
+        # Algorithm 1 lines 20-25 (one LeanTile iteration)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                              # (gq, tile)
+        pos = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < vlen, s, NEG_INF)
+
+        m_prev = m_acc_ref[...]                                # (gq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(pos < vlen, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_acc_ref[...] = alpha * l_acc_ref[...] + jnp.sum(
+            p, axis=1, keepdims=True
+        )
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_acc_ref[...] = m_new
+
+        @pl.when(last == 1)
+        def _flush():  # StorePartials (Algorithm 2 lines 20-22)
+            o_ref[0] = acc_ref[...]
+            m_ref[0] = m_acc_ref[..., 0]
+            l_ref[0] = l_acc_ref[..., 0]
+
+
+def lean_decode_partials(
+    q_seg: jax.Array,          # (S_seg, gq, d)
+    k_seg: jax.Array,          # (S_seg, S_pad, d), S_pad % tile == 0
+    v_seg: jax.Array,
+    sched: LeanSchedule,
+    scale: float,
+    interpret: bool = False,
+):
+    """Phase 1: run the stream-K grid, return per-piece partials.
+
+    Returns (o, m, l) with leading dim ``num_pieces`` (garbage row sliced
+    off), f32.
+    """
+    S_seg, gq, d = q_seg.shape
+    tile = sched.tile_size
+    G, T = sched.num_workers, sched.tiles_per_worker
+    P = sched.num_pieces
+    desc = jnp.asarray(pack_descriptors(sched))
+    I = G * T
+
+    def q_map(g, t, desc):
+        i = g * T + t
+        # padded iters clamp to segment 0 (they do no work)
+        return (jnp.where(desc[DESC_VALID, i] == 1, desc[DESC_SEG, i], 0), 0, 0)
+
+    def kv_map(g, t, desc):
+        i = g * T + t
+        ok = desc[DESC_VALID, i] == 1
+        return (
+            jnp.where(ok, desc[DESC_SEG, i], 0),
+            jnp.where(ok, desc[DESC_TILE, i], 0),
+            0,
+        )
+
+    def out_map(g, t, desc):
+        return (desc[DESC_PIECE, g * T + t], 0, 0)
+
+    def stat_map(g, t, desc):
+        return (desc[DESC_PIECE, g * T + t], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(G, T),
+        in_specs=[
+            pl.BlockSpec((1, gq, d), q_map),
+            pl.BlockSpec((1, tile, d), kv_map),
+            pl.BlockSpec((1, tile, d), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, gq, d), out_map),
+            pl.BlockSpec((1, gq), stat_map),
+            pl.BlockSpec((1, gq), stat_map),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((gq, d), jnp.float32),
+            pltpu.VMEM((gq, 1), jnp.float32),
+            pltpu.VMEM((gq, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _lean_decode_kernel, scale=scale, tiles_per_worker=T
+    )
+    out_shapes = [
+        jax.ShapeDtypeStruct((P + 1, gq, d), jnp.float32),
+        jax.ShapeDtypeStruct((P + 1, gq), jnp.float32),
+        jax.ShapeDtypeStruct((P + 1, gq), jnp.float32),
+    ]
+    o_p, m_p, l_p = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(desc, q_seg, k_seg, v_seg)
+    return o_p[:P], m_p[:P], l_p[:P]
+
+
+def _lean_merge_kernel(
+    meta_ref,      # (2, S) scalar prefetch: piece start / piece count
+    o_p_ref,       # (1, gq, d)  one piece's partial o (revisited per j)
+    m_p_ref,       # (1, gq)
+    l_p_ref,       # (1, gq)
+    o_ref,         # (1, gq, d)  final output for this segment
+    l_out_ref,     # (1, gq)     logsumexp (for paged/backward use)
+    acc_ref,       # VMEM (gq, d) f32
+    m_acc_ref,     # VMEM (gq, 1)
+    l_acc_ref,     # VMEM (gq, 1)
+):
+    s = pl.program_id(0)
+    j = pl.program_id(1)
+    cnt = meta_ref[1, s]
+
+    @pl.when(j == 0)
+    def _reset():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_acc_ref[...] = jnp.full_like(m_acc_ref, NEG_INF)
+        l_acc_ref[...] = jnp.zeros_like(l_acc_ref)
+
+    @pl.when(j < cnt)
+    def _merge():  # Algorithm 2 lines 29-35: softmax re-scaling reduction
+        m_piece = m_p_ref[0][:, None]
+        m_new = jnp.maximum(m_acc_ref[...], m_piece)
+        a_old = jnp.exp(m_acc_ref[...] - m_new)
+        a_new = jnp.exp(m_piece - m_new)
+        l_acc_ref[...] = a_old * l_acc_ref[...] + a_new * l_p_ref[0][:, None]
+        acc_ref[...] = a_old * acc_ref[...] + a_new * o_p_ref[0].astype(
+            jnp.float32
+        )
+        m_acc_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _final():  # Algorithm 2 lines 38-39
+        o_ref[0] = acc_ref[...] / l_acc_ref[...]
+        l_out_ref[0] = (m_acc_ref[...] + jnp.log(l_acc_ref[...]))[:, 0]
+
+
+def lean_merge_pallas(
+    o_p: jax.Array,      # (P, gq, d) f32 partials
+    m_p: jax.Array,      # (P, gq)
+    l_p: jax.Array,      # (P, gq)
+    sched: LeanSchedule,
+    interpret: bool = False,
+):
+    """Phase 2 as a Pallas kernel: per-segment reduction of pieces.
+
+    Pieces are contiguous per segment (schedule invariant), so segment s owns
+    piece rows [start[s], start[s]+cnt[s]). Grid (S, Pmax) revisits the
+    output block while walking piece rows via scalar-prefetched offsets.
+    """
+    P, gq, d = o_p.shape
+    S = sched.num_segments
+    starts = np.searchsorted(sched.piece_seg, np.arange(S)).astype(np.int32)
+    ends = np.searchsorted(
+        sched.piece_seg, np.arange(S), side="right"
+    ).astype(np.int32)
+    cnts = ends - starts
+    pmax = max(1, int(cnts.max(initial=1)))
+    meta = jnp.asarray(np.stack([starts, cnts]).astype(np.int32))
+
+    def piece_map(s, j, meta):
+        row = meta[0, s] + jnp.minimum(j, meta[1, s] - 1)
+        return (jnp.clip(row, 0, P - 1), 0, 0)
+
+    def piece_stat_map(s, j, meta):
+        row = meta[0, s] + jnp.minimum(j, meta[1, s] - 1)
+        return (jnp.clip(row, 0, P - 1), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(S, pmax),
+        in_specs=[
+            pl.BlockSpec((1, gq, d), piece_map),
+            pl.BlockSpec((1, gq), piece_stat_map),
+            pl.BlockSpec((1, gq), piece_stat_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, gq, d), lambda s, j, meta: (s, 0, 0)),
+            pl.BlockSpec((1, gq), lambda s, j, meta: (s, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((gq, d), jnp.float32),
+            pltpu.VMEM((gq, 1), jnp.float32),
+            pltpu.VMEM((gq, 1), jnp.float32),
+        ],
+    )
+    out_shapes = [
+        jax.ShapeDtypeStruct((S, gq, d), jnp.float32),
+        jax.ShapeDtypeStruct((S, gq), jnp.float32),
+    ]
+    o, lse = pl.pallas_call(
+        _lean_merge_kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(meta, o_p, m_p, l_p)
+    return o, lse

@@ -1,0 +1,161 @@
+"""Public jit'd entry points for the attention kernels.
+
+``lean_decode`` is the paper's mechanism end-to-end: host-side stream-K
+schedule -> Pallas partial kernel -> associative merge (XLA segment ops by
+default; ``merge_impl='pallas'`` runs the Pallas reduction kernel instead).
+
+Context lengths are *host* values (python ints / numpy) because the schedule
+is built on the host — exactly as in the paper, where the CPU launcher picks
+the grid before kernel launch. The serving engine knows concrete lengths
+every step, so this is the natural contract.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.leantile import LeanSchedule, make_schedule, default_tile_size
+from repro.core.merge import AttnPartial, finalize, merge_n, segment_merge
+from .lean_decode import lean_decode_partials, lean_merge_pallas
+from .flash_decode import flash_decode_partials
+from .flash_prefill import flash_prefill  # re-export
+
+__all__ = [
+    "lean_decode",
+    "flash_decode",
+    "flash_prefill",
+    "default_num_workers",
+]
+
+
+def default_num_workers(n_cores: int = 8, pipeline_factor: int = 2) -> int:
+    """TPU analogue of paper's grid = NumSMs x MaxCTAsPerSM (Eq. 2).
+
+    ``n_cores``: TensorCores the kernel is distributed over (Megacore=2 per
+    chip; more when the op is sharded). ``pipeline_factor``: extra workers
+    per core so DMA/compute phases interleave.
+    """
+    return n_cores * pipeline_factor
+
+
+def _to_segments(q, k, v):
+    """(B,Hq,d),(B,Hkv,S,d) -> segment-major views (paper's constant-stride
+    (batch, heads, ctx, head_dim) layout, §IV-C)."""
+    B, Hq, d = q.shape
+    _, Hkv, S, _ = k.shape
+    g = Hq // Hkv
+    q_seg = q.reshape(B * Hkv, g, d)
+    k_seg = k.reshape(B * Hkv, S, d)
+    v_seg = v.reshape(B * Hkv, S, d)
+    return q_seg, k_seg, v_seg, g
+
+
+def _pad_kv(k_seg, v_seg, tile):
+    S = k_seg.shape[1]
+    pad = (-S) % tile
+    if pad:
+        k_seg = jnp.pad(k_seg, ((0, 0), (0, pad), (0, 0)))
+        v_seg = jnp.pad(v_seg, ((0, 0), (0, pad), (0, 0)))
+    return k_seg, v_seg
+
+
+def lean_decode(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    ctx_lens: Optional[Sequence[int]] = None,
+    *,
+    num_workers: Optional[int] = None,
+    tile: Optional[int] = None,
+    scale: Optional[float] = None,
+    merge_impl: str = "xla",
+    interpret: bool = False,
+    return_lse: bool = False,
+):
+    """LeanAttention decode: exact attention, stream-K partitioned.
+
+    q: (B, Hq, d); k, v: (B, Hkv, S, d); ctx_lens: host ints per batch row.
+    """
+    B, Hq, d = q.shape
+    _, Hkv, S, _ = k.shape
+    if ctx_lens is None:
+        ctx_lens = [S] * B
+    ctx_lens = [int(c) for c in ctx_lens]
+    tile = tile or default_tile_size(d)
+    tile = min(tile, max(8, S))
+    num_workers = num_workers or default_num_workers()
+    scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
+
+    sched = make_schedule(ctx_lens, Hkv, tile, num_workers)
+    q_seg, k_seg, v_seg, g = _to_segments(q, k, v)
+    k_seg, v_seg = _pad_kv(k_seg, v_seg, tile)
+
+    o_p, m_p, l_p = lean_decode_partials(
+        q_seg, k_seg, v_seg, sched, scale, interpret=interpret
+    )
+    if merge_impl == "pallas":
+        o_seg, lse = lean_merge_pallas(o_p, m_p, l_p, sched, interpret=interpret)
+        out = o_seg
+    else:
+        part = AttnPartial(o=o_p, m=m_p, l=l_p)
+        seg = segment_merge(
+            part, jnp.asarray(sched.piece_seg), sched.num_segments
+        )
+        out = finalize(seg)
+        lse = seg.m + jnp.log(seg.l)
+    out = out.reshape(B, Hq, d).astype(q.dtype)
+    if return_lse:
+        return out, lse.reshape(B, Hq)
+    return out
+
+
+def flash_decode(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    ctx_lens: Optional[Sequence[int]] = None,
+    *,
+    num_splits: Optional[int] = None,
+    num_workers: Optional[int] = None,
+    tile: Optional[int] = None,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+):
+    """FlashDecoding baseline: fixed-split partitioning + merge.
+
+    ``num_splits=None`` applies FlashDecoding's heuristic: the smallest split
+    factor that covers the workers (paper §III-C / Fig. 1).
+    """
+    B, Hq, d = q.shape
+    _, Hkv, S, _ = k.shape
+    if ctx_lens is None:
+        ctx_lens = [S] * B
+    ctx_lens = [int(c) for c in ctx_lens]
+    tile = tile or default_tile_size(d)
+    tile = min(tile, max(8, S))
+    scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
+    if num_splits is None:
+        from repro.core.leantile import fixed_split_factor
+
+        num_workers = num_workers or default_num_workers()
+        num_splits = fixed_split_factor(max(ctx_lens), B * Hkv, tile, num_workers)
+
+    q_seg, k_seg, v_seg, g = _to_segments(q, k, v)
+    k_seg, v_seg = _pad_kv(k_seg, v_seg, tile)
+    seg_lens = jnp.asarray(np.repeat(np.asarray(ctx_lens), Hkv), jnp.int32)
+
+    o_p, m_p, l_p = flash_decode_partials(
+        q_seg, k_seg, v_seg, seg_lens, num_splits, tile, scale,
+        interpret=interpret,
+    )
+    # merge over the split axis (FlashDecoding's separate reduction kernel)
+    part = AttnPartial(
+        o=jnp.moveaxis(o_p, 1, 0), m=jnp.moveaxis(m_p, 1, 0),
+        l=jnp.moveaxis(l_p, 1, 0),
+    )
+    out = finalize(merge_n(part))
+    return out.reshape(B, Hq, d).astype(q.dtype)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth in kernel sweeps (tests/test_kernels_*.py):
+each kernel output must ``assert_allclose`` against its oracle over a grid
+of shapes/dtypes, including ragged context lengths.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.core.attention import (
+    mha_decode_ref,
+    mha_prefill_ref,
+    fixed_split_decode,
+)
+
+
+def lean_decode_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    ctx_lens: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """The lean kernel computes *exact* attention; oracle = standard decode."""
+    return mha_decode_ref(q, k, v, ctx_lens=ctx_lens, scale=scale)
+
+
+def flash_decode_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    ctx_lens: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Fixed-split also computes exact attention; same oracle."""
+    return mha_decode_ref(q, k, v, ctx_lens=ctx_lens, scale=scale)
+
+
+def flash_prefill_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    return mha_prefill_ref(
+        q, k, v, causal=causal, window=window, scale=scale, q_offset=q_offset
+    )
+
+
+fixed_split_decode_ref = fixed_split_decode

@@ -1,0 +1,298 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init). 512 placeholder CPU devices back the production
+meshes: 16x16 (one pod) and 2x16x16 (two pods).
+
+For each cell this driver:
+  1. builds the sharded step (train_step / prefill / serve_step),
+  2. ``.lower().compile()`` against ShapeDtypeStruct inputs (no allocation),
+  3. records ``memory_analysis()`` (fits-per-device proof) and the parsed
+     collective schedule,
+  4. measures trip-count-corrected flops/bytes (roofline/measure.py — XLA
+     cost_analysis counts scan bodies once) and computes the three roofline
+     terms, appended to a JSON results file per cell.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (
+    ARCH_IDS,
+    SHAPES,
+    get_config,
+    input_specs,
+    shape_applicable,
+)
+from repro.distributed.sharding import (
+    batch_specs,
+    best_dp_spec,
+    cache_specs,
+    choose_layout,
+    decode_plan,
+    dp_axes,
+    param_specs,
+    to_named,
+    with_sharding,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.serve_step import make_prefill_step, make_serve_step
+from repro.models import count_active_params, count_params, init_params
+from repro.roofline.analysis import analyze, model_flops_for
+from repro.roofline.measure import corrected_cost, cost_of
+from repro.training.optimizer import OptConfig, adamw_init
+from repro.training.train_loop import make_train_step
+from jax.sharding import PartitionSpec as P
+
+
+def _abstract_params(cfg, dtype=None):
+    sds = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    if dtype is not None:
+        sds = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape,
+                dtype if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype,
+            ),
+            sds,
+        )
+    return sds
+
+
+def _grad_accum_for(cfg, spec, mesh, layout, budget_bytes=5 * 2**30):
+    """Microbatch count so remat'd unit-input residuals fit the budget.
+
+    Residuals per local batch row ~= n_layers * seq * d_model * 2 bytes
+    (bf16 unit inputs saved by the remat'd layer scan).
+    """
+    import numpy as np
+
+    dpn = 1
+    bdp = best_dp_spec(spec.global_batch, mesh, layout)
+    if bdp is not None:
+        axes = (bdp,) if isinstance(bdp, str) else bdp
+        dpn = int(np.prod([mesh.shape[a] for a in axes]))
+    b_loc = max(1, spec.global_batch // dpn)
+    per_row = cfg.n_layers * spec.seq_len * cfg.d_model * 2
+    if cfg.moe is not None:
+        # dispatch buffers hold ~top_k token replicas per MoE layer
+        per_row = int(per_row * (1 + 0.5 * cfg.moe.top_k))
+    need = b_loc * per_row
+    accum = 1
+    while need / accum > budget_bytes and accum < b_loc:
+        accum *= 2
+    return accum
+
+
+def build_cell(cfg, shape: str, mesh, layout: str, opts=frozenset()):
+    """Build the sharded step for one cell and return the Lowered object.
+
+    ``opts``: perf-experiment switches ('grad_rs' pins gradient shardings
+    so microbatch grads reduce-scatter instead of all-reduce)."""
+    spec = SHAPES[shape]
+    ins = input_specs(cfg, shape)
+
+    if spec.kind == "train":
+        params_sds = _abstract_params(cfg)
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        pspec = param_specs(params_sds, mesh, cfg, layout)
+        ospec = {"m": pspec, "v": pspec, "step": P()}
+        bspec = batch_specs(mesh, spec.global_batch,
+                            has_img="img_emb" in ins, layout=layout)
+        step = make_train_step(
+            cfg, OptConfig(),
+            grad_accum=_grad_accum_for(cfg, spec, mesh, layout),
+            grad_specs=to_named(pspec, mesh) if "grad_rs" in opts else None,
+        )
+        args = (
+            with_sharding(params_sds, pspec, mesh),
+            with_sharding(opt_sds, ospec, mesh),
+            with_sharding(ins, bspec, mesh),
+        )
+        fn = jax.jit(
+            step,
+            out_shardings=(to_named(pspec, mesh), to_named(ospec, mesh), None),
+            donate_argnums=(0, 1),
+        )
+        return fn.lower(*args)
+
+    if spec.kind == "prefill":
+        params_sds = _abstract_params(cfg, dtype=jnp.bfloat16)
+        pspec = param_specs(params_sds, mesh, cfg, layout, mode="serve")
+        bspec = batch_specs(mesh, spec.global_batch,
+                            has_img="img_emb" in ins, layout=layout)
+        step = make_prefill_step(cfg, cache_len=spec.seq_len)
+        args = [
+            with_sharding(params_sds, pspec, mesh),
+            with_sharding(ins["tokens"], bspec["tokens"], mesh),
+        ]
+        if "img_emb" in ins:
+            args.append(with_sharding(ins["img_emb"], bspec["img_emb"], mesh))
+        return jax.jit(step).lower(*args)
+
+    # decode
+    params_sds = _abstract_params(cfg, dtype=jnp.bfloat16)
+    pspec = param_specs(params_sds, mesh, cfg, layout, mode="serve")
+    plan = decode_plan(cfg, mesh, spec.global_batch, layout)
+    cspec = cache_specs(ins["cache"], mesh, spec.global_batch, layout,
+                        plan=plan, cache_len=spec.seq_len)
+    step = make_serve_step(cfg, mesh=mesh, plan=plan)
+    bdp = best_dp_spec(spec.global_batch, mesh, layout)
+    args = [
+        with_sharding(params_sds, pspec, mesh),
+        with_sharding(ins["cache"], cspec, mesh),
+        with_sharding(ins["tokens"], P(bdp, None), mesh),
+        with_sharding(ins["cur_len"], P(), mesh),
+    ]
+    if "img_emb" in ins:
+        args.append(with_sharding(ins["img_emb"], P(bdp, None, None), mesh))
+    fn = jax.jit(
+        step,
+        out_shardings=(None, to_named(cspec, mesh)),
+        donate_argnums=(1,),
+    )
+    return fn.lower(*args)
+
+
+def lower_cell(arch: str, shape: str, mesh, mesh_name: str, overrides=None,
+               skip_correction=False, opts=frozenset()):
+    """Lower+compile one cell; returns (roofline_dict, raw_info)."""
+    from repro.distributed.hints import activation_mesh
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    layout = choose_layout(cfg)
+    spec = SHAPES[shape]
+
+    with activation_mesh(mesh, dp=dp_axes(mesh, layout)):
+        t0 = time.time()
+        lowered = build_cell(cfg, shape, mesh, layout, opts)
+        compiled = lowered.compile()
+        t1 = time.time()
+
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        n_chips = int(np.prod(list(mesh.shape.values())))
+        raw = cost_of(compiled, hlo)
+
+        if skip_correction:
+            cost = raw
+        else:
+            def build_fn(cfg_r, shp):
+                lr = build_cell(cfg_r, shp, mesh, layout, opts)
+                return lr, lr.compile()
+
+            cost = corrected_cost(cfg, shape, mesh, layout, build_fn, spec,
+                                  n_chips)
+        t2 = time.time()
+
+    mf = model_flops_for(cfg, spec, count_active_params(cfg))
+    rf = analyze(
+        arch=arch, shape=shape, mesh_name=mesh_name, n_chips=n_chips,
+        flops=cost.flops, byts=cost.bytes, colls=cost.colls,
+        model_flops=mf, memory_stats=mem,
+        notes=f"compile_s={t1 - t0:.1f} correct_s={t2 - t1:.1f}",
+    )
+    return rf.to_dict(), {
+        "compile_s": t1 - t0,
+        "correction_s": t2 - t1,
+        "arg_bytes": mem.argument_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "out_bytes": mem.output_size_in_bytes,
+        "raw_flops_per_dev": raw.flops,
+        "raw_bytes_per_dev": raw.bytes,
+        "raw_colls": raw.colls,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-correction", action="store_true")
+    ap.add_argument("--overrides", default="",
+                    help="comma k=v ModelConfig overrides (perf experiments)")
+    ap.add_argument("--opt", default="",
+                    help="comma perf switches: grad_rs")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = (
+        [("single", False), ("multi", True)]
+        if args.mesh == "both"
+        else [(args.mesh, args.mesh == "multi")]
+    )
+    overrides = {}
+    for kv in filter(None, args.overrides.split(",")):
+        k, v = kv.split("=")
+        overrides[k] = (
+            int(v) if v.lstrip("-").isdigit() else
+            (v == "True" if v in ("True", "False") else v)
+        )
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    ok = fail = 0
+    for mesh_name, multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        for arch in archs:
+            for shape in shapes:
+                if not shape_applicable(arch, shape):
+                    print(f"SKIP {arch} x {shape} (long-ctx rule)", flush=True)
+                    continue
+                tag = f"{arch}__{shape}__{mesh_name}"
+                if args.tag:
+                    tag += f"__{args.tag}"
+                fpath = outdir / f"{tag}.json"
+                try:
+                    rf, info = lower_cell(
+                        arch, shape, mesh, mesh_name, overrides or None,
+                        skip_correction=args.skip_correction,
+                        opts=frozenset(filter(None, args.opt.split(","))),
+                    )
+                    rec = {"roofline": rf, "info": info,
+                           "overrides": overrides}
+                    fpath.write_text(json.dumps(rec, indent=1))
+                    print(
+                        f"OK   {tag}: bottleneck={rf['bottleneck']} "
+                        f"step={rf['step_time_s']*1e3:.2f}ms "
+                        f"frac={rf['roofline_frac']:.3f} "
+                        f"mem/dev={(info['arg_bytes']+info['temp_bytes'])/2**30:.2f}GiB "
+                        f"compile={info['compile_s']:.0f}s+{info['correction_s']:.0f}s",
+                        flush=True,
+                    )
+                    ok += 1
+                except Exception as e:
+                    fail += 1
+                    fpath.with_suffix(".err").write_text(
+                        f"{e}\n{traceback.format_exc()}"
+                    )
+                    print(f"FAIL {tag}: {type(e).__name__}: {str(e)[:300]}",
+                          flush=True)
+    print(f"\ndryrun complete: {ok} ok, {fail} failed")
+    return 0 if fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

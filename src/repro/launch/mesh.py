@@ -1,0 +1,20 @@
+"""Production mesh definitions (TPU v5e pods; 256 chips per pod).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state. Single pod: (data=16, model=16). Multi-pod adds a
+leading 'pod' axis (pure DP across the DCN).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape=(2, 4), axes=("data", "model")) -> jax.sharding.Mesh:
+    """Small mesh over host CPU devices for tests."""
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,63 @@
+"""serve_step factory: one decode token against the KV caches.
+
+``sp_attention=True`` routes global-attention layers through the mesh-level
+sequence-parallel LeanAttention path (shard_map + associative-merge
+collectives) — used for the long_500k shape where batch=1 and only the
+context dimension can fill the mesh (the paper's core scenario, §III-D).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributed import sp_decode_attention
+from repro.models import ModelConfig, decode_step
+
+
+def make_serve_step(
+    cfg: ModelConfig,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    plan: Optional[dict] = None,
+):
+    """``plan`` from ``distributed.sharding.decode_plan``; None or
+    mode=='heads' uses the reference path (XLA shards via cache specs)."""
+    attn_fn = None
+    if mesh is not None and plan is not None and plan["seq_axes"]:
+        seq_axes = plan["seq_axes"]
+        batch_spec = plan["batch_spec"]
+        b_axis = (
+            batch_spec if isinstance(batch_spec, str) else
+            ("data" if batch_spec and "data" in batch_spec else None)
+        )
+
+        def attn_fn(q, k, v, ctx):
+            return sp_decode_attention(
+                q, k, v, mesh, seq_axis=seq_axes, head_axis="model",
+                batch_axis=b_axis, ctx_len=ctx,
+            )
+
+    def serve_step(params, cache, tokens, cur_len, img_emb=None):
+        logits, new_cache = decode_step(
+            params, cfg, cache, tokens, cur_len, img_emb=img_emb,
+            attn_fn=attn_fn,
+        )
+        return logits, new_cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int):
+    from repro.models import prefill
+
+    def prefill_step(params, tokens, img_emb=None):
+        # cache is a real output (otherwise XLA would DCE the KV writes and
+        # the dry-run flops/bytes would be fiction)
+        logits, cache, cur = prefill(
+            params, cfg, tokens, cache_len=cache_len, img_emb=img_emb
+        )
+        return logits, cache, cur
+
+    return prefill_step

@@ -1,0 +1,13 @@
+"""Config-driven model zoo covering all assigned architectures."""
+from .transformer import (
+    ModelConfig,
+    init_params,
+    init_cache,
+    forward,
+    loss_fn,
+    prefill,
+    decode_step,
+    count_params,
+    count_active_params,
+)
+from .moe import MoEConfig

@@ -1,0 +1,227 @@
+"""Shared transformer building blocks (pure-function + param-dict style).
+
+Everything is a plain pytree of jnp arrays + pure functions, so pjit /
+shard_map / scan / remat compose without a framework dependency.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.attention import mha_decode_ref, mha_prefill_ref
+
+
+def dense_init(rng, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(rng, shape) * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- positions
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0):
+    """Rotary embedding. x: (..., L, H, hd) or (..., H, hd) with positions
+    broadcastable to the L axis. Applied over the last dim in half-split
+    convention."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., L, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # broadcast over heads axis (which sits between L and hd)
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(positions: jax.Array, d_model: int) -> jax.Array:
+    half = d_model // 2
+    freqs = 10000.0 ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------- attention
+def attn_init(rng, d_model, n_heads, n_kv, head_dim, qk_norm=False,
+              dtype=jnp.float32):
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], (d_model, n_heads * head_dim), dtype=dtype),
+        "wk": dense_init(ks[1], (d_model, n_kv * head_dim), dtype=dtype),
+        "wv": dense_init(ks[2], (d_model, n_kv * head_dim), dtype=dtype),
+        "wo": dense_init(
+            ks[3], (n_heads * head_dim, d_model), dtype=dtype
+        ),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.zeros((head_dim,), dtype)
+        p["k_norm"] = jnp.zeros((head_dim,), dtype)
+    return p
+
+
+def attn_forward(
+    p,
+    x: jax.Array,                     # (B, L, D)
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    causal: bool = True,
+    window: Optional[int] = None,
+    rope_theta: Optional[float] = 10000.0,
+    q_offset=0,
+    kv_states: Optional[jax.Array] = None,   # cross-attn: (B, Lk, D)
+    compute_dtype=jnp.bfloat16,
+):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    B, L, D = x.shape
+    xc = x.astype(compute_dtype)
+    src = xc if kv_states is None else kv_states.astype(compute_dtype)
+    q = (xc @ p["wq"].astype(compute_dtype)).reshape(B, L, n_heads, head_dim)
+    k = (src @ p["wk"].astype(compute_dtype)).reshape(
+        B, src.shape[1], n_kv, head_dim
+    )
+    v = (src @ p["wv"].astype(compute_dtype)).reshape(
+        B, src.shape[1], n_kv, head_dim
+    )
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if rope_theta is not None and kv_states is None:
+        qpos = jnp.arange(L) + q_offset
+        kpos = jnp.arange(src.shape[1])
+        q = rope(q, qpos, rope_theta)
+        k = rope(k, kpos, rope_theta)
+    # (B, H, L, hd)
+    qh = jnp.swapaxes(q, 1, 2)
+    kh = jnp.swapaxes(k, 1, 2)
+    vh = jnp.swapaxes(v, 1, 2)
+    o = mha_prefill_ref(
+        qh, kh, vh,
+        causal=causal and kv_states is None,
+        window=window,
+        q_offset=q_offset if kv_states is None else 0,
+    )
+    o = jnp.swapaxes(o, 1, 2).reshape(B, L, n_heads * head_dim)
+    out = o.astype(compute_dtype) @ p["wo"].astype(compute_dtype)
+    return out.astype(x.dtype), (kh, vh)
+
+
+def attn_decode(
+    p,
+    x: jax.Array,                 # (B, 1, D) current token
+    k_cache: jax.Array,           # (B, Hkv, S, hd)
+    v_cache: jax.Array,
+    cur_len,                      # scalar int32 — tokens already in cache
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: Optional[float] = 10000.0,
+    window: Optional[int] = None,
+    compute_dtype=jnp.bfloat16,
+    attn_fn=None,                 # override: f(q, k, v, ctx_lens) -> out
+    ctx_lens: Optional[jax.Array] = None,   # per-slot lengths (ragged)
+):
+    """One decode step against the KV cache. Returns (out, k_cache, v_cache).
+
+    ``window``: ring-buffer cache of size W (positions stored mod W, RoPE
+    applied at write time with absolute positions).
+    ``attn_fn``: plugs in the lean/fixed-split kernels or the mesh-level
+    sequence-parallel path; default is the jnp reference.
+    ``ctx_lens``: per-batch-slot context lengths for ragged serving — RoPE
+    positions, cache write offsets, and masks all go per-slot.
+    """
+    B, _, D = x.shape
+    S = k_cache.shape[2]
+    xc = x.astype(compute_dtype)
+    q = (xc @ p["wq"].astype(compute_dtype)).reshape(B, 1, n_heads, head_dim)
+    k = (xc @ p["wk"].astype(compute_dtype)).reshape(B, 1, n_kv, head_dim)
+    v = (xc @ p["wv"].astype(compute_dtype)).reshape(B, 1, n_kv, head_dim)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if rope_theta is not None:
+        if ctx_lens is not None:
+            pos = ctx_lens[:, None]                  # (B, 1) per slot
+        else:
+            pos = jnp.full((1,), cur_len)
+        q = rope(q, pos, rope_theta)
+        k = rope(k, pos, rope_theta)
+    if ctx_lens is not None:
+        writes = ctx_lens % S if window is not None else jnp.minimum(
+            ctx_lens, S - 1
+        )
+        upd = lambda cache, new: jax.vmap(
+            lambda c, n, w: jax.lax.dynamic_update_slice(c, n, (0, w, 0))
+        )(cache, jnp.swapaxes(new, 1, 2).astype(cache.dtype), writes)
+        k_cache = upd(k_cache, k)
+        v_cache = upd(v_cache, v)
+        ctx = jnp.minimum(ctx_lens + 1, S).astype(jnp.int32)
+    else:
+        write_at = cur_len % S if window is not None else cur_len
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, jnp.swapaxes(k, 1, 2).astype(k_cache.dtype),
+            (0, 0, write_at, 0),
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, jnp.swapaxes(v, 1, 2).astype(v_cache.dtype),
+            (0, 0, write_at, 0),
+        )
+        ctx = jnp.full((B,), jnp.minimum(cur_len + 1, S), dtype=jnp.int32)
+    qd = q.reshape(B, n_heads, head_dim)
+    # fp8 caches: reads upcast in-register (fused on TPU: HBM moves 1B/elt)
+    k_eff, v_eff = k_cache, v_cache
+    if k_cache.dtype not in (jnp.bfloat16, jnp.float16, jnp.float32):
+        k_eff = k_cache.astype(compute_dtype)
+        v_eff = v_cache.astype(compute_dtype)
+    if attn_fn is not None:
+        o = attn_fn(qd, k_eff, v_eff, ctx)
+    else:
+        o = mha_decode_ref(qd, k_eff, v_eff, ctx_lens=ctx)
+    o = o.reshape(B, 1, n_heads * head_dim).astype(compute_dtype)
+    out = o @ p["wo"].astype(compute_dtype)
+    return out.astype(x.dtype), k_cache, v_cache
+
+
+# ---------------------------------------------------------------- FFN
+def ffn_init(rng, d_model, d_ff, kind="swiglu", dtype=jnp.float32):
+    ks = jax.random.split(rng, 3)
+    if kind == "swiglu":
+        return {
+            "wg": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+            "wu": dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+            "wd": dense_init(ks[2], (d_ff, d_model), dtype=dtype),
+        }
+    return {  # gelu / squared_relu
+        "wu": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "wd": dense_init(ks[1], (d_ff, d_model), dtype=dtype),
+    }
+
+
+def ffn_forward(p, x, kind="swiglu", compute_dtype=jnp.bfloat16):
+    xc = x.astype(compute_dtype)
+    if kind == "swiglu":
+        h = jax.nn.silu(xc @ p["wg"].astype(compute_dtype)) * (
+            xc @ p["wu"].astype(compute_dtype)
+        )
+    elif kind == "gelu":
+        h = jax.nn.gelu(xc @ p["wu"].astype(compute_dtype))
+    elif kind == "squared_relu":  # nemotron-4
+        h = jnp.square(jax.nn.relu(xc @ p["wu"].astype(compute_dtype)))
+    else:
+        raise ValueError(kind)
+    return (h @ p["wd"].astype(compute_dtype)).astype(x.dtype)

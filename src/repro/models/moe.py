@@ -1,0 +1,170 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based capacity dispatch.
+
+Fixed-shape (XLA/SPMD friendly) dispatch: token-expert pairs are sorted by
+expert id, given in-expert positions via a cumulative count, scattered into
+an (E, C, D) buffer, processed by a batched expert einsum, and gathered back.
+When experts are sharded over the ``model`` mesh axis (EP), the scatter /
+gather reshardings become all-to-alls in SPMD; when the expert count does not
+divide the axis (qwen2's 60 experts on a 16-way axis) the expert weights are
+instead tensor-sharded over d_ff (expert-TP) — see distributed/sharding.py.
+
+Supports qwen2-style *shared experts* (always-on dense FFN added to the
+routed output) and router auxiliary load-balancing loss.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.hints import get_activation_mesh, hint
+from .layers import dense_init, ffn_forward
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    d_ff_shared: int = 0          # 0 = no shared expert
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+    norm_topk_prob: bool = True
+
+
+def moe_init(rng, d_model, cfg: MoEConfig, dtype=jnp.float32):
+    ks = jax.random.split(rng, 6)
+    E, F = cfg.num_experts, cfg.d_ff_expert
+    p = {
+        "router": dense_init(ks[0], (d_model, E), dtype=dtype),
+        "wg": dense_init(ks[1], (E, d_model, F), dtype=dtype),
+        "wu": dense_init(ks[2], (E, d_model, F), dtype=dtype),
+        "wd": dense_init(ks[3], (E, F, d_model), dtype=dtype),
+    }
+    if cfg.d_ff_shared:
+        p["shared"] = {
+            "wg": dense_init(ks[4], (d_model, cfg.d_ff_shared), dtype=dtype),
+            "wu": dense_init(ks[5], (d_model, cfg.d_ff_shared), dtype=dtype),
+            "wd": dense_init(
+                jax.random.fold_in(ks[5], 1), (cfg.d_ff_shared, d_model),
+                dtype=dtype,
+            ),
+        }
+    return p
+
+
+def _auto_groups(T: int) -> int:
+    """Dispatch group count: groups keep the argsort/gather LOCAL to a data
+    shard (a global token sort under SPMD replicates the whole batch across
+    the mesh — measured 200x collective blow-up). Power of two, ~4096
+    tokens per group, capped so tiny inputs stay in one group."""
+    g = 1
+    while g < 256 and T // (2 * g) >= 4096:
+        g *= 2
+    return g
+
+
+def moe_forward(p, x, cfg: MoEConfig, compute_dtype=jnp.bfloat16,
+                n_groups: int = 0):
+    """x: (B, L, D) -> (out, aux_loss). Grouped sort-based dispatch:
+    token-expert pairs are sorted *within groups* (groups align with data
+    shards via the 'dp' hint), scattered into a (G, E, C, D) buffer whose
+    E dim shards over 'model' (EP all-to-all), processed by batched expert
+    einsums, and gathered back."""
+    B, L, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    T = B * L
+    G = n_groups or _auto_groups(T)
+    while T % G:
+        G //= 2
+    Tg = T // G
+    xt = hint(
+        x.reshape(G, Tg, D).astype(compute_dtype), "dp", None, None
+    )
+
+    logits = (xt @ p["router"].astype(compute_dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (G, Tg, E)
+    gate_w, gate_idx = jax.lax.top_k(probs, K)               # (G, Tg, K)
+    if cfg.norm_topk_prob:
+        gate_w = gate_w / jnp.sum(gate_w, axis=-1, keepdims=True)
+
+    # ---- per-group capacity-limited sort-based dispatch (fixed shapes) ----
+    # gather-only: SPMD lowers batched gathers (batch dim sharded, local
+    # indices) with zero cross-partition traffic, whereas a big scatter
+    # replicates its index tensors across the mesh (measured 48 GiB/step).
+    C = max(1, int(cfg.capacity_factor * Tg * K / E))
+    TK = Tg * K
+    flat_e = gate_idx.reshape(G, TK)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)        # pairs by expert
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    first_of_e = jax.vmap(
+        lambda s: jnp.searchsorted(s, jnp.arange(E))
+    )(sorted_e)                                              # (G, E)
+    counts = jnp.diff(
+        jnp.concatenate([first_of_e, jnp.full((G, 1), TK)], axis=1), axis=1
+    )                                                        # (G, E)
+    pos_in_e = jnp.arange(TK)[None, :] - jnp.take_along_axis(
+        first_of_e, sorted_e, axis=1
+    )
+    keep = pos_in_e < C                                      # (G, TK)
+    tok_of_pair = order // K
+    gidx = jnp.arange(G)[:, None]
+
+    # buf[g, e, c] = token of the pair at sorted position first_of_e + c
+    slot_src = (
+        first_of_e[:, :, None] + jnp.arange(C)[None, None, :]
+    ).reshape(G, E * C)                                      # (G, E*C)
+    slot_valid = (
+        jnp.arange(C)[None, None, :] < counts[:, :, None]
+    ).reshape(G, E * C)
+    src_tok = jnp.take_along_axis(
+        tok_of_pair, jnp.clip(slot_src, 0, TK - 1), axis=1
+    )
+    buf = jnp.take_along_axis(xt, src_tok[..., None], axis=1)
+    buf = jnp.where(slot_valid[..., None], buf, 0.0).reshape(G, E, C, D)
+    # EP when experts divide the model axis (the reshard below is the
+    # dispatch all-to-all); expert-TP (d_ff over 'model') otherwise.
+    mesh = get_activation_mesh()
+    ep = mesh is not None and E % mesh.shape.get("model", 1) == 0
+    buf = hint(buf, "dp", "model" if ep else None, None, None)
+
+    # ---- expert computation ----
+    wg = p["wg"].astype(compute_dtype)
+    wu = p["wu"].astype(compute_dtype)
+    wd = p["wd"].astype(compute_dtype)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, wg)) * jnp.einsum(
+        "gecd,edf->gecf", buf, wu
+    )
+    y = jnp.einsum("gecf,efd->gecd", h, wd)                  # (G, E, C, D)
+    # combine math in bf16: the cross-model combine gather lowers to a
+    # masked all-reduce of (G, T*K, D) — in f32 that was 8 GiB/layer; the
+    # cast halves it. (Resharding the buffer 'home' first was tried and
+    # REFUTED: XLA re-gathered f32 gradients of the whole (G,E,C,D) buffer
+    # in backward, a net regression — see EXPERIMENTS.md §Perf cell 3.)
+    y = y.astype(compute_dtype)
+
+    # ---- combine (gather back; the return all-to-all) ----
+    y_flat = y.reshape(G, E * C, D)
+    slot_of_pair = jnp.where(keep, sorted_e * C + pos_in_e, 0)
+    y_sorted = jnp.take_along_axis(y_flat, slot_of_pair[..., None], axis=1)
+    y_sorted = jnp.where(keep[..., None], y_sorted, 0.0)     # (G, TK, D)
+    inv = jnp.argsort(order, axis=-1, stable=True)
+    y_pairs = jnp.take_along_axis(y_sorted, inv[..., None], axis=1)
+    y_pairs = y_pairs.reshape(G, Tg, K, D)
+    out = jnp.sum(gate_w[..., None].astype(compute_dtype) * y_pairs, axis=2)
+
+    if cfg.d_ff_shared:
+        out = out + ffn_forward(
+            p["shared"], xt, kind="swiglu", compute_dtype=compute_dtype
+        )
+
+    # ---- auxiliary load-balance loss (Switch-style) ----
+    me = jnp.mean(probs, axis=(0, 1))                        # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32), axis=(0, 1)
+    )
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    return out.reshape(B, L, D).astype(x.dtype), aux

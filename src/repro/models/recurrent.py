@@ -1,0 +1,392 @@
+"""Attention-free temporal blocks: RG-LRU (Griffin/RecurrentGemma), mLSTM and
+sLSTM (xLSTM). LeanAttention is inapplicable to these layers (no softmax
+attention) — they are implemented without it, per DESIGN.md
+§Arch-applicability. Decode is an O(1)-state recurrent update, which is what
+makes the ``long_500k`` shape runnable for these families.
+
+Train/prefill paths:
+  * RG-LRU: linear recurrence -> exact parallel form via associative_scan.
+  * mLSTM:  chunkwise-parallel form (linear attention with exp-gating);
+            validated against the sequential step reference in tests.
+  * sLSTM:  inherently sequential (recurrent weights) -> lax.scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.hints import hint
+from .layers import dense_init, rms_norm
+
+# ------------------------------------------------------------------ RG-LRU
+RGLRU_C = 8.0
+
+
+def rglru_init(rng, d_model, d_rnn, dtype=jnp.float32):
+    ks = jax.random.split(rng, 7)
+    # lambda init so that a = sigmoid(lam)^c is in (0.9, 0.999)
+    u = jax.random.uniform(ks[0], (d_rnn,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.exp(-jnp.log(u) / RGLRU_C) - 1.0)  # softplus^-1
+    return {
+        "wx": dense_init(ks[1], (d_model, d_rnn), dtype=dtype),
+        "wy": dense_init(ks[2], (d_model, d_rnn), dtype=dtype),
+        "w_out": dense_init(ks[3], (d_rnn, d_model), dtype=dtype),
+        "conv_w": dense_init(ks[4], (4, d_rnn), scale=0.5, dtype=dtype),
+        "wa": dense_init(ks[5], (d_rnn, d_rnn), dtype=dtype),
+        "wi": dense_init(ks[6], (d_rnn, d_rnn), dtype=dtype),
+        "lam": lam.astype(dtype),
+    }
+
+
+def _causal_conv4(x, w, state=None):
+    """Depthwise causal conv, width 4. x: (B, T, C); state: (B, 3, C)."""
+    if state is None:
+        pad = jnp.zeros_like(x[:, :3])
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, 3 - i : xp.shape[1] - i] * w[3 - i] for i in range(4)
+    )
+    new_state = xp[:, -3:]
+    return out, new_state
+
+
+def _rglru_coeffs(p, u, compute_dtype):
+    """Gated coefficients: h_t = a_t * h_{t-1} + b_t (f32 for stability)."""
+    uf = u.astype(compute_dtype)
+    r = jax.nn.sigmoid(
+        (uf @ p["wa"].astype(compute_dtype)).astype(jnp.float32)
+    )
+    i = jax.nn.sigmoid(
+        (uf @ p["wi"].astype(compute_dtype)).astype(jnp.float32)
+    )
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, 1.0)) * (
+        i * u.astype(jnp.float32)
+    )
+    return a, b
+
+
+def rglru_forward(p, x, h0=None, conv0=None, compute_dtype=jnp.bfloat16):
+    """Full-sequence Griffin recurrent block. x: (B, T, D).
+    Returns (out, (h_T, conv_state))."""
+    B, T, D = x.shape
+    xc = x.astype(compute_dtype)
+    gate = jax.nn.gelu(xc @ p["wy"].astype(compute_dtype))
+    u = xc @ p["wx"].astype(compute_dtype)
+    u, conv_state = _causal_conv4(u, p["conv_w"].astype(compute_dtype), conv0)
+    a, b = _rglru_coeffs(p, u, compute_dtype)
+    a = hint(a, "dp", None, "model")
+    b = hint(b, "dp", None, "model")
+    if h0 is not None:
+        # fold incoming state into the first step: b_0 += a_0 * h0
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = (h.astype(compute_dtype) * gate) @ p["w_out"].astype(compute_dtype)
+    return out.astype(x.dtype), (h[:, -1], conv_state)
+
+
+def rglru_step(p, x, h, conv_state, compute_dtype=jnp.bfloat16):
+    """One decode step. x: (B, 1, D); h: (B, d_rnn) f32; conv: (B, 3, d_rnn)."""
+    xc = x.astype(compute_dtype)
+    gate = jax.nn.gelu(xc @ p["wy"].astype(compute_dtype))
+    u = xc @ p["wx"].astype(compute_dtype)
+    u, conv_state = _causal_conv4(u, p["conv_w"].astype(compute_dtype), conv_state)
+    a, b = _rglru_coeffs(p, u, compute_dtype)
+    h_new = a[:, 0] * h + b[:, 0]
+    out = (h_new[:, None].astype(compute_dtype) * gate) @ p["w_out"].astype(
+        compute_dtype
+    )
+    return out.astype(x.dtype), h_new, conv_state
+
+
+# ------------------------------------------------------------------ mLSTM
+def mlstm_init(rng, d_model, n_heads, proj_factor=2.0, dtype=jnp.float32):
+    pd = int(d_model * proj_factor)
+    ks = jax.random.split(rng, 8)
+    return {
+        "w_up": dense_init(ks[0], (d_model, 2 * pd), dtype=dtype),
+        "wq": dense_init(ks[1], (pd, pd), dtype=dtype),
+        "wk": dense_init(ks[2], (pd, pd), dtype=dtype),
+        "wv": dense_init(ks[3], (pd, pd), dtype=dtype),
+        "w_if": dense_init(ks[4], (pd, 2 * n_heads), scale=0.01, dtype=dtype),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((n_heads,)), jnp.full((n_heads,), 3.0)]
+        ).astype(dtype),
+        "w_down": dense_init(ks[5], (pd, d_model), dtype=dtype),
+        "ln_inner": jnp.zeros((pd,), dtype),
+    }
+
+
+def _mlstm_gates(p, u, compute_dtype):
+    gf = (u @ p["w_if"].astype(compute_dtype)).astype(jnp.float32) + p[
+        "b_if"
+    ].astype(jnp.float32)
+    n_heads = gf.shape[-1] // 2
+    i_pre, f_pre = gf[..., :n_heads], gf[..., n_heads:]
+    logf = -jax.nn.softplus(-f_pre)  # log sigmoid(f_pre)
+    return i_pre, logf
+
+
+def mlstm_qkv(p, u, n_heads, compute_dtype, keep_dtype=None):
+    pd = u.shape[-1]
+    hd = pd // n_heads
+    shp = u.shape[:-1] + (n_heads, hd)
+    q = (u @ p["wq"].astype(compute_dtype)).reshape(shp) / np.sqrt(hd)
+    k = (u @ p["wk"].astype(compute_dtype)).reshape(shp)
+    v = (u @ p["wv"].astype(compute_dtype)).reshape(shp)
+    kd = keep_dtype or jnp.float32
+    return q.astype(kd), k.astype(kd), v.astype(kd)
+
+
+def mlstm_step_state(q, k, v, i_pre, logf, state):
+    """Exact sequential recurrence (reference + decode). One step.
+    q/k/v: (B, H, hd); i_pre/logf: (B, H); state: (C, n, m)."""
+    C, n, m = state
+    m_new = jnp.maximum(logf + m, i_pre)
+    i = jnp.exp(i_pre - m_new)
+    f = jnp.exp(logf + m - m_new)
+    C_new = f[..., None, None] * C + i[..., None, None] * (
+        v[..., :, None] * k[..., None, :]
+    )  # (B,H,hd,hd): v outer k
+    n_new = f[..., None] * n + i[..., None] * k
+    num = jnp.einsum("bhij,bhj->bhi", C_new, q)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhj,bhj->bh", n_new, q)), jnp.exp(-m_new)
+    )
+    h = num / den[..., None]
+    return h, (C_new, n_new, m_new)
+
+
+def mlstm_sequence_ref(q, k, v, i_pre, logf, state=None):
+    """Step-by-step scan over time (oracle for the chunkwise form).
+    q/k/v: (B, T, H, hd); gates: (B, T, H)."""
+    B, T, H, hd = q.shape
+    if state is None:
+        state = (
+            jnp.zeros((B, H, hd, hd), jnp.float32),
+            jnp.zeros((B, H, hd), jnp.float32),
+            jnp.full((B, H), 0.0, jnp.float32),
+        )
+
+    def step(st, inp):
+        qt, kt, vt, it, ft = inp
+        h, st = mlstm_step_state(qt, kt, vt, it, ft, st)
+        return st, h
+
+    xs = (
+        jnp.moveaxis(q, 1, 0),
+        jnp.moveaxis(k, 1, 0),
+        jnp.moveaxis(v, 1, 0),
+        jnp.moveaxis(i_pre, 1, 0),
+        jnp.moveaxis(logf, 1, 0),
+    )
+    state, hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 1), state  # (B, T, H, hd)
+
+
+def mlstm_sequence_chunked(q, k, v, i_pre, logf, state=None, chunk=64,
+                           unroll=False):
+    """Chunkwise-parallel mLSTM (TPU-friendly): intra-chunk attention-like
+    einsums + inter-chunk state recurrence. Exact (stabilized) — matches
+    ``mlstm_sequence_ref`` to fp tolerance."""
+    B, T, H, hd = q.shape
+    pad = (-T) % chunk
+    if pad:
+        zq = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v = zq(q), zq(k), zq(v)
+        i_pre = jnp.pad(i_pre, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nc = Tp // chunk
+    rs = lambda a: a.reshape(B, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc = rs(q), rs(k), rs(v)         # (nc, B, chunk, H, hd)
+    ic, fc = rs(i_pre), rs(logf)             # (nc, B, chunk, H)
+    # TP scheme: v (and thus C's v-dim) sharded over 'model'; q/k replicated
+    # (their per-head dot products are cheap); h comes out model-sharded and
+    # feeds the row-parallel down projection.
+    qc = hint(qc, None, "dp", None, None, None)
+    kc = hint(kc, None, "dp", None, None, None)
+    vc = hint(vc, None, "dp", None, None, "model")
+    ic = hint(ic, None, "dp", None, None)
+    fc = hint(fc, None, "dp", None, None)
+
+    if state is None:
+        state = (
+            jnp.zeros((B, H, hd, hd), jnp.float32),
+            jnp.zeros((B, H, hd), jnp.float32),
+            jnp.zeros((B, H), jnp.float32),
+        )
+
+    def chunk_step(st, inp):
+        C0, n0, m0 = st
+        qt, kt, vt, it, ft = inp              # (B, L, H, *)
+        L = qt.shape[1]
+        F = jnp.cumsum(ft, axis=1)            # (B, L, H) log decay from start
+        # log weight of source s for target t: D[t,s] = F_t - F_s + i_s, s<=t
+        D = (
+            F[:, :, None] - F[:, None, :] + it[:, None, :]
+        )  # (B, t, s, H)
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        D = jnp.where(tri[None, :, :, None], D, -jnp.inf)
+        # state path log-scale for target t: E_t = F_t + m0
+        E = F + m0[:, None]                   # (B, L, H)
+        m_t = jnp.maximum(jnp.max(D, axis=2), E)          # (B, L, H)
+        W = jnp.exp(D - m_t[:, :, None])                  # (B, t, s, H)
+        # intra-chunk numerator / denominator (bf16 inputs, f32 accumulate)
+        f32 = jnp.float32
+        s_qk = jnp.einsum("blhd,bshd->blsh", qt, kt,
+                          preferred_element_type=f32)     # raw dots
+        num_intra = jnp.einsum("blsh,bshd->blhd", (W * s_qk).astype(vt.dtype),
+                               vt, preferred_element_type=f32)
+        den_intra = jnp.einsum("blsh->blh", W * s_qk)
+        # state contribution
+        sc = jnp.exp(E - m_t)                             # (B, L, H)
+        num_state = jnp.einsum("blh,bhij,blhj->blhi", sc,
+                               C0.astype(f32), qt.astype(f32))
+        den_state = sc * jnp.einsum("bhj,blhj->blh", n0, qt.astype(f32))
+        num = num_intra + num_state
+        den = jnp.maximum(jnp.abs(den_intra + den_state), jnp.exp(-m_t))
+        h = num / den[..., None]
+        # chunk-final state
+        FL = F[:, -1]                                     # (B, H)
+        m_state = jnp.maximum(FL + m0, jnp.max(FL[:, None] - F + it, axis=1))
+        w_old = jnp.exp(FL + m0 - m_state)                # (B, H)
+        w_src = jnp.exp(FL[:, None] - F + it - m_state[:, None])  # (B, L, H)
+        C1 = w_old[..., None, None] * C0 + jnp.einsum(
+            "blhi,blhj->bhij", (w_src[..., None] * vt.astype(f32)).astype(vt.dtype),
+            kt, preferred_element_type=f32,
+        )
+        n1 = w_old[..., None] * n0 + jnp.einsum(
+            "blh,blhj->bhj", w_src, kt.astype(f32)
+        )
+        st = (
+            hint(C1, "dp", None, "model", None),   # C[i=v-dim, j=k-dim]
+            hint(n1, "dp", None, None),
+            hint(m_state, "dp", None),
+        )
+        return st, hint(h, "dp", None, None, "model")
+
+    # checkpoint: recompute W / s_qk in backward instead of saving them
+    chunk_step = jax.checkpoint(chunk_step)
+    if unroll:  # flop-count mode: python loop so HLO sees every iteration
+        hs_list = []
+        for i in range(nc):
+            state, h_i = chunk_step(
+                state, jax.tree.map(lambda a: a[i], (qc, kc, vc, ic, fc))
+            )
+            hs_list.append(h_i)
+        hs = jnp.stack(hs_list)
+    else:
+        state, hs = jax.lax.scan(chunk_step, state, (qc, kc, vc, ic, fc))
+    h = hs.swapaxes(0, 1).reshape(B, Tp, H, hd)[:, :T]
+    return h, state
+
+
+def mlstm_block_forward(p, x, n_heads, state=None, chunk=256,
+                        compute_dtype=jnp.bfloat16, use_chunked=True,
+                        unroll=False):
+    """Full mLSTM residual block. x: (B, T, D). Returns (out, state)."""
+    B, T, D = x.shape
+    xc = x.astype(compute_dtype)
+    up = xc @ p["w_up"].astype(compute_dtype)
+    pd = up.shape[-1] // 2
+    u, z = up[..., :pd], up[..., pd:]
+    z = hint(z, "dp", None, "model")
+    chunk = min(chunk, max(8, T))
+    keep = compute_dtype if (use_chunked and T > 1) else jnp.float32
+    q, k, v = mlstm_qkv(p, u, n_heads, compute_dtype, keep_dtype=keep)
+    i_pre, logf = _mlstm_gates(p, u, compute_dtype)
+    if use_chunked and T > 1:
+        h, state = mlstm_sequence_chunked(q, k, v, i_pre, logf, state, chunk,
+                                          unroll=unroll)
+    else:
+        h, state = mlstm_sequence_ref(q, k, v, i_pre, logf, state)
+    h = h.astype(compute_dtype).reshape(B, T, pd)
+    h = rms_norm(h, p["ln_inner"])
+    out = (h.astype(compute_dtype) * jax.nn.silu(z)) @ p["w_down"].astype(
+        compute_dtype
+    )
+    return out.astype(x.dtype), state
+
+
+def mlstm_block_step(p, x, n_heads, state, compute_dtype=jnp.bfloat16):
+    """One decode step of the mLSTM block. x: (B, 1, D)."""
+    B, _, D = x.shape
+    xc = x.astype(compute_dtype)
+    up = xc @ p["w_up"].astype(compute_dtype)
+    pd = up.shape[-1] // 2
+    u, z = up[..., :pd], up[..., pd:]
+    q, k, v = mlstm_qkv(p, u[:, 0], n_heads, compute_dtype)
+    i_pre, logf = _mlstm_gates(p, u[:, 0], compute_dtype)
+    h, state = mlstm_step_state(q, k, v, i_pre, logf, state)
+    h = rms_norm(h.reshape(B, 1, pd), p["ln_inner"])
+    out = (h.astype(compute_dtype) * jax.nn.silu(z)) @ p["w_down"].astype(
+        compute_dtype
+    )
+    return out.astype(x.dtype), state
+
+
+# ------------------------------------------------------------------ sLSTM
+def slstm_init(rng, d_model, n_heads, dtype=jnp.float32):
+    hd = d_model // n_heads
+    ks = jax.random.split(rng, 4)
+    return {
+        "w_in": dense_init(ks[0], (d_model, 4 * d_model), dtype=dtype),
+        "r": dense_init(ks[1], (n_heads, hd, 4 * hd), dtype=dtype),
+        "b": jnp.zeros((4 * d_model,), dtype),
+        "w_out": dense_init(ks[2], (d_model, d_model), dtype=dtype),
+        "ln_inner": jnp.zeros((d_model,), dtype),
+    }
+
+
+def slstm_forward(p, x, n_heads, state=None, compute_dtype=jnp.bfloat16):
+    """sLSTM over a sequence via lax.scan (inherently sequential).
+    x: (B, T, D). state: (c, n, m, h) each (B, H, hd)."""
+    B, T, D = x.shape
+    H = n_heads
+    hd = D // H
+    if state is None:
+        z = jnp.zeros((B, H, hd), jnp.float32)
+        state = (z, z, jnp.zeros((B, H, hd), jnp.float32), z)
+    xin = (
+        x.astype(compute_dtype) @ p["w_in"].astype(compute_dtype)
+        + p["b"].astype(compute_dtype)
+    )                              # (B, T, 4D) kept bf16 (scan xs memory)
+    xin = hint(xin, "dp", None, "model")
+    r = p["r"].astype(jnp.float32)
+
+    @jax.checkpoint
+    def step(st, xt):
+        c, n, m, h = st
+        rec = jnp.einsum("bhd,hdk->bhk", h, r)            # (B, H, 4hd)
+        pre = xt.astype(jnp.float32).reshape(B, H, 4 * hd) + rec
+        i_pre, f_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)
+        m_new = jnp.maximum(f_pre + m, i_pre)
+        i = jnp.exp(i_pre - m_new)
+        f = jnp.exp(f_pre + m - m_new)
+        c_new = f * c + i * jnp.tanh(z_pre)
+        n_new = f * n + i
+        h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
+        hb = lambda a: hint(a, "dp", None, "model")
+        return (hb(c_new), hb(n_new), hb(m_new), hb(h_new)), hb(h_new)
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(xin, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, T, D)
+    h = rms_norm(h, p["ln_inner"])
+    out = h.astype(compute_dtype) @ p["w_out"].astype(compute_dtype)
+    return out.astype(x.dtype), state
+
+
+def slstm_step(p, x, n_heads, state, compute_dtype=jnp.bfloat16):
+    out, state = slstm_forward(p, x, n_heads, state, compute_dtype)
+    return out, state

@@ -1,0 +1,194 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+Hardware model (TPU v5e):
+  peak bf16 compute   197 TFLOP/s per chip
+  HBM bandwidth       819 GB/s per chip
+  ICI bandwidth       ~50 GB/s per link
+
+Terms (seconds, per step, per chip — ``cost_analysis`` of an SPMD-partitioned
+module reports *per-device* flops/bytes, verified in tests):
+
+  compute    = HLO_flops_per_device / peak
+  memory     = HLO_bytes_per_device / hbm_bw
+  collective = collective_bytes_per_device / ici_bw
+
+Collective bytes are not in cost_analysis: we parse the partitioned HLO and
+sum result-shape sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops (async *-start variants counted once).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result sizes per collective kind from (partitioned) HLO text."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s+(.\S.*?)\s+(" + "|".join(_COLLECTIVES) + r")(-start)?\(", line)
+        if not m:
+            continue
+        kind = m.group(2)
+        # skip the matching *-done ops (they repeat the shape)
+        if re.search(r"(" + "|".join(_COLLECTIVES) + r")-done\(", line):
+            continue
+        out[kind] += _shape_bytes(m.group(1))
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collectives_by_kind: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float                 # analytic useful flops (global)
+    model_flops_per_device: float
+    useful_ratio: float                # model_flops / (HLO flops * chips)
+    step_time_s: float                 # max of the three terms
+    roofline_frac: float               # useful compute time / bound term
+    memory_per_device_bytes: Optional[float] = None
+    notes: str = ""
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def analyze(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    n_chips: int,
+    flops: float,
+    byts: float,
+    colls: Dict[str, float],
+    model_flops: float,
+    memory_stats=None,
+    notes: str = "",
+) -> Roofline:
+    cbytes = float(sum(colls.values()))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = cbytes / ICI_BW
+    terms = {
+        "compute": compute_s,
+        "memory": memory_s,
+        "collective": collective_s,
+    }
+    bottleneck = max(terms, key=terms.get)
+    mf_dev = model_flops / n_chips
+    useful = model_flops / max(flops * n_chips, 1.0)
+    step = max(terms.values())
+    # fraction of the roofline: time the useful flops *need* vs time we take
+    frac = (mf_dev / PEAK_FLOPS) / step if step > 0 else 0.0
+    mem_b = None
+    if memory_stats is not None:
+        mem_b = (
+            memory_stats.argument_size_in_bytes
+            + memory_stats.output_size_in_bytes
+            + memory_stats.temp_size_in_bytes
+            - memory_stats.alias_size_in_bytes
+        )
+    return Roofline(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        n_chips=n_chips,
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes_per_device=cbytes,
+        collectives_by_kind={k: int(v) for k, v in colls.items()},
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        model_flops_per_device=mf_dev,
+        useful_ratio=useful,
+        step_time_s=step,
+        roofline_frac=frac,
+        memory_per_device_bytes=mem_b,
+        notes=notes,
+    )
+
+
+def model_flops_for(cfg, shape_spec, n_params_active: int) -> float:
+    """Analytic 'useful' flops per step.
+
+    train:   6 * N_active * tokens  (fwd 2ND + bwd 4ND)
+    prefill: 2 * N_active * tokens + causal attention term
+    decode:  2 * N_active * B      + KV attention term (dominant at 32k+)
+    """
+    B, S = shape_spec.global_batch, shape_spec.seq_len
+    N = n_params_active
+
+    # attention context flops (QK^T + PV = 4 * Hq * hd * ctx per token-layer)
+    attn = 0.0
+    for pattern, reps in cfg.stages:
+        for kind in pattern:
+            if kind not in ("attn", "win", "xattn"):
+                continue
+            w = cfg.window if kind == "win" else None
+            Hq, hd = cfg.spec_heads, cfg.head_dim
+            if shape_spec.kind == "train" or shape_spec.kind == "prefill":
+                # sum over positions of min(pos, window or pos)
+                if w is None:
+                    ctx_sum = S * (S + 1) / 2
+                else:
+                    ctx_sum = w * S - w * (w - 1) / 2 if S > w else S * (S + 1) / 2
+                mult = 3 if shape_spec.kind == "train" else 1
+                attn += reps * mult * B * 4 * Hq * hd * ctx_sum
+            else:
+                ctx = min(S, w) if w else S
+                attn += reps * B * 4 * Hq * hd * ctx
+
+    if shape_spec.kind == "train":
+        return 6.0 * N * B * S + attn
+    if shape_spec.kind == "prefill":
+        return 2.0 * N * B * S + attn
+    return 2.0 * N * B + attn

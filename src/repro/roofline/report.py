@@ -1,0 +1,109 @@
+"""Render results/dryrun/*.json into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m repro.roofline.report results/dryrun
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def fmt_b(x):
+    for unit, div in (("GiB", 2**30), ("MiB", 2**20), ("KiB", 2**10)):
+        if x >= div:
+            return f"{x/div:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def load(outdir: Path, mesh=None, tag=None):
+    recs = []
+    for f in sorted(outdir.glob("*.json")):
+        parts = f.stem.split("__")
+        if mesh and (len(parts) < 3 or parts[2] != mesh):
+            continue
+        has_tag = len(parts) > 3
+        if (tag is None) != (not has_tag):
+            continue
+        if tag is not None and (not has_tag or parts[3] != tag):
+            continue
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+               "long_500k": 3}
+
+
+def roofline_table(recs) -> str:
+    rows = [
+        "| arch | shape | compute | memory | collective | bottleneck | "
+        "step | model GFLOPs/dev | useful | roofline frac | mem/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    recs = sorted(
+        recs,
+        key=lambda r: (r["roofline"]["arch"],
+                       SHAPE_ORDER.get(r["roofline"]["shape"], 9)),
+    )
+    for rec in recs:
+        r = rec["roofline"]
+        mem = rec["info"]["arg_bytes"] + rec["info"]["temp_bytes"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['bottleneck']}** | {fmt_s(r['step_time_s'])} | "
+            f"{r['model_flops_per_device']/1e9:.1f} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} | "
+            f"{fmt_b(mem)} |"
+        )
+    return "\n".join(rows)
+
+
+def dryrun_table(recs) -> str:
+    rows = [
+        "| arch | shape | mesh | compile | args/dev | temp/dev | "
+        "AG | AR | RS | A2A | CP |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    recs = sorted(
+        recs,
+        key=lambda r: (r["roofline"]["mesh"], r["roofline"]["arch"],
+                       SHAPE_ORDER.get(r["roofline"]["shape"], 9)),
+    )
+    for rec in recs:
+        r = rec["roofline"]
+        i = rec["info"]
+        c = r["collectives_by_kind"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{i['compile_s']:.0f}s | {fmt_b(i['arg_bytes'])} | "
+            f"{fmt_b(i['temp_bytes'])} | {fmt_b(c['all-gather'])} | "
+            f"{fmt_b(c['all-reduce'])} | {fmt_b(c['reduce-scatter'])} | "
+            f"{fmt_b(c['all-to-all'])} | {fmt_b(c['collective-permute'])} |"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    outdir = Path(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    for mesh in ("single", "multi"):
+        recs = load(outdir, mesh)
+        if not recs:
+            continue
+        print(f"\n### Roofline — {mesh} mesh ({len(recs)} cells)\n")
+        print(roofline_table(recs))
+        print(f"\n### Dry-run artifacts — {mesh} mesh\n")
+        print(dryrun_table(recs))
+
+
+if __name__ == "__main__":
+    main()

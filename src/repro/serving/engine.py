@@ -1,0 +1,211 @@
+"""Continuous-batching decode engine with LeanAttention scheduling.
+
+The engine owns a fixed pool of sequence slots (the batch), admits requests
+as slots free up (Orca-style continuous batching), and runs one fused decode
+step per tick. Context lengths are *heterogeneous* — exactly the ragged
+regime of paper §IV-C/Fig. 6 — and every tick the host builds a fresh
+stream-K LeanSchedule over the ragged (slot, head, context) workload, so
+every worker receives the same number of LeanTiles regardless of raggedness.
+
+Attention backends:
+  * 'lean'   — the Pallas stream-K kernel (interpret=True on CPU),
+  * 'fixed'  — the FlashDecoding fixed-split baseline kernel,
+  * 'ref'    — pure-jnp oracle (default on CPU: fast under jit).
+
+All backends compute exact attention; the schedule is what differs. The
+benchmark harness compares their modeled occupancy/latency.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.attention import mha_decode_ref
+from repro.kernels import flash_decode, lean_decode
+from repro.models import ModelConfig, decode_step, init_cache, prefill
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (L,) int32
+    max_new_tokens: int
+    generated: List[int] = field(default_factory=list)
+
+    @property
+    def done(self):
+        return len(self.generated) >= self.max_new_tokens
+
+
+@dataclass
+class EngineStats:
+    ticks: int = 0
+    tokens_generated: int = 0
+    prefills: int = 0
+    schedules: List[dict] = field(default_factory=list)
+
+
+class DecodeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        max_batch: int = 4,
+        cache_len: int = 256,
+        attn_backend: str = "ref",
+        num_workers: int = 16,
+        rng_seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.attn_backend = attn_backend
+        self.num_workers = num_workers
+        self.stats = EngineStats()
+
+        self.cache = init_cache(cfg, max_batch, cache_len)
+        self.ctx_lens = np.zeros(max_batch, dtype=np.int64)   # per-slot
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.queue: List[Request] = []
+        self.next_tokens = np.zeros((max_batch, 1), dtype=np.int32)
+
+        self._jit_decode = jax.jit(self._decode_fn)
+        self._jit_prefill_slot = jax.jit(
+            self._prefill_fn, static_argnames=("plen",)
+        )
+
+    # ------------------------------------------------------------- attn fn
+    def _make_attn_fn(self):
+        backend = self.attn_backend
+        if backend == "ref":
+            return None
+        ctx = [int(c) + 1 for c in self.ctx_lens]  # +1: token being written
+
+        def attn_fn(q, k, v, ctx_arr):
+            # host-known ragged lengths drive the schedule; clamp to cache
+            lens = [min(c, k.shape[2]) for c in ctx]
+            if backend == "lean":
+                return lean_decode(
+                    q, k, v, lens, num_workers=self.num_workers,
+                    interpret=True,
+                )
+            return flash_decode(q, k, v, lens, interpret=True)
+
+        return attn_fn
+
+    # ------------------------------------------------------------- jit fns
+    def _decode_fn(self, params, cache, tokens, ctx_lens):
+        # ragged decode: per-slot context lengths drive RoPE positions,
+        # cache write offsets, and attention masks
+        cur = jnp.max(ctx_lens)
+        logits, new_cache = decode_step(
+            params, self.cfg, cache, tokens, cur, ctx_lens=ctx_lens
+        )
+        return logits, new_cache
+
+    def _prefill_fn(self, params, tokens, plen):
+        logits, cache, cur = prefill(
+            params, self.cfg, tokens, cache_len=self.cache_len
+        )
+        return logits, cache
+
+    # ------------------------------------------------------------- public
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.max_batch):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[slot] = req
+                plen = len(req.prompt)
+                toks = jnp.asarray(req.prompt[None, :], jnp.int32)
+                logits, cache1 = self._jit_prefill_slot(
+                    self.params, toks, plen=plen
+                )
+                # copy slot-0 of the fresh cache into our slot
+                self.cache = _copy_slot(self.cache, cache1, slot)
+                self.ctx_lens[slot] = plen
+                nxt = int(jnp.argmax(logits[0]))
+                req.generated.append(nxt)
+                self.next_tokens[slot, 0] = nxt
+                self.stats.prefills += 1
+
+    def tick(self) -> Dict[int, int]:
+        """Admit + one decode step for all active slots. Returns
+        {uid: new_token}."""
+        self._admit()
+        active = [s for s in range(self.max_batch) if self.slot_req[s]]
+        if not active:
+            return {}
+        # record the lean schedule for this ragged tick (benchmark hook)
+        lens = [int(self.ctx_lens[s]) + 1 for s in active]
+        from repro.core.leantile import make_schedule, default_tile_size
+
+        sched = make_schedule(
+            lens, self.cfg.n_kv_heads,
+            min(default_tile_size(self.cfg.head_dim), max(8, max(lens))),
+            self.num_workers,
+        )
+        self.stats.schedules.append(
+            {
+                "lens": lens,
+                "total_tiles": sched.total_tiles,
+                "tiles_per_worker": sched.tiles_per_worker,
+                "pieces": sched.num_pieces,
+            }
+        )
+
+        attn_fn = self._make_attn_fn()
+        if attn_fn is None:
+            logits, self.cache = self._jit_decode(
+                self.params, self.cache,
+                jnp.asarray(self.next_tokens),
+                jnp.asarray(self.ctx_lens, jnp.int32),
+            )
+        else:
+            # kernel-backed path (schedule depends on host lens -> no jit of
+            # the outer step; the kernel itself is jit/pallas)
+            logits, self.cache = decode_step(
+                self.params, self.cfg, self.cache,
+                jnp.asarray(self.next_tokens),
+                jnp.asarray(int(self.ctx_lens.max())),
+                attn_fn=attn_fn,
+                ctx_lens=jnp.asarray(self.ctx_lens, jnp.int32),
+            )
+        out = {}
+        for s in active:
+            req = self.slot_req[s]
+            nxt = int(jnp.argmax(logits[s]))
+            req.generated.append(nxt)
+            self.next_tokens[s, 0] = nxt
+            self.ctx_lens[s] += 1
+            out[req.uid] = nxt
+            self.stats.tokens_generated += 1
+            if req.done or self.ctx_lens[s] >= self.cache_len - 1:
+                self.slot_req[s] = None
+                self.ctx_lens[s] = 0
+        self.stats.ticks += 1
+        return out
+
+    def run_to_completion(self, max_ticks: int = 10_000):
+        while (self.queue or any(self.slot_req)) and self.stats.ticks < max_ticks:
+            self.tick()
+        return self.stats
+
+
+def _copy_slot(cache, cache1, slot):
+    """Copy batch row 0 of cache1 into row ``slot`` of cache."""
+    def cp(dst, src):
+        return dst.at[:, slot].set(src[:, 0].astype(dst.dtype))
+
+    return jax.tree.map(
+        lambda d, s: cp(d, s), cache, cache1
+    )

@@ -1,0 +1,77 @@
+"""Sharding policy + hints unit tests (no multi-device needed: hints are
+no-ops without an installed mesh; spec logic is pure)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed.hints import activation_mesh, hint
+from repro.distributed.sharding import (
+    best_dp_spec,
+    choose_layout,
+    decode_plan,
+    param_specs,
+)
+from repro.models import init_params
+
+
+class FakeMesh:
+    """Duck-typed mesh for pure spec logic."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_hint_is_identity_without_mesh():
+    x = jnp.ones((4, 8))
+    y = hint(x, "dp", "model")
+    assert y is x
+
+
+def test_best_dp_spec_fallbacks():
+    assert best_dp_spec(256, MESH, "2d") == "data"
+    assert best_dp_spec(256, MESH, "dp_only") == ("data", "model")
+    assert best_dp_spec(128, MESH, "dp_only") == "data"  # 128 % 256 != 0
+    assert best_dp_spec(1, MESH, "2d") is None
+    assert best_dp_spec(512, MESH_POD, "2d") == ("pod", "data")
+
+
+def test_choose_layout_by_size():
+    assert choose_layout(get_config("xlstm-350m")) == "dp_only"
+    assert choose_layout(get_config("yi-34b")) == "2d"
+
+
+def test_decode_plan_modes():
+    # musicgen kv=32 divides 16 -> classic heads plan
+    p = decode_plan(get_config("musicgen-large"), MESH, 128, "2d")
+    assert p["mode"] == "heads"
+    # yi kv=8 does not divide -> KV sequence shards over model
+    p = decode_plan(get_config("yi-34b"), MESH, 128, "2d")
+    assert p["mode"] == "seq_model"
+    # batch=1 long context -> full-mesh sequence parallelism
+    p = decode_plan(get_config("gemma3-4b"), MESH, 1, "2d")
+    assert p["mode"] == "seq_all"
+    assert p["seq_axes"] == ("data", "model")
+
+
+def test_param_specs_shapes_and_modes():
+    cfg = get_config("mistral-nemo-12b")
+    sds = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    specs = param_specs(sds, MESH, cfg)
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    by_path = {"/".join(str(getattr(k, "key", getattr(k, "idx", ""))) for k in kp): v
+               for kp, v in flat}
+    assert by_path["embed"] == P("model", "data")
+    # every spec rank matches its leaf rank
+    leaves = jax.tree_util.tree_flatten_with_path(sds)[0]
+    for (kp, leaf), (_, spec) in zip(leaves, flat):
+        assert len(spec) == len(leaf.shape)
+    # serve mode strips the FSDP axis
+    serve = param_specs(sds, MESH, cfg, mode="serve")
+    for s in jax.tree.leaves(serve, is_leaf=lambda x: isinstance(x, P)):
+        assert "data" not in [a for a in s if isinstance(a, str)]

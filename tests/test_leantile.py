@@ -1,0 +1,99 @@
+"""Hypothesis property tests for the stream-K LeanTile scheduler."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.leantile import (
+    LeanSchedule,
+    default_tile_size,
+    fixed_split_factor,
+    make_schedule,
+)
+
+
+@st.composite
+def problems(draw):
+    B = draw(st.integers(1, 6))
+    H = draw(st.integers(1, 8))
+    lens = draw(st.lists(st.integers(1, 2000), min_size=B, max_size=B))
+    tile = draw(st.sampled_from([16, 64, 128, 256]))
+    G = draw(st.integers(1, 64))
+    return lens, H, tile, G
+
+
+@settings(max_examples=200, deadline=None)
+@given(problems())
+def test_schedule_invariants(problem):
+    lens, H, tile, G = problem
+    s = make_schedule(lens, H, tile, G)
+
+    # 1. exact coverage: every (segment, tile) exactly once
+    v = s.iter_valid == 1
+    pairs = set(zip(s.iter_seg[v].tolist(), s.iter_tile[v].tolist()))
+    expect = set()
+    for b, L in enumerate(lens):
+        tiles = -(-L // tile)
+        for h in range(H):
+            for j in range(tiles):
+                expect.add((b * H + h, j))
+    assert pairs == expect
+    assert int(v.sum()) == s.total_tiles == len(expect)
+
+    # 2. stream-K equalized loads: per-worker valid tiles differ by <= T
+    #    and no worker exceeds tiles_per_worker (paper Eq. 2)
+    T = s.tiles_per_worker
+    counts = np.zeros(s.num_workers, dtype=int)
+    for g in range(s.num_workers):
+        counts[g] = int(v[g * T : (g + 1) * T].sum())
+    assert counts.max() <= T
+    busy = counts[counts > 0]
+    if len(busy) > 1:
+        assert busy[:-1].min() == T  # all but the tail worker are full
+
+    # 3. pieces: bound P <= S + G - 1; piece_seg sorted (contiguity)
+    assert s.num_pieces <= s.num_segments + s.num_workers - 1
+    assert np.all(np.diff(s.piece_seg) >= 0)
+
+    # 4. piece flags: each piece has exactly one first and one last iter
+    for p in range(s.num_pieces):
+        mask = (s.iter_piece == p) & v
+        assert s.iter_first[mask].sum() == 1
+        assert s.iter_last[mask].sum() == 1
+
+    # 5. every segment has exactly one host piece (its tile-0 piece)
+    hosts = s.piece_host.astype(bool)
+    assert hosts.sum() == s.num_segments
+    assert set(s.piece_seg[hosts].tolist()) == set(range(s.num_segments))
+
+    # 6. tile token counts sum to total context work
+    assert int(s.iter_len[v].sum()) == sum(lens) * H
+
+
+@settings(max_examples=50, deadline=None)
+@given(problems())
+def test_tile_lengths(problem):
+    lens, H, tile, G = problem
+    s = make_schedule(lens, H, tile, G)
+    v = s.iter_valid == 1
+    # every tile except the last of a segment is full
+    for i in np.flatnonzero(v):
+        seg, t, ln = s.iter_seg[i], s.iter_tile[i], s.iter_len[i]
+        L = s.seg_len[seg]
+        tiles = -(-L // tile)
+        if t < tiles - 1:
+            assert ln == tile
+        else:
+            assert ln == L - t * tile
+
+
+def test_default_tile_size_matches_paper():
+    # paper §IV-B: 256 tokens for head dim 64, 128 for head dim 128
+    assert default_tile_size(64) == 256
+    assert default_tile_size(128) == 128
+
+
+def test_fixed_split_factor_heuristic():
+    # splits grow until segments*s covers the workers
+    assert fixed_split_factor(4096, 2, 256, 8) == 4
+    assert fixed_split_factor(4096, 16, 256, 8) == 1
+    # capped by available tiles
+    assert fixed_split_factor(256, 1, 256, 8) == 1

@@ -1,0 +1,122 @@
+"""Property tests for the paper's central theorem (§IV-A): softmax
+re-scaling is an associative, exact reduction operator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.attention import chunk_partial, mha_decode_ref
+from repro.core.merge import (
+    AttnPartial,
+    finalize,
+    identity_like,
+    merge,
+    merge_n,
+    segment_merge,
+    tree_merge,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_partial(rng, g=2, d=8, lo=-8.0, hi=8.0):
+    return AttnPartial(
+        o=jnp.asarray(rng.uniform(-2, 2, (g, d)), jnp.float32),
+        m=jnp.asarray(rng.uniform(lo, hi, (g,)), jnp.float32),
+        l=jnp.asarray(rng.uniform(0.1, 50.0, (g,)), jnp.float32),
+    )
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_merge_associative(seed):
+    """f(f(x,y),z) == f(x,f(y,z)) — the paper's proof, numerically."""
+    rng = np.random.default_rng(seed)
+    x, y, z = (random_partial(rng) for _ in range(3))
+    left = merge(merge(x, y), z)
+    right = merge(x, merge(y, z))
+    np.testing.assert_allclose(left.m, right.m, rtol=1e-6)
+    np.testing.assert_allclose(left.l, right.l, rtol=1e-5)
+    np.testing.assert_allclose(left.o, right.o, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 9))
+def test_merge_order_invariance(seed, n):
+    """Any grouping/permutation of chunk merges gives the same result."""
+    rng = np.random.default_rng(seed)
+    parts = [random_partial(rng) for _ in range(n)]
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *parts)
+    a = merge_n(stacked)
+    b = tree_merge(stacked)
+    seq = parts[0]
+    for p in parts[1:]:
+        seq = merge(seq, p)
+    for other in (b, seq):
+        np.testing.assert_allclose(
+            finalize(a), finalize(other), rtol=2e-5, atol=2e-5
+        )
+
+
+def test_identity_element():
+    rng = np.random.default_rng(0)
+    x = random_partial(rng)
+    e = identity_like(x.o.shape)
+    for m in (merge(e, x), merge(x, e)):
+        np.testing.assert_allclose(m.o, x.o, rtol=1e-6)
+        np.testing.assert_allclose(m.l, x.l, rtol=1e-6)
+    ee = merge(e, e)  # no NaNs from -inf arithmetic
+    assert not np.any(np.isnan(ee.o))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(0, 2**31 - 1),
+    st.lists(st.integers(1, 37), min_size=1, max_size=6),
+)
+def test_unequal_chunks_recover_exact_attention(seed, chunk_lens):
+    """Splitting KV into arbitrary unequal chunks + merge == full softmax
+    attention (the property LeanAttention's unequal splits rely on)."""
+    rng = np.random.default_rng(seed)
+    d, g = 8, 2
+    S = sum(chunk_lens)
+    # one kv head, GQA group g
+    q = jnp.asarray(rng.standard_normal((1, 1, g, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, S, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 1, S, d)), jnp.float32)
+    scale = 1.0 / np.sqrt(d)
+
+    acc = None
+    off = 0
+    for c in chunk_lens:
+        part = chunk_partial(q, k[:, :, off : off + c],
+                             v[:, :, off : off + c], scale)
+        acc = part if acc is None else merge(acc, part)
+        off += c
+    got = finalize(acc)
+    ref = mha_decode_ref(q.reshape(1, g, d), k, v)
+    np.testing.assert_allclose(
+        np.asarray(got).reshape(g, d), np.asarray(ref).reshape(g, d),
+        rtol=2e-5, atol=2e-5,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 5), st.integers(2, 20))
+def test_segment_merge_matches_loop(seed, n_seg, n_pieces):
+    rng = np.random.default_rng(seed)
+    parts = [random_partial(rng) for _ in range(n_pieces)]
+    seg_ids = rng.integers(0, n_seg, n_pieces)
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *parts)
+    out = segment_merge(stacked, jnp.asarray(seg_ids), n_seg)
+    for s in range(n_seg):
+        idx = [i for i in range(n_pieces) if seg_ids[i] == s]
+        if not idx:
+            assert np.all(np.isinf(np.asarray(out.m[s])))
+            continue
+        acc = parts[idx[0]]
+        for i in idx[1:]:
+            acc = merge(acc, parts[i])
+        np.testing.assert_allclose(out.l[s], acc.l, rtol=2e-5)
+        np.testing.assert_allclose(out.o[s], acc.o, rtol=2e-5, atol=2e-5)

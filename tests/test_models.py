@@ -1,0 +1,126 @@
+"""Per-architecture smoke tests: reduced configs of the same family run one
+forward/train step + one prefill/decode step on CPU; shapes + finiteness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import (
+    count_active_params,
+    count_params,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+from repro.training.optimizer import OptConfig, adamw_init
+from repro.training.train_loop import make_train_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _batch(cfg, B=2, L=24, seed=1):
+    toks = jax.random.randint(
+        jax.random.PRNGKey(seed), (B, L), 0, cfg.vocab_size
+    )
+    batch = {"tokens": toks}
+    if cfg.cross_kv_len:
+        batch["img_emb"] = (
+            jax.random.normal(
+                jax.random.PRNGKey(seed + 1), (B, cfg.cross_kv_len, cfg.d_model)
+            )
+            * 0.02
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, OptConfig(warmup_steps=1)))
+    batch = _batch(cfg)
+    params2, opt2, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    delta = sum(
+        float(jnp.sum(jnp.abs(a - b)))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2))
+    )
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode_consistency(arch):
+    """prefill(L) + decode_step == forward(L+1) at the last position."""
+    cfg = get_smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    toks = batch["tokens"]
+    img = batch.get("img_emb")
+
+    logits_pf, cache, cur = jax.jit(
+        lambda p, t: prefill(p, cfg, t, cache_len=40, img_emb=img)
+    )(params, toks)
+    assert logits_pf.shape == (2, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits_pf)).all()
+
+    nxt = jnp.argmax(logits_pf, -1)[:, None]
+    logits_dec, cache2 = jax.jit(
+        lambda p, c, t, n: decode_step(p, cfg, c, t, n, img_emb=img)
+    )(params, cache, nxt, cur)
+    assert np.isfinite(np.asarray(logits_dec)).all()
+
+    full, _ = jax.jit(lambda p, t: forward(p, cfg, t, img_emb=img))(
+        params, jnp.concatenate([toks, nxt], 1)
+    )
+    err = float(jnp.max(jnp.abs(full[:, -1] - logits_dec)))
+    mag = float(jnp.max(jnp.abs(full[:, -1]))) + 1e-6
+    assert err / mag < 0.05, f"{arch}: decode vs forward rel err {err/mag}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_builds(arch):
+    """The FULL config instantiates abstractly (eval_shape only)."""
+    cfg = get_config(arch)
+    sds = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    n = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(sds))
+    # the BUILT model carries padded heads (sharding); compare against the
+    # analytic count at the padded width, and check the true-spec count
+    # (used for 6ND) is smaller by exactly the padding
+    padded = dataclasses.replace(cfg, true_n_heads=0)
+    analytic = count_params(padded)
+    assert abs(n - analytic) / analytic < 0.02, (n, analytic)
+    assert count_params(cfg) <= analytic
+    assert count_active_params(cfg) <= count_params(cfg)
+
+
+def test_decode_window_ring_buffer():
+    """Sliding-window cache: decoding past the window stays exact."""
+    cfg = get_smoke_config("gemma3-4b")
+    cfg = dataclasses.replace(cfg, window=8)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    L = 20
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, L), 0, cfg.vocab_size)
+    # prefill L then decode 5 more; compare against pure forward each step
+    logits_pf, cache, cur = jax.jit(
+        lambda p, t: prefill(p, cfg, t, cache_len=40)
+    )(params, toks)
+    seq = toks
+    nxt = jnp.argmax(logits_pf, -1)[:, None]
+    dec = jax.jit(lambda p, c, t, n: decode_step(p, cfg, c, t, n))
+    for i in range(5):
+        seq = jnp.concatenate([seq, nxt], 1)
+        logits_dec, cache = dec(params, cache, nxt, cur + i)
+        full, _ = jax.jit(lambda p, t: forward(p, cfg, t))(params, seq)
+        err = float(jnp.max(jnp.abs(full[:, -1] - logits_dec)))
+        mag = float(jnp.max(jnp.abs(full[:, -1]))) + 1e-6
+        assert err / mag < 0.05
+        nxt = jnp.argmax(logits_dec, -1)[:, None]

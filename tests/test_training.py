@@ -1,0 +1,116 @@
+"""Training substrate: optimization actually learns, checkpoint round-trips
+exactly, grad compression converges, data pipeline is deterministic."""
+import shutil
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, batch_at
+from repro.models import ModelConfig, init_params
+from repro.training.checkpoint import (
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.training.optimizer import OptConfig, adamw_init
+from repro.training.train_loop import make_train_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = ModelConfig(
+    name="tiny", d_model=32, n_layers=2, n_heads=2, n_kv_heads=2,
+    head_dim=16, d_ff=64, vocab_size=64, stages=((("attn",), 2),),
+    attn_q_chunk=0, loss_chunk=0,
+)
+
+
+def _run(steps, compress=False, seed=0, params=None, opt=None, start=0):
+    dcfg = DataConfig(vocab_size=64, seq_len=32, global_batch=8, seed=seed)
+    if params is None:
+        params = init_params(jax.random.PRNGKey(0), TINY)
+        opt = adamw_init(params)
+    step = jax.jit(
+        make_train_step(TINY, OptConfig(lr=1e-2, warmup_steps=2),
+                        compress_grads=compress)
+    )
+    losses = []
+    for i in range(start, start + steps):
+        b = {k: jnp.asarray(v) for k, v in batch_at(dcfg, i).items()}
+        params, opt, m = step(params, opt, b)
+        losses.append(float(m["loss"]))
+    return params, opt, losses
+
+
+def test_loss_decreases():
+    _, _, losses = _run(30)
+    assert losses[-1] < losses[0] * 0.9, losses[::10]
+
+
+def test_grad_compression_converges():
+    """int8 error-free-ish compression still trains (within 10% of f32)."""
+    _, _, base = _run(30)
+    _, _, comp = _run(30, compress=True)
+    assert comp[-1] < base[0] * 0.95
+    assert abs(comp[-1] - base[-1]) < 0.35 * abs(base[0] - base[-1]) + 0.1
+
+
+def test_data_pipeline_deterministic_and_sharded():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=8, seed=3)
+    a = batch_at(cfg, 7)
+    b = batch_at(cfg, 7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = batch_at(cfg, 8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # shards tile the global batch exactly
+    shards = [batch_at(cfg, 7, s, 4)["tokens"] for s in range(4)]
+    np.testing.assert_array_equal(np.concatenate(shards), a["tokens"])
+
+
+def test_checkpoint_roundtrip_and_resume_exact():
+    tmp = Path(tempfile.mkdtemp())
+    try:
+        # train 5, checkpoint, train 5 more
+        p5, o5, l5 = _run(5)
+        save_checkpoint(tmp, 5, {"params": p5, "opt": o5},
+                        extra={"data_step": 5})
+        _, _, l_cont = _run(5, params=p5, opt=o5, start=5)
+
+        # restore and continue — identical losses
+        state_like = {"params": p5, "opt": o5}
+        restored, extra = restore_checkpoint(tmp, state_like)
+        assert extra["data_step"] == 5
+        _, _, l_rest = _run(5, params=restored["params"],
+                            opt=restored["opt"], start=5)
+        np.testing.assert_allclose(l_cont, l_rest, rtol=0, atol=0)
+    finally:
+        shutil.rmtree(tmp)
+
+
+def test_checkpoint_retention_and_latest():
+    tmp = Path(tempfile.mkdtemp())
+    try:
+        p = init_params(jax.random.PRNGKey(0), TINY)
+        for s in (1, 2, 3, 4):
+            save_checkpoint(tmp, s, {"p": p}, keep=2)
+        steps = sorted(d.name for d in tmp.glob("step_*"))
+        assert steps == ["step_00000003", "step_00000004"]
+        assert latest_step(tmp) == 4
+    finally:
+        shutil.rmtree(tmp)
+
+
+def test_checkpoint_async_save():
+    tmp = Path(tempfile.mkdtemp())
+    try:
+        p = init_params(jax.random.PRNGKey(0), TINY)
+        t = save_checkpoint(tmp, 1, {"p": p}, block=False)
+        t.join(timeout=30)
+        restored, _ = restore_checkpoint(tmp, {"p": p})
+        for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(restored["p"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    finally:
+        shutil.rmtree(tmp)
