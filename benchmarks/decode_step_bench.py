@@ -1,0 +1,167 @@
+"""Decode fast-path benchmark: jitted+cached engine vs the legacy per-tick
+path, machine-readable across PRs.
+
+Measures, on the CPU-interpret smoke config (the CI-reproducible proxy for
+the launcher/host overhead the fast path removes):
+
+  * ticks/sec of the fast path (schedule cache + whole-step jit + fused
+    kernel) vs the legacy baseline (fresh schedule + unjitted outer step),
+  * schedule-cache hit rate at steady state,
+  * host-ms vs device-ms per tick (device = replaying the jitted step with
+    fixed inputs; host = everything else the tick does).
+
+Writes ``BENCH_decode_step.json`` (``--out``) so the perf trajectory is
+diffable across PRs, and appends CSV rows for ``benchmarks.run``.
+
+  PYTHONPATH=src python -m benchmarks.decode_step_bench --ticks 32
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+
+def _mk_engine(cfg, params, backend, **kw):
+    from repro.serving.engine import DecodeEngine
+
+    return DecodeEngine(
+        cfg, params, max_batch=4, cache_len=64, attn_backend=backend,
+        num_workers=8, **kw,
+    )
+
+
+def _feed(eng, cfg, n=6, seed=0):
+    import numpy as np
+
+    from repro.serving.engine import Request
+
+    rng = np.random.default_rng(seed)
+    for uid in range(n):
+        eng.submit(Request(
+            uid=uid,
+            prompt=rng.integers(0, cfg.vocab_size, 8 + 5 * (uid % 3)),
+            max_new_tokens=1_000_000,   # keep slots occupied: steady state
+        ))
+
+
+def _ticks_per_sec(eng, cfg, n_ticks, warmup=3):
+    _feed(eng, cfg)
+    for _ in range(warmup):
+        eng.tick()
+    t0 = time.perf_counter()
+    for _ in range(n_ticks):
+        eng.tick()
+    dt = time.perf_counter() - t0
+    return n_ticks / dt, dt / n_ticks
+
+
+def _device_ms_per_tick(eng, n_reps=8):
+    """Replay the jitted kernel step with fixed inputs: pure device time
+    (trace is warm, schedule cached)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.leantile import fixed_split_factor
+
+    sched = eng._tick_schedule()
+    tokens = jnp.asarray(eng.next_tokens)
+    ctx = jnp.asarray(eng.ctx_lens, jnp.int32)
+    num_splits = fixed_split_factor(
+        int(sched.seg_len.max(initial=1)), sched.num_segments, eng.tile,
+        eng.num_workers,
+    )
+
+    def step():
+        logits, new_cache = eng._jit_kernel_step(
+            eng.params, eng.cache, tokens, ctx,
+            backend=eng.attn_backend, sched=sched, num_splits=num_splits,
+            fused=eng.fused, interpret=eng.interpret,
+        )
+        eng.cache = new_cache
+        return jax.block_until_ready(logits)
+
+    step()                                   # warm
+    t0 = time.perf_counter()
+    for _ in range(n_reps):
+        step()
+    return (time.perf_counter() - t0) * 1e3 / n_reps
+
+
+def run_decode_step(n_ticks: int = 24, out_path: str = "BENCH_decode_step.json",
+                    rows: list | None = None) -> dict:
+    import jax
+
+    jax.config.update("jax_platform_name", "cpu")
+
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+
+    cfg = get_smoke_config("mistral-nemo-12b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    result: dict = {"config": {
+        "arch": "mistral-nemo-12b(smoke)", "max_batch": 4, "cache_len": 64,
+        "num_workers": 8, "ticks": n_ticks, "platform": "cpu-interpret",
+    }}
+
+    # fast path (lean fused) — also collect host/device split
+    eng_fast = _mk_engine(cfg, params, "lean", use_fast_path=True, fused=True)
+    tps_fast, s_per_tick = _ticks_per_sec(eng_fast, cfg, n_ticks)
+    dev_ms = _device_ms_per_tick(eng_fast)
+    cache_stats = eng_fast.sched_cache.stats.as_dict()
+
+    # legacy baseline (pre-PR behavior: per-tick schedule, unjitted step)
+    eng_legacy = _mk_engine(cfg, params, "lean", use_fast_path=False)
+    n_legacy = max(4, n_ticks // 4)          # it is slow; sample fewer ticks
+    tps_legacy, _ = _ticks_per_sec(eng_legacy, cfg, n_legacy, warmup=1)
+
+    # ref backend fast path for context (jnp attention, always jitted)
+    eng_ref = _mk_engine(cfg, params, "ref", use_fast_path=True)
+    tps_ref, _ = _ticks_per_sec(eng_ref, cfg, n_ticks)
+
+    result["decode_step"] = {
+        "ticks_per_sec_fast": tps_fast,
+        "ticks_per_sec_legacy": tps_legacy,
+        "ticks_per_sec_ref_backend": tps_ref,
+        "speedup_vs_legacy": tps_fast / tps_legacy,
+        "ms_per_tick_fast": s_per_tick * 1e3,
+        "device_ms_per_tick": dev_ms,
+        "host_ms_per_tick": max(0.0, s_per_tick * 1e3 - dev_ms),
+        "schedule_cache": cache_stats,
+    }
+    Path(out_path).write_text(json.dumps(result, indent=1))
+    if rows is not None:
+        d = result["decode_step"]
+        rows.append(("decode_step_fast_us_per_tick",
+                     d["ms_per_tick_fast"] * 1e3, d["speedup_vs_legacy"]))
+        rows.append(("decode_step_cache_hit_rate", 0.0,
+                     cache_stats["hit_rate"]))
+    return result
+
+
+def run(rows: list):
+    run_decode_step(rows=rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ticks", type=int, default=24)
+    ap.add_argument("--out", default="BENCH_decode_step.json")
+    args = ap.parse_args()
+    result = run_decode_step(args.ticks, args.out)
+    d = result["decode_step"]
+    print(json.dumps(result, indent=1))
+    print(
+        f"\nfast {d['ticks_per_sec_fast']:.2f} ticks/s vs legacy "
+        f"{d['ticks_per_sec_legacy']:.2f} ticks/s "
+        f"({d['speedup_vs_legacy']:.1f}x); cache hit rate "
+        f"{d['schedule_cache']['hit_rate']:.2f}; "
+        f"host {d['host_ms_per_tick']:.1f}ms + device "
+        f"{d['device_ms_per_tick']:.1f}ms per tick"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Version-compatibility shims for the jax APIs this repo touches.
+
+The codebase targets current jax but must run on the pinned container
+toolchain (jax 0.4.x). Three surfaces moved between versions:
+
+  * ``jax.shard_map`` — older releases expose it as
+    ``jax.experimental.shard_map.shard_map`` with ``check_rep`` instead of
+    ``check_vma``;
+  * ``pltpu.CompilerParams`` — previously ``pltpu.TPUCompilerParams``;
+  * ``Compiled.cost_analysis()`` — older releases return a one-element list
+    of dicts instead of a dict.
+
+Everything else should import from here rather than probing jax versions
+inline.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` across jax versions (``check_vma``/``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` across the TPUCompilerParams rename."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def cost_analysis(compiled) -> Dict[str, Any]:
+    """``Compiled.cost_analysis()`` as a flat dict on every jax version."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca

@@ -1,7 +1,14 @@
 """Core LeanAttention machinery: associative merge, stream-K schedule,
 reference schedules, mesh-level sequence-parallel decode."""
 from .merge import AttnPartial, merge, merge_n, tree_merge, segment_merge, finalize
-from .leantile import LeanSchedule, make_schedule, default_tile_size
+from .leantile import (
+    LeanSchedule,
+    ScheduleCache,
+    bucket_ctx_lens,
+    bucket_length,
+    make_schedule,
+    default_tile_size,
+)
 from .attention import (
     mha_decode_ref,
     mha_prefill_ref,

@@ -25,13 +25,18 @@ and are passed to the Pallas kernel as scalar-prefetch descriptor arrays.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Sequence
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
 __all__ = [
     "LeanSchedule",
+    "ScheduleCache",
+    "ScheduleCacheStats",
+    "bucket_ctx_lens",
+    "bucket_length",
     "make_schedule",
     "default_tile_size",
     "fixed_split_factor",
@@ -46,7 +51,7 @@ def default_tile_size(head_dim: int) -> int:
     return 256 if head_dim <= 64 else 128
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, eq=False)
 class LeanSchedule:
     """Static-shape stream-K schedule + merge metadata.
 
@@ -54,6 +59,11 @@ class LeanSchedule:
     (padded); padded iters have ``iter_valid == 0`` and point at the
     dedicated garbage piece ``num_pieces`` (partial buffers are allocated
     with ``num_pieces + 1`` rows).
+
+    Instances hash and compare by *content* (a cached byte signature over
+    the descriptor arrays), so a schedule is a valid ``jax.jit`` static
+    argument: equal schedules — notably the memoized instances handed out
+    by :class:`ScheduleCache` — share one trace.
     """
 
     tile_size: int
@@ -82,6 +92,100 @@ class LeanSchedule:
     @property
     def grid_iters(self) -> int:
         return self.num_workers * self.tiles_per_worker
+
+    # ---------------------------------------------------- hash / equality
+    @property
+    def signature(self) -> tuple:
+        sig = self.__dict__.get("_sig")
+        if sig is None:
+            sig = (
+                self.tile_size, self.num_workers, self.tiles_per_worker,
+                self.total_tiles, self.num_segments, self.num_pieces,
+                self.iter_seg.tobytes(), self.iter_tile.tobytes(),
+                self.iter_piece.tobytes(), self.iter_first.tobytes(),
+                self.iter_last.tobytes(), self.iter_len.tobytes(),
+                self.iter_valid.tobytes(), self.piece_seg.tobytes(),
+                self.piece_host.tobytes(), self.seg_batch.tobytes(),
+                self.seg_head.tobytes(), self.seg_len.tobytes(),
+            )
+            object.__setattr__(self, "_sig", sig)
+        return sig
+
+    def __hash__(self) -> int:
+        h = self.__dict__.get("_hash")
+        if h is None:
+            h = hash(self.signature)
+            object.__setattr__(self, "_hash", h)
+        return h
+
+    def __eq__(self, other) -> bool:
+        if self is other:
+            return True
+        if not isinstance(other, LeanSchedule):
+            return NotImplemented
+        return self.signature == other.signature
+
+    # ------------------------------------------------- packed descriptors
+    def packed_descriptors(self) -> np.ndarray:
+        """The (7, G*T) int32 scalar-prefetch array the two-phase kernel
+        consumes (row layout in :mod:`repro.kernels.lean_decode`). Built
+        once and memoized on the instance — a cache-hit decode tick does
+        zero numpy work here."""
+        desc = self.__dict__.get("_packed")
+        if desc is None:
+            desc = np.stack(
+                [
+                    self.iter_seg, self.iter_tile, self.iter_piece,
+                    self.iter_first, self.iter_last, self.iter_len,
+                    self.iter_valid,
+                ]
+            ).astype(np.int32)
+            object.__setattr__(self, "_packed", desc)
+        return desc
+
+    def fused_descriptors(self) -> np.ndarray:
+        """Descriptors for the fused partial+merge kernel: the (7, G*T)
+        partial-phase rows with ``num_pieces`` merge iterations appended.
+
+        Merge iteration ``p`` (grid step ``G*T + p``) reduces partial row
+        ``p`` into its segment: SEG = piece_seg[p], PIECE = p, FIRST/LAST
+        flag segment boundaries in the (segment-contiguous) piece order,
+        and VALID = 2 marks the merge opcode. Memoized like
+        :meth:`packed_descriptors`."""
+        desc = self.__dict__.get("_packed_fused")
+        if desc is None:
+            base = self.packed_descriptors()
+            P = self.num_pieces
+            merge = np.zeros((7, P), dtype=np.int32)
+            merge[0] = self.piece_seg                       # DESC_SEG
+            merge[2] = np.arange(P, dtype=np.int32)         # DESC_PIECE
+            first = np.ones(P, dtype=np.int32)
+            first[1:] = self.piece_seg[1:] != self.piece_seg[:-1]
+            last = np.ones(P, dtype=np.int32)
+            last[:-1] = self.piece_seg[:-1] != self.piece_seg[1:]
+            merge[3] = first                                # DESC_FIRST
+            merge[4] = last                                 # DESC_LAST
+            merge[6] = 2                                    # DESC_VALID: op
+            desc = np.concatenate([base, merge], axis=1)
+            object.__setattr__(self, "_packed_fused", desc)
+        return desc
+
+    def piece_ranges(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(starts, counts): segment ``s`` owns partial rows
+        ``[starts[s], starts[s] + counts[s])`` — pieces are contiguous per
+        segment by construction. Memoized (merge-phase metadata)."""
+        pr = self.__dict__.get("_piece_ranges")
+        if pr is None:
+            S = self.num_segments
+            starts = np.searchsorted(self.piece_seg, np.arange(S)).astype(
+                np.int32
+            )
+            ends = np.searchsorted(
+                self.piece_seg, np.arange(S), side="right"
+            ).astype(np.int32)
+            pr = (starts, ends - starts)
+            object.__setattr__(self, "_piece_ranges", pr)
+        return pr
 
     def max_pieces_per_worker(self) -> int:
         counts = np.zeros(self.num_workers, dtype=np.int64)
@@ -199,6 +303,133 @@ def make_schedule(
         seg_head=i32(seg_head),
         seg_len=i32(seg_len),
     )
+
+
+# --------------------------------------------------------------- bucketing
+def bucket_length(n: int, tile_size: int, max_len: Optional[int] = None) -> int:
+    """Round a context length up to a canonical bucket.
+
+    Buckets are "power-of-two-ish" tile counts — {1, 2, 3, 4, 6, 8, 12,
+    16, ...} tiles, i.e. powers of two plus their midpoints — so the number
+    of distinct buckets below any capacity C is O(log C), yet rounding never
+    wastes more than ~33% of KV tiles. A decode slot crosses a bucket
+    boundary only every ~len/3 generated tokens, which is what lets the
+    schedule cache (and the per-signature jit cache above it) hit on nearly
+    every tick.
+
+    The *bucketed* length drives the schedule's tile walk; the kernels mask
+    with the *true* lengths passed at runtime, so bucketing never changes
+    results — only how many (fully masked) tail tiles a schedule carries.
+
+    ``max_len`` (e.g. the padded KV-cache capacity) caps the bucket so the
+    kernel never indexes tiles beyond the backing buffer.
+    """
+    if n <= 0:
+        raise ValueError("context length must be positive")
+    if max_len is not None:
+        # capacity-clamp the length itself, not just the bucket: a request
+        # longer than the KV buffer can only ever attend to what the buffer
+        # holds, and an unclamped n with a clamped bucket would silently
+        # under-cover (schedule walks fewer tokens than seg_ctx claims)
+        n = min(n, max_len)
+    tiles = -(-n // tile_size)
+    b = 1
+    while b < tiles:
+        b *= 2
+    # midpoint bucket: 3 * 2^k sits between 2^k+1 and 2^(k+1)
+    if b > 2 and 3 * (b // 4) >= tiles:
+        b = 3 * (b // 4)
+    if max_len is not None:
+        # ceil: the KV buffer is always padded UP to a tile multiple, so a
+        # non-multiple capacity still owns its partial last tile (a floor
+        # here would silently drop real tokens from the schedule walk)
+        b = min(b, max(1, -(-max_len // tile_size)))
+    return b * tile_size
+
+
+def bucket_ctx_lens(
+    ctx_lens: Sequence[int], tile_size: int, max_len: Optional[int] = None
+) -> Tuple[int, ...]:
+    """Bucket every ragged length (see :func:`bucket_length`)."""
+    return tuple(bucket_length(int(n), tile_size, max_len) for n in ctx_lens)
+
+
+# ----------------------------------------------------------- schedule cache
+@dataclass
+class ScheduleCacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "hit_rate": self.hit_rate,
+        }
+
+
+class ScheduleCache:
+    """Memoized stream-K schedules over bucketed ragged lengths.
+
+    ``get`` buckets the exact per-batch context lengths to canonical shapes
+    (:func:`bucket_length`), then returns the memoized
+    :class:`LeanSchedule` for the bucketed signature — building it with
+    :func:`make_schedule` only on a miss. Because the returned instance is
+    *the same object* tick after tick (and hashes by content besides), any
+    ``jax.jit`` keyed on it as a static argument also hits its trace cache.
+    Packed kernel descriptors memoize on the schedule itself
+    (:meth:`LeanSchedule.packed_descriptors`), so a steady-state decode
+    tick performs zero numpy schedule work.
+
+    LRU-bounded: at most ``max_entries`` signatures are kept (the bucket
+    lattice keeps the live set small, but admission churn could otherwise
+    grow it without bound).
+    """
+
+    def __init__(self, max_entries: int = 128):
+        self.max_entries = max_entries
+        self.stats = ScheduleCacheStats()
+        self._entries: "OrderedDict[tuple, LeanSchedule]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(
+        self,
+        ctx_lens: Sequence[int],
+        num_kv_heads: int,
+        tile_size: int,
+        num_workers: int,
+        max_len: Optional[int] = None,
+    ) -> LeanSchedule:
+        lens = bucket_ctx_lens(ctx_lens, tile_size, max_len)
+        key = (lens, int(num_kv_heads), int(tile_size), int(num_workers))
+        sched = self._entries.get(key)
+        if sched is not None:
+            self.stats.hits += 1
+            self._entries.move_to_end(key)
+            return sched
+        self.stats.misses += 1
+        sched = make_schedule(lens, num_kv_heads, tile_size, num_workers)
+        # pre-pack both descriptor layouts so the miss pays all numpy cost
+        sched.packed_descriptors()
+        sched.fused_descriptors()
+        self._entries[key] = sched
+        if len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1
+        return sched
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.stats = ScheduleCacheStats()
 
 
 def fixed_split_factor(

@@ -14,6 +14,8 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.distributed import lean_merge_collective  # noqa: F401
@@ -35,7 +37,7 @@ def compressed_psum(x: jax.Array, mesh: Mesh, axis: str = "pod"):
         return s.astype(jnp.float32) * scale
 
     n = mesh.shape[axis]
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local, mesh=mesh,
         in_specs=P(axis), out_specs=P(axis),
         check_vma=False,

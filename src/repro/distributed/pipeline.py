@@ -25,6 +25,8 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -86,7 +88,7 @@ def pipeline_forward(
         ) if n_stages > 1 else out["acc"]
         return acc
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(P(axis), P()),

@@ -6,4 +6,10 @@ flash_prefill — FlashAttention-2 prefill (causal + sliding window, GQA)
 ops.py jit'd wrappers; ref.py pure-jnp oracles.
 Validated on CPU via interpret=True; TPU is the compile target.
 """
-from .ops import lean_decode, flash_decode, flash_prefill, default_num_workers
+from .ops import (
+    lean_decode,
+    lean_decode_from_schedule,
+    flash_decode,
+    flash_prefill,
+    default_num_workers,
+)

@@ -17,10 +17,26 @@ Scalar-prefetch descriptors (built host-side by
 segments with zero dynamic control flow on the data path.
 
 Where the CUDA version uses a spin-lock "host block" fix-up inside one kernel
-(GPU CTAs are co-resident; TPU grid steps are not), we emit each piece's
-un-scaled partial ``(o, m, l)`` to HBM and reduce per segment in a second,
-cheap phase (see ``ops.lean_decode``): the associative softmax re-scaling
-merge of §IV-A, either as XLA segment ops or the Pallas ``lean_merge`` kernel.
+(GPU CTAs are co-resident; TPU grid steps are not), two execution modes are
+offered:
+
+  * **two-phase** (``lean_decode_partials`` + merge): each piece's un-scaled
+    partial ``(o, m, l)`` goes to HBM and a second, cheap phase reduces per
+    segment — XLA segment ops or the Pallas ``lean_merge`` kernel. The G
+    axis stays ``parallel`` (Megacore/multi-core splittable).
+  * **fused** (``lean_decode_fused``): ONE ``pallas_call`` whose flat grid
+    appends the ``P`` merge iterations after the ``G*T`` partial iterations
+    (descriptor-driven, same scalar-prefetch machinery). Partials live in a
+    VMEM scratch ring — they never round-trip HBM, single-piece segments
+    reduce in-register, and there is no second kernel launch. The grid is
+    fully ``arbitrary`` (sequential per core), which is the right trade for
+    the decode fast-path where the whole output is a few hundred KiB.
+
+Both modes mask with *runtime* per-segment context lengths (a second
+scalar-prefetch operand), so a schedule built over bucketed lengths
+(:class:`repro.core.leantile.ScheduleCache`) computes exact attention for
+the true ragged lengths — trailing over-bucketed tiles contribute identity
+partials.
 """
 from __future__ import annotations
 
@@ -33,31 +49,63 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
 from repro.core.leantile import LeanSchedule
 
 NEG_INF = -1e30
 
-# descriptor row layout in the packed (7, G*T) scalar-prefetch array
+# descriptor row layout in the packed (7, G*T) scalar-prefetch array.
+# DESC_LEN carries the SCHEDULE's tile lengths (bucketed when the schedule
+# came from a ScheduleCache) — kernels mask with the runtime ctx operand
+# instead and never read this row; it stays packed for layout stability and
+# host-side debugging only.
 DESC_SEG, DESC_TILE, DESC_PIECE, DESC_FIRST, DESC_LAST, DESC_LEN, DESC_VALID = range(7)
+
+# DESC_VALID doubles as the opcode row: 0 = padding, 1 = partial LeanTile
+# iteration, 2 = merge iteration (fused kernel only).
+OP_PAD, OP_PARTIAL, OP_MERGE = 0, 1, 2
 
 
 def pack_descriptors(sched: LeanSchedule) -> np.ndarray:
-    """Pack schedule descriptor arrays into one (7, G*T) int32 array."""
-    return np.stack(
-        [
-            sched.iter_seg,
-            sched.iter_tile,
-            sched.iter_piece,
-            sched.iter_first,
-            sched.iter_last,
-            sched.iter_len,
-            sched.iter_valid,
-        ]
-    ).astype(np.int32)
+    """Packed (7, G*T) int32 descriptors (memoized on the schedule)."""
+    return sched.packed_descriptors()
+
+
+def _online_softmax_tile(
+    q_ref, k_ref, v_ref, acc_ref, m_acc_ref, l_acc_ref, vlen, scale
+):
+    """One LeanTile online-softmax update (Algorithm 1 lines 20-25) against
+    the VMEM accumulators; ``vlen`` masks the tile's invalid tail (and the
+    whole tile when the runtime length ends before it)."""
+    q = q_ref[0].astype(jnp.float32)                       # (gq, d)
+    k = k_ref[0].astype(jnp.float32)                       # (tile, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                              # (gq, tile)
+    pos = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < vlen, s, NEG_INF)
+
+    m_prev = m_acc_ref[...]                                # (gq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(pos < vlen, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_acc_ref[...] = alpha * l_acc_ref[...] + jnp.sum(
+        p, axis=1, keepdims=True
+    )
+    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_acc_ref[...] = m_new
 
 
 def _lean_decode_kernel(
     desc_ref,      # (7, I) scalar-prefetch descriptors
+    ctx_ref,       # (S,) scalar-prefetch runtime segment lengths
     q_ref,         # (1, gq, d)     current segment's query group
     k_ref,         # (1, tile, d)   current LeanTile of K
     v_ref,         # (1, tile, d)   current LeanTile of V
@@ -69,6 +117,7 @@ def _lean_decode_kernel(
     l_acc_ref,     # VMEM (gq, 1) f32
     *,
     scale: float,
+    tile_size: int,
     tiles_per_worker: int,
 ):
     g = pl.program_id(0)
@@ -77,10 +126,9 @@ def _lean_decode_kernel(
 
     first = desc_ref[DESC_FIRST, i]
     last = desc_ref[DESC_LAST, i]
-    vlen = desc_ref[DESC_LEN, i]
     valid = desc_ref[DESC_VALID, i]
 
-    @pl.when(valid == 1)
+    @pl.when(valid == OP_PARTIAL)
     def _work():
         @pl.when(first == 1)
         def _reset():  # Algorithm 1 lines 8-9
@@ -88,31 +136,17 @@ def _lean_decode_kernel(
             m_acc_ref[...] = jnp.full_like(m_acc_ref, NEG_INF)
             l_acc_ref[...] = jnp.zeros_like(l_acc_ref)
 
-        q = q_ref[0].astype(jnp.float32)                       # (gq, d)
-        k = k_ref[0].astype(jnp.float32)                       # (tile, d)
-        v = v_ref[0].astype(jnp.float32)
-
-        # Algorithm 1 lines 20-25 (one LeanTile iteration)
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        ) * scale                                              # (gq, tile)
-        pos = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(pos < vlen, s, NEG_INF)
-
-        m_prev = m_acc_ref[...]                                # (gq, 1)
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        p = jnp.exp(s - m_new)
-        p = jnp.where(pos < vlen, p, 0.0)
-        alpha = jnp.exp(m_prev - m_new)
-        l_acc_ref[...] = alpha * l_acc_ref[...] + jnp.sum(
-            p, axis=1, keepdims=True
+        # runtime ragged length — the schedule may cover bucketed (longer)
+        # lengths; tiles past the true length mask to identity
+        vlen = jnp.clip(
+            ctx_ref[desc_ref[DESC_SEG, i]]
+            - desc_ref[DESC_TILE, i] * tile_size,
+            0,
+            tile_size,
         )
-        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
+        _online_softmax_tile(
+            q_ref, k_ref, v_ref, acc_ref, m_acc_ref, l_acc_ref, vlen, scale
         )
-        m_acc_ref[...] = m_new
 
         @pl.when(last == 1)
         def _flush():  # StorePartials (Algorithm 2 lines 20-22)
@@ -125,6 +159,7 @@ def lean_decode_partials(
     q_seg: jax.Array,          # (S_seg, gq, d)
     k_seg: jax.Array,          # (S_seg, S_pad, d), S_pad % tile == 0
     v_seg: jax.Array,
+    seg_ctx: jax.Array,        # (S_seg,) int32 runtime context lengths
     sched: LeanSchedule,
     scale: float,
     interpret: bool = False,
@@ -132,37 +167,41 @@ def lean_decode_partials(
     """Phase 1: run the stream-K grid, return per-piece partials.
 
     Returns (o, m, l) with leading dim ``num_pieces`` (garbage row sliced
-    off), f32.
+    off), f32. ``seg_ctx`` carries the true per-segment lengths; the
+    schedule's (possibly bucketed) lengths only shape the tile walk.
     """
     S_seg, gq, d = q_seg.shape
     tile = sched.tile_size
     G, T = sched.num_workers, sched.tiles_per_worker
     P = sched.num_pieces
     desc = jnp.asarray(pack_descriptors(sched))
-    I = G * T
 
-    def q_map(g, t, desc):
+    def q_map(g, t, desc, ctx):
         i = g * T + t
         # padded iters clamp to segment 0 (they do no work)
-        return (jnp.where(desc[DESC_VALID, i] == 1, desc[DESC_SEG, i], 0), 0, 0)
+        return (
+            jnp.where(desc[DESC_VALID, i] == OP_PARTIAL, desc[DESC_SEG, i], 0),
+            0,
+            0,
+        )
 
-    def kv_map(g, t, desc):
+    def kv_map(g, t, desc, ctx):
         i = g * T + t
-        ok = desc[DESC_VALID, i] == 1
+        ok = desc[DESC_VALID, i] == OP_PARTIAL
         return (
             jnp.where(ok, desc[DESC_SEG, i], 0),
             jnp.where(ok, desc[DESC_TILE, i], 0),
             0,
         )
 
-    def out_map(g, t, desc):
+    def out_map(g, t, desc, ctx):
         return (desc[DESC_PIECE, g * T + t], 0, 0)
 
-    def stat_map(g, t, desc):
+    def stat_map(g, t, desc, ctx):
         return (desc[DESC_PIECE, g * T + t], 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(G, T),
         in_specs=[
             pl.BlockSpec((1, gq, d), q_map),
@@ -181,7 +220,7 @@ def lean_decode_partials(
         ],
     )
     kernel = functools.partial(
-        _lean_decode_kernel, scale=scale, tiles_per_worker=T
+        _lean_decode_kernel, scale=scale, tile_size=tile, tiles_per_worker=T
     )
     out_shapes = [
         jax.ShapeDtypeStruct((P + 1, gq, d), jnp.float32),
@@ -192,12 +231,179 @@ def lean_decode_partials(
         kernel,
         grid_spec=grid_spec,
         out_shape=out_shapes,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(desc, q_seg, k_seg, v_seg)
+    )(desc, seg_ctx.astype(jnp.int32), q_seg, k_seg, v_seg)
     return o_p[:P], m_p[:P], l_p[:P]
+
+
+def _lean_decode_fused_kernel(
+    desc_ref,      # (7, G*T + P) scalar-prefetch descriptors (+merge rows)
+    ctx_ref,       # (S,) scalar-prefetch runtime segment lengths
+    q_ref,         # (1, gq, d)
+    k_ref,         # (1, tile, d)
+    v_ref,         # (1, tile, d)
+    o_ref,         # (S, gq, d)  final outputs — whole array resident in VMEM
+    lse_ref,       # (S, gq)     final logsumexp
+    acc_ref,       # VMEM (gq, d) f32   shared partial/merge accumulator
+    m_acc_ref,     # VMEM (gq, 1) f32
+    l_acc_ref,     # VMEM (gq, 1) f32
+    po_ref,        # VMEM (P+1, gq, d) f32  piece partials (never leave VMEM)
+    pm_ref,        # VMEM (P+1, gq) f32
+    pl_ref,        # VMEM (P+1, gq) f32
+    *,
+    scale: float,
+    tile_size: int,
+):
+    i = pl.program_id(0)
+    op = desc_ref[DESC_VALID, i]
+    seg = desc_ref[DESC_SEG, i]
+    piece = desc_ref[DESC_PIECE, i]
+    first = desc_ref[DESC_FIRST, i]
+    last = desc_ref[DESC_LAST, i]
+
+    @pl.when(op == OP_PARTIAL)
+    def _partial():
+        @pl.when(first == 1)
+        def _reset():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            m_acc_ref[...] = jnp.full_like(m_acc_ref, NEG_INF)
+            l_acc_ref[...] = jnp.zeros_like(l_acc_ref)
+
+        vlen = jnp.clip(
+            ctx_ref[seg] - desc_ref[DESC_TILE, i] * tile_size, 0, tile_size
+        )
+        _online_softmax_tile(
+            q_ref, k_ref, v_ref, acc_ref, m_acc_ref, l_acc_ref, vlen, scale
+        )
+
+        @pl.when(last == 1)
+        def _flush():  # StorePartials — into VMEM scratch, not HBM
+            po_ref[pl.ds(piece, 1)] = acc_ref[...][None]
+            pm_ref[pl.ds(piece, 1)] = m_acc_ref[..., 0][None]
+            pl_ref[pl.ds(piece, 1)] = l_acc_ref[..., 0][None]
+
+    @pl.when(op == OP_MERGE)
+    def _merge():  # Algorithm 2 reduction, re-using the same accumulators
+        @pl.when(first == 1)
+        def _reset():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            m_acc_ref[...] = jnp.full_like(m_acc_ref, NEG_INF)
+            l_acc_ref[...] = jnp.zeros_like(l_acc_ref)
+
+        m_piece = pm_ref[pl.ds(piece, 1)][0][:, None]       # (gq, 1)
+        l_piece = pl_ref[pl.ds(piece, 1)][0][:, None]
+        o_piece = po_ref[pl.ds(piece, 1)][0]                # (gq, d)
+        m_new = jnp.maximum(m_acc_ref[...], m_piece)
+        a_old = jnp.exp(m_acc_ref[...] - m_new)
+        a_new = jnp.exp(m_piece - m_new)
+        l_acc_ref[...] = a_old * l_acc_ref[...] + a_new * l_piece
+        acc_ref[...] = a_old * acc_ref[...] + a_new * o_piece
+        m_acc_ref[...] = m_new
+
+        @pl.when(last == 1)
+        def _final():
+            o_ref[pl.ds(seg, 1)] = (acc_ref[...] / l_acc_ref[...])[None]
+            lse_ref[pl.ds(seg, 1)] = (
+                m_acc_ref[...] + jnp.log(l_acc_ref[...])
+            )[None, :, 0]
+
+
+def fused_vmem_bytes(sched: LeanSchedule, gq: int, d: int) -> int:
+    """Rough f32 VMEM footprint of the fused kernel's resident state: piece
+    partials + whole-output block + a KV tile. Used to gate the fused path
+    (fall back to two-phase when a schedule would blow the budget)."""
+    P, S = sched.num_pieces, sched.num_segments
+    per_row = gq * (d + 2)
+    return 4 * ((P + 1) * per_row + S * gq * (d + 1)) + 4 * sched.tile_size * d * 2
+
+
+def lean_decode_fused(
+    q_seg: jax.Array,          # (S_seg, gq, d)
+    k_seg: jax.Array,          # (S_seg, S_pad, d), S_pad % tile == 0
+    v_seg: jax.Array,
+    seg_ctx: jax.Array,        # (S_seg,) int32 runtime context lengths
+    sched: LeanSchedule,
+    scale: float,
+    interpret: bool = False,
+):
+    """Fused stream-K decode: ONE ``pallas_call`` for partials AND merge.
+
+    The flat grid runs the ``G*T`` LeanTile iterations followed by ``P``
+    descriptor-driven merge iterations; per-piece ``(o, m, l)`` stay in a
+    VMEM scratch ring the whole time. Returns (o (S, gq, d) f32,
+    lse (S, gq) f32).
+
+    The grid is sequential (``arbitrary``) — worker parallelism trades for
+    zero HBM partial traffic and a single launch, the winning trade for
+    decode-sized outputs. ``ops.lean_decode`` falls back to the two-phase
+    path when :func:`fused_vmem_bytes` exceeds its budget.
+    """
+    S_seg, gq, d = q_seg.shape
+    tile = sched.tile_size
+    G, T = sched.num_workers, sched.tiles_per_worker
+    P = sched.num_pieces
+    desc = jnp.asarray(sched.fused_descriptors())
+    N = G * T + P
+
+    def q_map(i, desc, ctx):
+        return (
+            jnp.where(desc[DESC_VALID, i] == OP_PAD, 0, desc[DESC_SEG, i]),
+            0,
+            0,
+        )
+
+    def kv_map(i, desc, ctx):
+        ok = desc[DESC_VALID, i] == OP_PARTIAL
+        return (
+            jnp.where(ok, desc[DESC_SEG, i], 0),
+            jnp.where(ok, desc[DESC_TILE, i], 0),
+            0,
+        )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1, gq, d), q_map),
+            pl.BlockSpec((1, tile, d), kv_map),
+            pl.BlockSpec((1, tile, d), kv_map),
+        ],
+        out_specs=[
+            # whole-output blocks: the index maps are constant, so the
+            # buffers stay VMEM-resident across the grid and flush to HBM
+            # exactly once at the end — no revisit hazards
+            pl.BlockSpec((S_seg, gq, d), lambda i, desc, ctx: (0, 0, 0)),
+            pl.BlockSpec((S_seg, gq), lambda i, desc, ctx: (0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((gq, d), jnp.float32),
+            pltpu.VMEM((gq, 1), jnp.float32),
+            pltpu.VMEM((gq, 1), jnp.float32),
+            pltpu.VMEM((P + 1, gq, d), jnp.float32),
+            pltpu.VMEM((P + 1, gq), jnp.float32),
+            pltpu.VMEM((P + 1, gq), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _lean_decode_fused_kernel, scale=scale, tile_size=tile
+    )
+    out_shapes = [
+        jax.ShapeDtypeStruct((S_seg, gq, d), jnp.float32),
+        jax.ShapeDtypeStruct((S_seg, gq), jnp.float32),
+    ]
+    o, lse = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(desc, seg_ctx.astype(jnp.int32), q_seg, k_seg, v_seg)
+    return o, lse
 
 
 def _lean_merge_kernel(
@@ -254,11 +460,7 @@ def lean_merge_pallas(
     """
     P, gq, d = o_p.shape
     S = sched.num_segments
-    starts = np.searchsorted(sched.piece_seg, np.arange(S)).astype(np.int32)
-    ends = np.searchsorted(
-        sched.piece_seg, np.arange(S), side="right"
-    ).astype(np.int32)
-    cnts = ends - starts
+    starts, cnts = sched.piece_ranges()
     pmax = max(1, int(cnts.max(initial=1)))
     meta = jnp.asarray(np.stack([starts, cnts]).astype(np.int32))
 
@@ -296,7 +498,7 @@ def lean_merge_pallas(
         _lean_merge_kernel,
         grid_spec=grid_spec,
         out_shape=out_shapes,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,35 +1,65 @@
 """Public jit'd entry points for the attention kernels.
 
 ``lean_decode`` is the paper's mechanism end-to-end: host-side stream-K
-schedule -> Pallas partial kernel -> associative merge (XLA segment ops by
-default; ``merge_impl='pallas'`` runs the Pallas reduction kernel instead).
+schedule -> Pallas kernel(s) -> associative merge. Two split points exist:
 
-Context lengths are *host* values (python ints / numpy) because the schedule
-is built on the host — exactly as in the paper, where the CPU launcher picks
-the grid before kernel launch. The serving engine knows concrete lengths
-every step, so this is the natural contract.
+  * ``lean_decode(q, k, v, ctx_lens)`` — the convenience API. Context
+    lengths are *host* values (python ints / numpy) because the schedule is
+    built on the host, exactly as in the paper where the CPU launcher picks
+    the grid before kernel launch. Pass a
+    :class:`~repro.core.leantile.ScheduleCache` to amortize schedule
+    construction across calls.
+  * ``lean_decode_from_schedule(q, k, v, seg_ctx, sched, ...)`` — the
+    jit-stable fast path. The schedule is an explicit *hashable* argument
+    (``LeanSchedule`` hashes by content) and the function is pure in its
+    array arguments, so an outer ``jax.jit(..., static_argnames=('sched',))``
+    — e.g. the serving engine's whole decode step — traces once per
+    schedule signature and replays thereafter. ``seg_ctx`` carries the true
+    ragged lengths at runtime; the kernels mask with it, which is what
+    makes bucketed (cached) schedules exact.
+
+``fused=True`` selects the single-``pallas_call`` partial+merge kernel
+(partials never leave VMEM); ``fused=False`` keeps the two-phase path
+(partials through HBM + XLA segment-op or Pallas merge) for comparison and
+for schedules whose VMEM footprint exceeds the fused budget.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.leantile import LeanSchedule, make_schedule, default_tile_size
+from repro.core.leantile import (
+    LeanSchedule,
+    ScheduleCache,
+    make_schedule,
+    default_tile_size,
+)
 from repro.core.merge import AttnPartial, finalize, merge_n, segment_merge
-from .lean_decode import lean_decode_partials, lean_merge_pallas
+from .lean_decode import (
+    fused_vmem_bytes,
+    lean_decode_fused,
+    lean_decode_partials,
+    lean_merge_pallas,
+)
 from .flash_decode import flash_decode_partials
 from .flash_prefill import flash_prefill  # re-export
 
 __all__ = [
     "lean_decode",
+    "lean_decode_from_schedule",
     "flash_decode",
     "flash_prefill",
     "default_num_workers",
+    "FUSED_VMEM_BUDGET",
 ]
+
+# fused-path resident-state budget; ~half of a TPU core's VMEM, leaving room
+# for pipelined KV tiles. Schedules above this fall back to two-phase.
+FUSED_VMEM_BUDGET = 8 * 2**20
 
 
 def default_num_workers(n_cores: int = 8, pipeline_factor: int = 2) -> int:
@@ -63,6 +93,63 @@ def _pad_kv(k_seg, v_seg, tile):
     return k_seg, v_seg
 
 
+def lean_decode_from_schedule(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    seg_ctx: jax.Array,            # (B*Hkv,) int32 true context lengths
+    sched: LeanSchedule,
+    *,
+    scale: Optional[float] = None,
+    fused: bool = True,
+    merge_impl: str = "xla",
+    interpret: bool = False,
+    return_lse: bool = False,
+):
+    """Jit-stable LeanAttention decode against a prebuilt schedule.
+
+    Pure in the array arguments (q, k, v, seg_ctx); ``sched`` and the
+    keyword flags are hashable, so the whole function — or any caller
+    enclosing it — jits with ``static_argnames=('sched', ...)`` and traces
+    once per schedule signature. The schedule's tile walk must *cover* the
+    true lengths (``sched.seg_len >= seg_ctx``, e.g. built from bucketed
+    lengths); masking against ``seg_ctx`` keeps the result exact.
+    """
+    B, Hq, d = q.shape
+    _, Hkv, S, _ = k.shape
+    scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
+    q_seg, k_seg, v_seg, _g = _to_segments(q, k, v)
+    k_seg, v_seg = _pad_kv(k_seg, v_seg, sched.tile_size)
+    gq = q_seg.shape[1]
+    seg_ctx = seg_ctx.astype(jnp.int32)
+
+    if fused and fused_vmem_bytes(sched, gq, d) > FUSED_VMEM_BUDGET:
+        fused = False
+    if fused:
+        o_seg, lse = lean_decode_fused(
+            q_seg, k_seg, v_seg, seg_ctx, sched, scale, interpret=interpret
+        )
+    else:
+        o_p, m_p, l_p = lean_decode_partials(
+            q_seg, k_seg, v_seg, seg_ctx, sched, scale, interpret=interpret
+        )
+        if merge_impl == "pallas":
+            o_seg, lse = lean_merge_pallas(
+                o_p, m_p, l_p, sched, interpret=interpret
+            )
+        else:
+            part = AttnPartial(o=o_p, m=m_p, l=l_p)
+            seg = segment_merge(
+                part, jnp.asarray(sched.piece_seg), sched.num_segments
+            )
+            o_seg = finalize(seg)
+            lse = seg.m + jnp.log(seg.l)
+    out = o_seg.reshape(B, Hq, d).astype(q.dtype)
+    if return_lse:
+        return out, lse.reshape(B, Hq)
+    return out
+
+
 def lean_decode(
     q: jax.Array,
     k: jax.Array,
@@ -72,45 +159,71 @@ def lean_decode(
     num_workers: Optional[int] = None,
     tile: Optional[int] = None,
     scale: Optional[float] = None,
+    fused: bool = False,
     merge_impl: str = "xla",
+    schedule_cache: Optional[ScheduleCache] = None,
     interpret: bool = False,
     return_lse: bool = False,
 ):
     """LeanAttention decode: exact attention, stream-K partitioned.
 
     q: (B, Hq, d); k, v: (B, Hkv, S, d); ctx_lens: host ints per batch row.
+    ``schedule_cache`` buckets the lengths and memoizes the schedule;
+    without one an exact schedule is built per call.
     """
     B, Hq, d = q.shape
     _, Hkv, S, _ = k.shape
     if ctx_lens is None:
         ctx_lens = [S] * B
-    ctx_lens = [int(c) for c in ctx_lens]
+    ctx_lens = [min(int(c), S) for c in ctx_lens]   # clamp to KV capacity
     tile = tile or default_tile_size(d)
     tile = min(tile, max(8, S))
     num_workers = num_workers or default_num_workers()
-    scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
 
-    sched = make_schedule(ctx_lens, Hkv, tile, num_workers)
-    q_seg, k_seg, v_seg, g = _to_segments(q, k, v)
-    k_seg, v_seg = _pad_kv(k_seg, v_seg, tile)
-
-    o_p, m_p, l_p = lean_decode_partials(
-        q_seg, k_seg, v_seg, sched, scale, interpret=interpret
-    )
-    if merge_impl == "pallas":
-        o_seg, lse = lean_merge_pallas(o_p, m_p, l_p, sched, interpret=interpret)
-        out = o_seg
-    else:
-        part = AttnPartial(o=o_p, m=m_p, l=l_p)
-        seg = segment_merge(
-            part, jnp.asarray(sched.piece_seg), sched.num_segments
+    if schedule_cache is not None:
+        s_pad = S + ((-S) % tile)
+        sched = schedule_cache.get(
+            ctx_lens, Hkv, tile, num_workers, max_len=s_pad
         )
-        out = finalize(seg)
-        lse = seg.m + jnp.log(seg.l)
-    out = out.reshape(B, Hq, d).astype(q.dtype)
-    if return_lse:
-        return out, lse.reshape(B, Hq)
-    return out
+    else:
+        sched = make_schedule(ctx_lens, Hkv, tile, num_workers)
+    seg_ctx = jnp.asarray(np.repeat(np.asarray(ctx_lens), Hkv), jnp.int32)
+    return lean_decode_from_schedule(
+        q, k, v, seg_ctx, sched,
+        scale=scale, fused=fused, merge_impl=merge_impl,
+        interpret=interpret, return_lse=return_lse,
+    )
+
+
+def flash_decode_from_lens(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    seg_ctx: jax.Array,            # (B*Hkv,) int32 true context lengths
+    *,
+    num_splits: int,
+    tile: int,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+):
+    """Jit-stable FlashDecoding baseline: lengths are a runtime array,
+    ``num_splits``/``tile`` are static — the serving engine jits its whole
+    decode step over this (the fixed-split analogue of
+    :func:`lean_decode_from_schedule`)."""
+    B, Hq, d = q.shape
+    scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
+    q_seg, k_seg, v_seg, _g = _to_segments(q, k, v)
+    k_seg, v_seg = _pad_kv(k_seg, v_seg, tile)
+    o_p, m_p, l_p = flash_decode_partials(
+        q_seg, k_seg, v_seg, seg_ctx.astype(jnp.int32), num_splits, tile,
+        scale, interpret=interpret,
+    )
+    part = AttnPartial(
+        o=jnp.moveaxis(o_p, 1, 0), m=jnp.moveaxis(m_p, 1, 0),
+        l=jnp.moveaxis(l_p, 1, 0),
+    )
+    out = finalize(merge_n(part))
+    return out.reshape(B, Hq, d).astype(q.dtype)
 
 
 def flash_decode(
@@ -134,7 +247,7 @@ def flash_decode(
     _, Hkv, S, _ = k.shape
     if ctx_lens is None:
         ctx_lens = [S] * B
-    ctx_lens = [int(c) for c in ctx_lens]
+    ctx_lens = [min(int(c), S) for c in ctx_lens]   # clamp to KV capacity
     tile = tile or default_tile_size(d)
     tile = min(tile, max(8, S))
     scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
@@ -144,18 +257,8 @@ def flash_decode(
         num_workers = num_workers or default_num_workers()
         num_splits = fixed_split_factor(max(ctx_lens), B * Hkv, tile, num_workers)
 
-    q_seg, k_seg, v_seg, g = _to_segments(q, k, v)
-    k_seg, v_seg = _pad_kv(k_seg, v_seg, tile)
     seg_lens = jnp.asarray(np.repeat(np.asarray(ctx_lens), Hkv), jnp.int32)
-
-    o_p, m_p, l_p = flash_decode_partials(
-        q_seg, k_seg, v_seg, seg_lens, num_splits, tile, scale,
-        interpret=interpret,
+    return flash_decode_from_lens(
+        q, k, v, seg_lens,
+        num_splits=num_splits, tile=tile, scale=scale, interpret=interpret,
     )
-    # merge over the split axis (FlashDecoding's separate reduction kernel)
-    part = AttnPartial(
-        o=jnp.moveaxis(o_p, 1, 0), m=jnp.moveaxis(m_p, 1, 0),
-        l=jnp.moveaxis(l_p, 1, 0),
-    )
-    out = finalize(merge_n(part))
-    return out.reshape(B, Hq, d).astype(q.dtype)

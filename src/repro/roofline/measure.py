@@ -67,9 +67,11 @@ class CostVec:
 
 
 def cost_of(compiled, hlo_text) -> CostVec:
+    from repro import compat
+
     from .analysis import collective_bytes
 
-    ca = compiled.cost_analysis()
+    ca = compat.cost_analysis(compiled)
     colls = collective_bytes(hlo_text)
     return CostVec(
         float(ca.get("flops", 0.0)),

@@ -3,31 +3,74 @@
 The engine owns a fixed pool of sequence slots (the batch), admits requests
 as slots free up (Orca-style continuous batching), and runs one fused decode
 step per tick. Context lengths are *heterogeneous* — exactly the ragged
-regime of paper §IV-C/Fig. 6 — and every tick the host builds a fresh
-stream-K LeanSchedule over the ragged (slot, head, context) workload, so
-every worker receives the same number of LeanTiles regardless of raggedness.
+regime of paper §IV-C/Fig. 6.
+
+Decode fast-path (default, ``use_fast_path=True``):
+
+  * the stream-K schedule comes from a :class:`ScheduleCache` — ragged
+    lengths bucket to canonical shapes, so a steady-state tick performs
+    ZERO numpy schedule work (cache hit) and the schedule object is
+    identical tick-to-tick;
+  * the whole decode step (embed -> layers -> kernel attention -> logits ->
+    cache update) runs under ONE ``jax.jit`` keyed on the schedule
+    signature, with the KV cache donated — the lean/fixed kernels no
+    longer fall off the jit cliff;
+  * request admission writes a single slot of the cache tree via
+    ``dynamic_update_slice`` under a donating jit instead of re-building
+    the full tree with ``.at[:, slot].set``;
+  * per-tick sampling does one device->host argmax sync for the whole
+    batch, not one per slot.
+
+``use_fast_path=False`` preserves the original per-tick behavior (fresh
+schedule each tick, unjitted outer step for kernel backends, full-tree admit
+copy) as the benchmark baseline — ``benchmarks/decode_step_bench.py``
+measures one against the other.
 
 Attention backends:
-  * 'lean'   — the Pallas stream-K kernel (interpret=True on CPU),
+  * 'lean'   — the Pallas stream-K kernel (interpret=True on CPU); the
+               fast path uses the fused single-``pallas_call`` kernel,
   * 'fixed'  — the FlashDecoding fixed-split baseline kernel,
-  * 'ref'    — pure-jnp oracle (default on CPU: fast under jit).
+  * 'ref'    — pure-jnp oracle (fast under jit on CPU).
 
-All backends compute exact attention; the schedule is what differs. The
-benchmark harness compares their modeled occupancy/latency.
+All backends compute exact attention; the schedule is what differs.
 """
 from __future__ import annotations
 
-import dataclasses
+import functools
+import warnings
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.attention import mha_decode_ref
+from repro.core.leantile import (
+    LeanSchedule,
+    ScheduleCache,
+    default_tile_size,
+    fixed_split_factor,
+    make_schedule,
+)
 from repro.kernels import flash_decode, lean_decode
+from repro.kernels.ops import (
+    flash_decode_from_lens,
+    lean_decode_from_schedule,
+)
 from repro.models import ModelConfig, decode_step, init_cache, prefill
+
+import contextlib
+
+
+@contextlib.contextmanager
+def _quiet_donation():
+    """Cache donation is a no-op on CPU backends; silence that warning for
+    the engine's own donating calls only (no process-wide filter)."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable"
+        )
+        yield
 
 
 @dataclass
@@ -48,6 +91,60 @@ class EngineStats:
     tokens_generated: int = 0
     prefills: int = 0
     schedules: List[dict] = field(default_factory=list)
+    schedule_cache: dict = field(default_factory=dict)
+
+
+def _write_slot(cache, cache1, slot):
+    """Write batch row 0 of ``cache1`` into row ``slot`` of ``cache``.
+
+    One ``dynamic_update_slice`` per leaf; under jit with the destination
+    donated this lowers to an in-place row write, not a tree copy. ``slot``
+    is a traced scalar so every slot shares one trace.
+    """
+    def cp(dst, src):
+        row = src[:, :1].astype(dst.dtype)
+        start = (jnp.zeros((), jnp.int32),) + (slot,) + tuple(
+            jnp.zeros((), jnp.int32) for _ in range(dst.ndim - 2)
+        )
+        return jax.lax.dynamic_update_slice(dst, row, start)
+
+    return jax.tree.map(cp, cache, cache1)
+
+
+def _kernel_decode_step(
+    params,
+    cache,
+    tokens,
+    ctx_lens,
+    *,
+    cfg: ModelConfig,
+    backend: str,
+    sched: LeanSchedule,
+    num_splits: int,
+    fused: bool,
+    interpret: bool,
+):
+    """One whole decode step with kernel-backed attention — pure in the
+    array args; everything else is hashable and static, so the engine jits
+    this end-to-end per schedule signature."""
+
+    def attn_fn(q, k, v, ctx):
+        # ctx: per-slot visible lengths (already includes the token written
+        # this step, clamped to cache capacity) — runtime values
+        seg_ctx = jnp.repeat(ctx.astype(jnp.int32), cfg.n_kv_heads)
+        if backend == "lean":
+            return lean_decode_from_schedule(
+                q, k, v, seg_ctx, sched, fused=fused, interpret=interpret
+            )
+        return flash_decode_from_lens(
+            q, k, v, seg_ctx,
+            num_splits=num_splits, tile=sched.tile_size, interpret=interpret,
+        )
+
+    cur = jnp.max(ctx_lens)
+    return decode_step(
+        params, cfg, cache, tokens, cur, attn_fn=attn_fn, ctx_lens=ctx_lens
+    )
 
 
 class DecodeEngine:
@@ -61,6 +158,10 @@ class DecodeEngine:
         attn_backend: str = "ref",
         num_workers: int = 16,
         rng_seed: int = 0,
+        use_fast_path: bool = True,
+        fused: bool = True,
+        interpret: Optional[bool] = None,
+        schedule_cache_entries: int = 128,
     ):
         self.cfg = cfg
         self.params = params
@@ -68,6 +169,13 @@ class DecodeEngine:
         self.cache_len = cache_len
         self.attn_backend = attn_backend
         self.num_workers = num_workers
+        self.use_fast_path = use_fast_path
+        self.fused = fused
+        # Pallas interpret mode: default on for CPU hosts (tests/bench),
+        # off on real accelerators where Mosaic compiles the kernels
+        self.interpret = (
+            jax.default_backend() == "cpu" if interpret is None else interpret
+        )
         self.stats = EngineStats()
 
         self.cache = init_cache(cfg, max_batch, cache_len)
@@ -76,13 +184,40 @@ class DecodeEngine:
         self.queue: List[Request] = []
         self.next_tokens = np.zeros((max_batch, 1), dtype=np.int32)
 
+        # tile is fixed per engine (schedule/jit key stability); the cache
+        # capacity bounds every slot's visible context
+        self.tile = min(default_tile_size(cfg.head_dim), max(8, cache_len))
+        self.sched_cache = ScheduleCache(max_entries=schedule_cache_entries)
+
         self._jit_decode = jax.jit(self._decode_fn)
         self._jit_prefill_slot = jax.jit(
             self._prefill_fn, static_argnames=("plen",)
         )
+        self._jit_admit = jax.jit(_write_slot, donate_argnums=(0,))
+        self._jit_kernel_step = jax.jit(
+            functools.partial(_kernel_decode_step, cfg=cfg),
+            static_argnames=("backend", "sched", "num_splits", "fused",
+                             "interpret"),
+            donate_argnames=("cache",),
+        )
+
+    # ------------------------------------------------------------- schedule
+    def _tick_schedule(self) -> LeanSchedule:
+        """The (cached) stream-K schedule for this tick's ragged workload:
+        every slot attends over its context plus the token being written,
+        clamped to cache capacity. Built over ALL slots (the kernel sees the
+        full batch; idle slots contribute one masked tile)."""
+        s_pad = self.cache_len + ((-self.cache_len) % self.tile)
+        lens = np.minimum(self.ctx_lens + 1, self.cache_len)
+        return self.sched_cache.get(
+            lens.tolist(), self.cfg.n_kv_heads, self.tile, self.num_workers,
+            max_len=s_pad,
+        )
 
     # ------------------------------------------------------------- attn fn
     def _make_attn_fn(self):
+        """Legacy (non-jit-stable) kernel closure, kept as the benchmark
+        baseline: host lengths are baked into the trace every tick."""
         backend = self.attn_backend
         if backend == "ref":
             return None
@@ -94,9 +229,9 @@ class DecodeEngine:
             if backend == "lean":
                 return lean_decode(
                     q, k, v, lens, num_workers=self.num_workers,
-                    interpret=True,
+                    interpret=self.interpret,
                 )
-            return flash_decode(q, k, v, lens, interpret=True)
+            return flash_decode(q, k, v, lens, interpret=self.interpret)
 
         return attn_fn
 
@@ -131,7 +266,13 @@ class DecodeEngine:
                     self.params, toks, plen=plen
                 )
                 # copy slot-0 of the fresh cache into our slot
-                self.cache = _copy_slot(self.cache, cache1, slot)
+                if self.use_fast_path:
+                    with _quiet_donation():
+                        self.cache = self._jit_admit(
+                            self.cache, cache1, jnp.asarray(slot, jnp.int32)
+                        )
+                else:
+                    self.cache = _copy_slot(self.cache, cache1, slot)
                 self.ctx_lens[slot] = plen
                 nxt = int(jnp.argmax(logits[0]))
                 req.generated.append(nxt)
@@ -145,23 +286,82 @@ class DecodeEngine:
         active = [s for s in range(self.max_batch) if self.slot_req[s]]
         if not active:
             return {}
-        # record the lean schedule for this ragged tick (benchmark hook)
-        lens = [int(self.ctx_lens[s]) + 1 for s in active]
-        from repro.core.leantile import make_schedule, default_tile_size
 
-        sched = make_schedule(
-            lens, self.cfg.n_kv_heads,
-            min(default_tile_size(self.cfg.head_dim), max(8, max(lens))),
-            self.num_workers,
-        )
+        if self.use_fast_path:
+            # ONE schedule build (cached) serves both the stats record and
+            # the kernel step — nothing is derived twice per tick
+            sched = self._tick_schedule()
+            self._record_schedule(sched)
+            tokens = jnp.asarray(self.next_tokens)
+            ctx = jnp.asarray(self.ctx_lens, jnp.int32)
+            if self.attn_backend == "ref":
+                logits, self.cache = self._jit_decode(
+                    self.params, self.cache, tokens, ctx
+                )
+            else:
+                num_splits = fixed_split_factor(
+                    int(sched.seg_len.max(initial=1)),
+                    sched.num_segments, self.tile, self.num_workers,
+                )
+                with _quiet_donation():
+                    logits, self.cache = self._jit_kernel_step(
+                        self.params, self.cache, tokens, ctx,
+                        backend=self.attn_backend, sched=sched,
+                        num_splits=num_splits, fused=self.fused,
+                        interpret=self.interpret,
+                    )
+        else:
+            logits = self._tick_legacy_step(active)
+
+        # one host sync for the whole batch
+        next_all = np.asarray(jnp.argmax(logits, axis=-1))
+        out = {}
+        for s in active:
+            req = self.slot_req[s]
+            nxt = int(next_all[s])
+            req.generated.append(nxt)
+            self.next_tokens[s, 0] = nxt
+            self.ctx_lens[s] += 1
+            out[req.uid] = nxt
+            self.stats.tokens_generated += 1
+            if req.done or self.ctx_lens[s] >= self.cache_len - 1:
+                self.slot_req[s] = None
+                self.ctx_lens[s] = 0
+        self.stats.ticks += 1
+        self.stats.schedule_cache = self.sched_cache.stats.as_dict()
+        return out
+
+    # bounded schedule log: a steady-state server ticks forever; keep the
+    # benchmark/debug record from growing without limit
+    SCHEDULE_LOG_CAP = 512
+
+    def _record_schedule(self, sched: LeanSchedule):
+        # lens come from the schedule itself (one entry per batch slot), so
+        # the record is internally consistent: sum(ceil(len/tile)) * Hkv ==
+        # total_tiles whether the schedule is exact (legacy) or bucketed
         self.stats.schedules.append(
             {
-                "lens": lens,
+                "lens": sched.seg_len[:: self.cfg.n_kv_heads].tolist(),
                 "total_tiles": sched.total_tiles,
                 "tiles_per_worker": sched.tiles_per_worker,
                 "pieces": sched.num_pieces,
             }
         )
+        if len(self.stats.schedules) > self.SCHEDULE_LOG_CAP:
+            del self.stats.schedules[: -self.SCHEDULE_LOG_CAP]
+
+    def _tick_legacy_step(self, active: List[int]):
+        """Pre-fast-path behavior, preserved as the benchmark baseline:
+        the schedule is built for the stats record AND rebuilt inside
+        ``lean_decode``, and kernel backends run unjitted at the step
+        level."""
+        lens = [int(self.ctx_lens[s]) + 1 for s in active]
+        sched = make_schedule(
+            lens, self.cfg.n_kv_heads,
+            min(default_tile_size(self.cfg.head_dim), max(8, max(lens))),
+            self.num_workers,
+        )
+        self._record_schedule(sched)
 
         attn_fn = self._make_attn_fn()
         if attn_fn is None:
@@ -180,20 +380,7 @@ class DecodeEngine:
                 attn_fn=attn_fn,
                 ctx_lens=jnp.asarray(self.ctx_lens, jnp.int32),
             )
-        out = {}
-        for s in active:
-            req = self.slot_req[s]
-            nxt = int(jnp.argmax(logits[s]))
-            req.generated.append(nxt)
-            self.next_tokens[s, 0] = nxt
-            self.ctx_lens[s] += 1
-            out[req.uid] = nxt
-            self.stats.tokens_generated += 1
-            if req.done or self.ctx_lens[s] >= self.cache_len - 1:
-                self.slot_req[s] = None
-                self.ctx_lens[s] = 0
-        self.stats.ticks += 1
-        return out
+        return logits
 
     def run_to_completion(self, max_ticks: int = 10_000):
         while (self.queue or any(self.slot_req)) and self.stats.ticks < max_ticks:
@@ -202,7 +389,8 @@ class DecodeEngine:
 
 
 def _copy_slot(cache, cache1, slot):
-    """Copy batch row 0 of cache1 into row ``slot`` of cache."""
+    """Copy batch row 0 of cache1 into row ``slot`` of cache (legacy
+    full-tree rebuild, kept for the fast-path benchmark baseline)."""
     def cp(dst, src):
         return dst.at[:, slot].set(src[:, 0].astype(dst.dtype))
 

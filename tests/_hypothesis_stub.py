@@ -1,0 +1,131 @@
+"""Minimal stand-in for the ``hypothesis`` API surface this suite uses.
+
+The container image does not ship hypothesis and installing packages is not
+allowed, so ``conftest.py`` registers this module as ``hypothesis`` when the
+real one is missing. It implements deterministic random-sampling versions of
+``given`` / ``settings`` / ``strategies.{integers,lists,sampled_from,
+composite}`` — no shrinking, no database, just N seeded examples per test.
+Failures print the failing example so they can be reproduced.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+__version__ = "0.0-stub"
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class SearchStrategy:
+    """A strategy is just a function rng -> value."""
+
+    def __init__(self, sample, label="strategy"):
+        self._sample = sample
+        self._label = label
+
+    def example_from(self, rng):
+        return self._sample(rng)
+
+    def __repr__(self):
+        return f"<{self._label}>"
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return SearchStrategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            f"integers({min_value},{max_value})",
+        )
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return SearchStrategy(
+            lambda rng: elements[int(rng.integers(0, len(elements)))],
+            "sampled_from",
+        )
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def sample(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.example_from(rng) for _ in range(n)]
+
+        return SearchStrategy(sample, f"lists[{min_size},{max_size}]")
+
+    @staticmethod
+    def booleans():
+        return SearchStrategy(lambda rng: bool(rng.integers(0, 2)), "booleans")
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_):
+        return SearchStrategy(
+            lambda rng: float(rng.uniform(min_value, max_value)), "floats"
+        )
+
+    @staticmethod
+    def composite(fn):
+        @functools.wraps(fn)
+        def builder(*args, **kwargs):
+            def sample(rng):
+                draw = lambda strat: strat.example_from(rng)
+                return fn(draw, *args, **kwargs)
+
+            return SearchStrategy(sample, f"composite:{fn.__name__}")
+
+        return builder
+
+
+strategies = _Strategies()
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kwargs):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats, **kw_strats):
+    def deco(test):
+        @functools.wraps(test)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            # keep full sweeps bounded: this stub has no shrinking, so very
+            # large example counts only add runtime, not power
+            n = min(n, 100)
+            seed = zlib.crc32(test.__qualname__.encode("utf-8"))
+            rng = np.random.default_rng(seed)
+            for i in range(n):
+                vals = tuple(s.example_from(rng) for s in strats)
+                kw = {k: s.example_from(rng) for k, s in kw_strats.items()}
+                try:
+                    test(*args, *vals, **kwargs, **kw)
+                except Exception:
+                    print(
+                        f"[hypothesis-stub] falsifying example #{i} for "
+                        f"{test.__qualname__}: args={vals} kwargs={kw}"
+                    )
+                    raise
+
+        # strategy-filled params must not look like pytest fixtures
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied()
+
+
+class _Unsatisfied(Exception):
+    pass

@@ -45,6 +45,57 @@ def test_lean_decode_vs_oracle(case, dtype):
     )
 
 
+@pytest.mark.parametrize("case", DECODE_CASES)
+def test_lean_decode_fused_vs_two_phase_vs_oracle(case):
+    """The single-pallas_call fused partial+merge kernel must match both
+    the two-phase path and the jnp oracle on ragged batches. The case list
+    includes the 1-segment (B=1 MQA) and pieces>workers edge cases."""
+    B, Hq, Hkv, S, d, G, tile, ragged = case
+    rng = np.random.default_rng(hash(case) % 2**32 + 1)
+    q = mk(rng, (B, Hq, d), jnp.float32)
+    k = mk(rng, (B, Hkv, S, d), jnp.float32)
+    v = mk(rng, (B, Hkv, S, d), jnp.float32)
+    lens = list(rng.integers(1, S + 1, B)) if ragged else [S] * B
+    ref = lean_decode_ref(q, k, v, ctx_lens=jnp.asarray(lens, jnp.int32))
+    fused = lean_decode(q, k, v, lens, num_workers=G, tile=tile,
+                        fused=True, interpret=True)
+    two_phase = lean_decode(q, k, v, lens, num_workers=G, tile=tile,
+                            fused=False, interpret=True)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(two_phase),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lean_decode_fused_single_segment_single_piece():
+    """Degenerate 1-segment/1-worker problem: the whole context is one
+    piece; the fused kernel's merge phase reduces a single partial."""
+    rng = np.random.default_rng(3)
+    q = mk(rng, (1, 1, 16), jnp.float32)
+    k = mk(rng, (1, 1, 16, 16), jnp.float32)
+    v = mk(rng, (1, 1, 16, 16), jnp.float32)
+    ref = lean_decode_ref(q, k, v)
+    out = lean_decode(q, k, v, num_workers=1, tile=16, fused=True,
+                      interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lean_decode_fused_lse_matches_two_phase():
+    rng = np.random.default_rng(4)
+    B, Hq, Hkv, S, d = 2, 4, 2, 160, 32
+    q = mk(rng, (B, Hq, d), jnp.float32)
+    k = mk(rng, (B, Hkv, S, d), jnp.float32)
+    v = mk(rng, (B, Hkv, S, d), jnp.float32)
+    lens = [150, 37]
+    _, lse_f = lean_decode(q, k, v, lens, num_workers=5, tile=32,
+                           fused=True, interpret=True, return_lse=True)
+    _, lse_t = lean_decode(q, k, v, lens, num_workers=5, tile=32,
+                           fused=False, interpret=True, return_lse=True)
+    np.testing.assert_allclose(np.asarray(lse_f), np.asarray(lse_t),
+                               rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("case", DECODE_CASES[:4])
 def test_lean_decode_pallas_merge(case):
     B, Hq, Hkv, S, d, G, tile, ragged = case

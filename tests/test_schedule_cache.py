@@ -1,0 +1,161 @@
+"""Schedule cache: bucket lattice, hit/miss accounting, content hashing,
+and exactness of bucketed schedules vs exact-length schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.leantile import (
+    LeanSchedule,
+    ScheduleCache,
+    bucket_ctx_lens,
+    bucket_length,
+    make_schedule,
+)
+from repro.kernels import lean_decode
+from repro.kernels.ref import lean_decode_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ------------------------------------------------------------ bucket lattice
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 100_000), st.sampled_from([8, 16, 64, 128, 256]))
+def test_bucket_length_properties(n, tile):
+    b = bucket_length(n, tile)
+    assert b >= n                       # rounding is always UP
+    assert b % tile == 0                # whole tiles
+    tiles = b // tile
+    # power-of-two-ish lattice: 2^k or 3*2^k tile counts
+    while tiles % 2 == 0:
+        tiles //= 2
+    assert tiles in (1, 3)
+    # idempotent: a bucket maps to itself
+    assert bucket_length(b, tile) == b
+
+
+def test_bucket_length_capped_by_capacity():
+    assert bucket_length(100, 16, max_len=64) == 64
+    assert bucket_length(5, 16, max_len=64) == 16
+    # cap that is not itself on the lattice is still honored
+    assert bucket_length(300, 16, max_len=320) == 320
+    # non-tile-multiple capacity rounds UP (the KV buffer is padded to a
+    # tile multiple, so the partial last tile is real): never drop tokens
+    assert bucket_length(100, 64, max_len=100) == 128
+    assert bucket_length(100, 64, max_len=100) >= 100
+    # a length beyond capacity clamps to capacity coverage (never LESS than
+    # the attendable prefix): bucket covers min(n, max_len) fully
+    assert bucket_length(100, 16, max_len=48) == 48
+
+
+def test_bucket_count_is_logarithmic():
+    tile = 16
+    buckets = {bucket_length(n, tile) for n in range(1, 16_385)}
+    # 16384/16 = 1024 tiles -> {2^k, 3*2^k} <= ~21 buckets
+    assert len(buckets) <= 2 * 11
+
+
+def test_bucket_length_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        bucket_length(0, 16)
+
+
+# ------------------------------------------------------------ cache behavior
+def test_cache_hit_miss_counts_and_identity():
+    c = ScheduleCache()
+    s1 = c.get([30, 70, 5], 2, 16, 8)
+    assert (c.stats.hits, c.stats.misses) == (0, 1)
+    # different exact lengths, same buckets -> hit, SAME object
+    s2 = c.get([32, 65, 2], 2, 16, 8)
+    assert s2 is s1
+    assert (c.stats.hits, c.stats.misses) == (1, 1)
+    # bucket boundary crossed -> miss
+    s3 = c.get([33, 70, 5], 2, 16, 8)
+    assert s3 is not s1
+    assert (c.stats.hits, c.stats.misses) == (1, 2)
+    assert 0.0 < c.stats.hit_rate < 1.0
+    # descriptors were pre-packed on miss (zero numpy work on later ticks)
+    assert "_packed" in s1.__dict__ and "_packed_fused" in s1.__dict__
+
+
+def test_cache_lru_eviction():
+    c = ScheduleCache(max_entries=2)
+    c.get([16], 1, 16, 4)
+    c.get([32], 1, 16, 4)
+    c.get([64], 1, 16, 4)          # evicts [16]
+    assert len(c) == 2 and c.stats.evictions == 1
+    c.get([64], 1, 16, 4)          # still cached
+    assert c.stats.hits == 1
+    c.get([16], 1, 16, 4)          # was evicted -> miss again
+    assert c.stats.misses == 4
+
+
+def test_schedule_content_hash_and_eq():
+    a = make_schedule([64, 48], 2, 16, 4)
+    b = make_schedule([64, 48], 2, 16, 4)
+    d = make_schedule([64, 32], 2, 16, 4)
+    assert a == b and hash(a) == hash(b) and a is not b
+    assert a != d
+
+
+def test_schedule_is_valid_jit_static_arg():
+    traces = []
+
+    def step(x, *, sched):
+        traces.append(sched.num_pieces)
+        return x * sched.num_segments
+
+    jitted = jax.jit(step, static_argnames=("sched",))
+    c = ScheduleCache()
+    x = jnp.ones((2,))
+    jitted(x, sched=c.get([30], 1, 16, 4))
+    jitted(x, sched=c.get([31], 1, 16, 4))    # cache hit -> same trace
+    jitted(x, sched=make_schedule(bucket_ctx_lens([30], 16), 1, 16, 4))
+    assert len(traces) == 1                   # content-equal: no retrace
+    jitted(x, sched=c.get([200], 1, 16, 4))   # new signature -> retrace
+    assert len(traces) == 2
+
+
+# ------------------------------------------------- bucketed schedules: exact
+RAGGED_CASES = [
+    # B, Hq, Hkv, S, d, G, tile
+    (2, 4, 2, 300, 64, 5, 64),
+    (1, 8, 1, 200, 32, 6, 32),     # 1 segment (MQA, B=1)
+    (4, 4, 4, 130, 16, 3, 16),     # pieces >> workers
+]
+
+
+@pytest.mark.parametrize("case", RAGGED_CASES)
+def test_cached_bucketed_schedule_is_exact(case):
+    """The cache buckets lengths UP; runtime masking must keep results
+    identical to the exact-length schedule and the oracle."""
+    B, Hq, Hkv, S, d, G, tile = case
+    rng = np.random.default_rng(hash(case) % 2**32)
+    q = jnp.asarray(rng.standard_normal((B, Hq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, S, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, S, d)), jnp.float32)
+    lens = list(rng.integers(1, S + 1, B))
+    ref = lean_decode_ref(q, k, v, ctx_lens=jnp.asarray(lens, jnp.int32))
+    cache = ScheduleCache()
+    for fused in (False, True):
+        out = lean_decode(
+            q, k, v, lens, num_workers=G, tile=tile, fused=fused,
+            schedule_cache=cache, interpret=True,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5,
+            err_msg=f"fused={fused}",
+        )
+    # second call with perturbed lengths inside the same buckets: cache hit
+    lens2 = [max(1, l - 1) for l in lens]
+    before = cache.stats.hits
+    out2 = lean_decode(
+        q, k, v, lens2, num_workers=G, tile=tile, fused=True,
+        schedule_cache=cache, interpret=True,
+    )
+    ref2 = lean_decode_ref(q, k, v, ctx_lens=jnp.asarray(lens2, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(out2), np.asarray(ref2), rtol=1e-5, atol=1e-5
+    )
+    assert cache.stats.hits > before

@@ -59,6 +59,53 @@ def test_engine_backends_token_identical(setup):
     assert outs["ref"] == outs["fixed"], "fixed-split backend diverged"
 
 
+def test_fast_path_steady_state_zero_schedule_builds(setup):
+    """Acceptance: a steady-state decode tick with the lean backend does no
+    numpy schedule work — every tick after warmup is a schedule-cache hit
+    (the jitted step replays under the same schedule signature)."""
+    cfg, params = setup
+    eng = DecodeEngine(cfg, params, max_batch=2, cache_len=64,
+                       attn_backend="lean", num_workers=8)
+    for r in _requests(cfg):
+        eng.submit(r)
+    eng.run_to_completion(max_ticks=50)
+    st = eng.stats.schedule_cache
+    assert st["misses"] <= 2           # admission-shape warmup only
+    assert st["hits"] >= eng.stats.ticks - st["misses"]
+    assert st["hit_rate"] > 0.5
+
+
+def test_fast_path_matches_legacy_ref_tokens(setup):
+    """The jitted fast path (cached schedules, dynamic-update-slice admit)
+    must be a pure perf refactor: token-for-token identical to the legacy
+    unjitted reference engine."""
+    cfg, params = setup
+    outs = {}
+    for fast in (True, False):
+        eng = DecodeEngine(cfg, params, max_batch=2, cache_len=64,
+                           attn_backend="ref", use_fast_path=fast)
+        reqs = _requests(cfg)
+        for r in reqs:
+            eng.submit(r)
+        eng.run_to_completion(max_ticks=50)
+        outs[fast] = [tuple(r.generated) for r in reqs]
+    assert outs[True] == outs[False]
+
+
+def test_fused_and_two_phase_engine_tokens_identical(setup):
+    cfg, params = setup
+    outs = {}
+    for fused in (True, False):
+        eng = DecodeEngine(cfg, params, max_batch=2, cache_len=64,
+                           attn_backend="lean", num_workers=8, fused=fused)
+        reqs = _requests(cfg)
+        for r in reqs:
+            eng.submit(r)
+        eng.run_to_completion(max_ticks=50)
+        outs[fused] = [tuple(r.generated) for r in reqs]
+    assert outs[True] == outs[False]
+
+
 def test_ragged_schedules_are_balanced(setup):
     """Every tick's lean schedule gives each worker the same tile count
     (the paper's Fig. 6 property) despite ragged slot lengths."""
