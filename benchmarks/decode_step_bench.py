@@ -89,6 +89,79 @@ def _device_ms_per_tick(eng, n_reps=8):
     return (time.perf_counter() - t0) * 1e3 / n_reps
 
 
+def _attn_kv_bytes(eng) -> int:
+    """Bytes held by global-attention KV state (dense slot rows, or the
+    page pools in paged mode)."""
+    total = 0
+    for (pattern, reps), st_c in zip(eng.cfg.stages, eng.cache):
+        for kind, lc in zip(pattern, st_c):
+            if kind == "attn":
+                total += lc["k"].nbytes + lc["v"].nbytes
+    return total
+
+
+def _run_paged_section(cfg, params, n_ticks: int) -> dict:
+    """Paged vs dense: throughput with the lean fused kernel, KV memory
+    footprint, and the oversubscription headline — more in-flight slots
+    than the same token budget could hold densely."""
+    import numpy as np
+
+    from repro.serving.engine import DecodeEngine, Request
+
+    # throughput + memory: identical workload, paged vs dense engine.
+    # page_size matches the dense engine's tile (64) so both walk the same
+    # schedule signatures — the comparison isolates the page-table
+    # indirection, not bucket-transition trace costs (which interpret mode
+    # inflates ~1000x vs a real accelerator; see EXPERIMENTS.md).
+    eng_dense = _mk_engine(cfg, params, "lean", use_fast_path=True, fused=True)
+    tps_dense, _ = _ticks_per_sec(eng_dense, cfg, n_ticks)
+    eng_paged = _mk_engine(
+        cfg, params, "lean", use_fast_path=True, fused=True,
+        paged=True, page_size=eng_dense.tile,
+    )
+    tps_paged, _ = _ticks_per_sec(eng_paged, cfg, n_ticks)
+
+    # oversubscription demo: 8 slots backed by a pool holding only the
+    # dense-4-slot token budget; lazy paging lets all 8 run concurrently
+    ps, pps = 16, 64 // 16
+    eng_over = DecodeEngine(
+        cfg, params, max_batch=8, cache_len=64, attn_backend="ref",
+        paged=True, page_size=ps, num_pages=1 + 4 * pps,
+    )
+    rng = np.random.default_rng(0)
+    for uid in range(8):
+        eng_over.submit(Request(
+            uid=uid, prompt=rng.integers(0, cfg.vocab_size, 8),
+            max_new_tokens=12,
+        ))
+    max_active = 0
+    for _ in range(40):
+        eng_over.tick()
+        max_active = max(
+            max_active, sum(1 for r in eng_over.slot_req if r is not None)
+        )
+        if not eng_over.queue and not any(eng_over.slot_req):
+            break
+    eng_over.pool.check()
+
+    return {
+        "ticks_per_sec_dense": tps_dense,
+        "ticks_per_sec_paged": tps_paged,
+        "paged_over_dense_throughput": tps_paged / tps_dense,
+        "attn_kv_bytes_dense": _attn_kv_bytes(eng_dense),
+        "attn_kv_bytes_paged": _attn_kv_bytes(eng_paged),
+        "schedule_cache_paged": eng_paged.sched_cache.stats.as_dict(),
+        "pool": eng_paged.stats.kv_pool,
+        "oversubscription": {
+            "slots": 8,
+            "dense_equivalent_slots": 4,
+            "max_concurrent_slots": max_active,
+            "preemptions": eng_over.stats.preemptions,
+            "pool_high_water": eng_over.stats.kv_pool.get("high_water", 0),
+        },
+    }
+
+
 def run_decode_step(n_ticks: int = 24, out_path: str = "BENCH_decode_step.json",
                     rows: list | None = None) -> dict:
     import jax
@@ -131,13 +204,19 @@ def run_decode_step(n_ticks: int = 24, out_path: str = "BENCH_decode_step.json",
         "host_ms_per_tick": max(0.0, s_per_tick * 1e3 - dev_ms),
         "schedule_cache": cache_stats,
     }
+    result["paged"] = _run_paged_section(cfg, params, n_ticks)
     Path(out_path).write_text(json.dumps(result, indent=1))
     if rows is not None:
         d = result["decode_step"]
+        p = result["paged"]
         rows.append(("decode_step_fast_us_per_tick",
                      d["ms_per_tick_fast"] * 1e3, d["speedup_vs_legacy"]))
         rows.append(("decode_step_cache_hit_rate", 0.0,
                      cache_stats["hit_rate"]))
+        rows.append(("decode_step_paged_over_dense", 0.0,
+                     p["paged_over_dense_throughput"]))
+        rows.append(("decode_step_paged_max_concurrent", 0.0,
+                     float(p["oversubscription"]["max_concurrent_slots"])))
     return result
 
 
@@ -153,6 +232,7 @@ def main():
     result = run_decode_step(args.ticks, args.out)
     d = result["decode_step"]
     print(json.dumps(result, indent=1))
+    p = result["paged"]
     print(
         f"\nfast {d['ticks_per_sec_fast']:.2f} ticks/s vs legacy "
         f"{d['ticks_per_sec_legacy']:.2f} ticks/s "
@@ -160,6 +240,14 @@ def main():
         f"{d['schedule_cache']['hit_rate']:.2f}; "
         f"host {d['host_ms_per_tick']:.1f}ms + device "
         f"{d['device_ms_per_tick']:.1f}ms per tick"
+    )
+    o = p["oversubscription"]
+    print(
+        f"paged {p['ticks_per_sec_paged']:.2f} ticks/s "
+        f"({p['paged_over_dense_throughput']:.2f}x dense); "
+        f"oversub: {o['max_concurrent_slots']}/{o['slots']} slots live on a "
+        f"{o['dense_equivalent_slots']}-slot dense budget "
+        f"({o['preemptions']} preemptions)"
     )
 
 

@@ -41,6 +41,23 @@ def _length_mask(scores: jax.Array, ctx_lens: Optional[jax.Array], offset: int =
     return jnp.where(mask, scores, NEG_INF)
 
 
+def paged_gather_kv(pool: jax.Array, page_tbl: jax.Array) -> jax.Array:
+    """Materialize a dense per-sequence KV view from a paged pool.
+
+    ``pool: (num_pages, H_kv, page_size, d)``; ``page_tbl: (B, T) int32``
+    maps logical tile ``t`` of sequence ``b`` to a physical page (null-page
+    entries gather masked garbage — callers mask by context length).
+    Returns ``(B, H_kv, T * page_size, d)``.
+
+    This is the oracle for the page-routed kernels and the paged execution
+    path for backends without native paging (ref / fixed-split): gather then
+    run the dense schedule.
+    """
+    g = pool[page_tbl]                       # (B, T, H, page, d)
+    B, T, H, ps, d = g.shape
+    return jnp.moveaxis(g, 2, 1).reshape(B, H, T * ps, d)
+
+
 def mha_decode_ref(
     q: jax.Array,
     k: jax.Array,

@@ -187,6 +187,41 @@ class LeanSchedule:
             object.__setattr__(self, "_piece_ranges", pr)
         return pr
 
+    def iter_kv_meta(self, fused: bool = False):
+        """Per-grid-iteration KV routing metadata for the *paged* kernels:
+        ``(batch_idx, head_idx, tile_idx, is_partial)``, each ``(I,) int32``
+        with ``I = grid_iters`` (+ ``num_pieces`` merge rows when ``fused``).
+
+        A paged execution resolves iteration ``i`` to the physical KV page
+        ``page_table[batch_idx[i], tile_idx[i]]`` and kv head ``head_idx[i]``
+        (tile_size == page_size, so tiles map 1:1 onto pages). Only this
+        *logical* routing is emitted here — composing with the runtime page
+        table happens in :mod:`repro.kernels.ops` — so schedules stay
+        page-table-independent: :class:`ScheduleCache` keys remain pure
+        functions of the bucketed lengths and bucketing keeps hitting even
+        as sequences migrate across physical pages. Padding and merge rows
+        route to (0, 0, 0) with ``is_partial == 0``. Memoized like the
+        packed descriptors.
+        """
+        key = "_kv_meta_fused" if fused else "_kv_meta"
+        meta = self.__dict__.get(key)
+        if meta is None:
+            desc = self.fused_descriptors() if fused else self.packed_descriptors()
+            seg = desc[0]
+            ok = desc[6] == 1                           # OP_PARTIAL rows only
+            # index S (padding sentinel) lands on the appended 0
+            seg_batch_ext = np.append(self.seg_batch, 0).astype(np.int32)
+            seg_head_ext = np.append(self.seg_head, 0).astype(np.int32)
+            i32 = lambda a: np.ascontiguousarray(a, dtype=np.int32)
+            meta = (
+                i32(np.where(ok, seg_batch_ext[np.minimum(seg, self.num_segments)], 0)),
+                i32(np.where(ok, seg_head_ext[np.minimum(seg, self.num_segments)], 0)),
+                i32(np.where(ok, desc[1], 0)),
+                i32(ok),
+            )
+            object.__setattr__(self, key, meta)
+        return meta
+
     def max_pieces_per_worker(self) -> int:
         counts = np.zeros(self.num_workers, dtype=np.int64)
         T = self.tiles_per_worker
@@ -418,9 +453,12 @@ class ScheduleCache:
             return sched
         self.stats.misses += 1
         sched = make_schedule(lens, num_kv_heads, tile_size, num_workers)
-        # pre-pack both descriptor layouts so the miss pays all numpy cost
+        # pre-pack both descriptor layouts (and the paged-routing metadata)
+        # so the miss pays all numpy cost
         sched.packed_descriptors()
         sched.fused_descriptors()
+        sched.iter_kv_meta(fused=False)
+        sched.iter_kv_meta(fused=True)
         self._entries[key] = sched
         if len(self._entries) > self.max_entries:
             self._entries.popitem(last=False)

@@ -157,26 +157,35 @@ def _lean_decode_kernel(
 
 def lean_decode_partials(
     q_seg: jax.Array,          # (S_seg, gq, d)
-    k_seg: jax.Array,          # (S_seg, S_pad, d), S_pad % tile == 0
-    v_seg: jax.Array,
+    k_seg: jax.Array,          # dense: (S_seg, S_pad, d), S_pad % tile == 0
+    v_seg: jax.Array,          #   paged: (num_pages * H_kv, page_size, d)
     seg_ctx: jax.Array,        # (S_seg,) int32 runtime context lengths
     sched: LeanSchedule,
     scale: float,
     interpret: bool = False,
+    route: Optional[jax.Array] = None,   # paged: (G*T,) int32 pool rows
 ):
     """Phase 1: run the stream-K grid, return per-piece partials.
 
     Returns (o, m, l) with leading dim ``num_pieces`` (garbage row sliced
     off), f32. ``seg_ctx`` carries the true per-segment lengths; the
     schedule's (possibly bucketed) lengths only shape the tile walk.
+
+    ``route`` switches K/V fetching to the paged layout: tiles come from
+    flattened pool rows addressed by the routing operand instead of
+    contiguous (segment, tile) slices. The kernel body — and therefore the
+    fp op sequence — is identical either way.
     """
     S_seg, gq, d = q_seg.shape
     tile = sched.tile_size
     G, T = sched.num_workers, sched.tiles_per_worker
     P = sched.num_pieces
     desc = jnp.asarray(pack_descriptors(sched))
+    paged = route is not None
 
-    def q_map(g, t, desc, ctx):
+    # index maps take (*grid, *prefetch_refs); trailing *_ absorbs the
+    # extra routing operand in paged mode
+    def q_map(g, t, desc, *_):
         i = g * T + t
         # padded iters clamp to segment 0 (they do no work)
         return (
@@ -185,7 +194,7 @@ def lean_decode_partials(
             0,
         )
 
-    def kv_map(g, t, desc, ctx):
+    def kv_map_dense(g, t, desc, *_):
         i = g * T + t
         ok = desc[DESC_VALID, i] == OP_PARTIAL
         return (
@@ -194,14 +203,19 @@ def lean_decode_partials(
             0,
         )
 
-    def out_map(g, t, desc, ctx):
+    def kv_map_paged(g, t, desc, ctx, route):
+        return (route[g * T + t], 0, 0)
+
+    kv_map = kv_map_paged if paged else kv_map_dense
+
+    def out_map(g, t, desc, *_):
         return (desc[DESC_PIECE, g * T + t], 0, 0)
 
-    def stat_map(g, t, desc, ctx):
+    def stat_map(g, t, desc, *_):
         return (desc[DESC_PIECE, g * T + t], 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3 if paged else 2,
         grid=(G, T),
         in_specs=[
             pl.BlockSpec((1, gq, d), q_map),
@@ -220,13 +234,17 @@ def lean_decode_partials(
         ],
     )
     kernel = functools.partial(
-        _lean_decode_kernel, scale=scale, tile_size=tile, tiles_per_worker=T
+        _paged_partial_kernel if paged else _lean_decode_kernel,
+        scale=scale, tile_size=tile, tiles_per_worker=T,
     )
     out_shapes = [
         jax.ShapeDtypeStruct((P + 1, gq, d), jnp.float32),
         jax.ShapeDtypeStruct((P + 1, gq), jnp.float32),
         jax.ShapeDtypeStruct((P + 1, gq), jnp.float32),
     ]
+    operands = (desc, seg_ctx.astype(jnp.int32))
+    if paged:
+        operands += (route.astype(jnp.int32),)
     o_p, m_p, l_p = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -235,7 +253,7 @@ def lean_decode_partials(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(desc, seg_ctx.astype(jnp.int32), q_seg, k_seg, v_seg)
+    )(*operands, q_seg, k_seg, v_seg)
     return o_p[:P], m_p[:P], l_p[:P]
 
 
@@ -322,12 +340,13 @@ def fused_vmem_bytes(sched: LeanSchedule, gq: int, d: int) -> int:
 
 def lean_decode_fused(
     q_seg: jax.Array,          # (S_seg, gq, d)
-    k_seg: jax.Array,          # (S_seg, S_pad, d), S_pad % tile == 0
-    v_seg: jax.Array,
+    k_seg: jax.Array,          # dense: (S_seg, S_pad, d), S_pad % tile == 0
+    v_seg: jax.Array,          #   paged: (num_pages * H_kv, page_size, d)
     seg_ctx: jax.Array,        # (S_seg,) int32 runtime context lengths
     sched: LeanSchedule,
     scale: float,
     interpret: bool = False,
+    route: Optional[jax.Array] = None,   # paged: (G*T + P,) int32 pool rows
 ):
     """Fused stream-K decode: ONE ``pallas_call`` for partials AND merge.
 
@@ -340,6 +359,9 @@ def lean_decode_fused(
     zero HBM partial traffic and a single launch, the winning trade for
     decode-sized outputs. ``ops.lean_decode`` falls back to the two-phase
     path when :func:`fused_vmem_bytes` exceeds its budget.
+
+    ``route`` switches K/V fetching to the paged pool-row layout (see
+    :func:`lean_decode_partials`); merge iterations carry null routes.
     """
     S_seg, gq, d = q_seg.shape
     tile = sched.tile_size
@@ -347,15 +369,16 @@ def lean_decode_fused(
     P = sched.num_pieces
     desc = jnp.asarray(sched.fused_descriptors())
     N = G * T + P
+    paged = route is not None
 
-    def q_map(i, desc, ctx):
+    def q_map(i, desc, *_):
         return (
             jnp.where(desc[DESC_VALID, i] == OP_PAD, 0, desc[DESC_SEG, i]),
             0,
             0,
         )
 
-    def kv_map(i, desc, ctx):
+    def kv_map_dense(i, desc, *_):
         ok = desc[DESC_VALID, i] == OP_PARTIAL
         return (
             jnp.where(ok, desc[DESC_SEG, i], 0),
@@ -363,8 +386,13 @@ def lean_decode_fused(
             0,
         )
 
+    def kv_map_paged(i, desc, ctx, route):
+        return (route[i], 0, 0)
+
+    kv_map = kv_map_paged if paged else kv_map_dense
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3 if paged else 2,
         grid=(N,),
         in_specs=[
             pl.BlockSpec((1, gq, d), q_map),
@@ -375,8 +403,8 @@ def lean_decode_fused(
             # whole-output blocks: the index maps are constant, so the
             # buffers stay VMEM-resident across the grid and flush to HBM
             # exactly once at the end — no revisit hazards
-            pl.BlockSpec((S_seg, gq, d), lambda i, desc, ctx: (0, 0, 0)),
-            pl.BlockSpec((S_seg, gq), lambda i, desc, ctx: (0, 0)),
+            pl.BlockSpec((S_seg, gq, d), lambda i, *_: (0, 0, 0)),
+            pl.BlockSpec((S_seg, gq), lambda i, *_: (0, 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((gq, d), jnp.float32),
@@ -388,12 +416,16 @@ def lean_decode_fused(
         ],
     )
     kernel = functools.partial(
-        _lean_decode_fused_kernel, scale=scale, tile_size=tile
+        _paged_fused_kernel if paged else _lean_decode_fused_kernel,
+        scale=scale, tile_size=tile,
     )
     out_shapes = [
         jax.ShapeDtypeStruct((S_seg, gq, d), jnp.float32),
         jax.ShapeDtypeStruct((S_seg, gq), jnp.float32),
     ]
+    operands = (desc, seg_ctx.astype(jnp.int32))
+    if paged:
+        operands += (route.astype(jnp.int32),)
     o, lse = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -402,8 +434,64 @@ def lean_decode_fused(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,
-    )(desc, seg_ctx.astype(jnp.int32), q_seg, k_seg, v_seg)
+    )(*operands, q_seg, k_seg, v_seg)
     return o, lse
+
+
+# ------------------------------------------------------------------ paged
+# Page-table execution of the same stream-K schedules: K/V arrive as a
+# global page pool flattened to (num_pages * H_kv, page_size, d) and a third
+# scalar-prefetch operand carries, per grid iteration, the flattened pool
+# row ``page * H_kv + head`` to fetch (built in kernels.ops from
+# ``LeanSchedule.iter_kv_meta`` + the runtime page table). The kernel BODIES
+# are the dense ones unchanged — only the K/V BlockSpec index maps differ —
+# so paged and dense execution run the identical fp op sequence and produce
+# bit-identical outputs on identical inputs. Invalid/merge iterations route
+# to row 0 (the null page), whose contents are always masked.
+
+
+def _paged_partial_kernel(desc_ref, ctx_ref, route_ref, *refs, **kw):
+    _lean_decode_kernel(desc_ref, ctx_ref, *refs, **kw)
+
+
+def _paged_fused_kernel(desc_ref, ctx_ref, route_ref, *refs, **kw):
+    _lean_decode_fused_kernel(desc_ref, ctx_ref, *refs, **kw)
+
+
+def lean_decode_paged_partials(
+    q_seg: jax.Array,          # (S_seg, gq, d)
+    k_rows: jax.Array,         # (num_pages * H_kv, page_size, d) pool rows
+    v_rows: jax.Array,
+    seg_ctx: jax.Array,        # (S_seg,) int32 runtime context lengths
+    route: jax.Array,          # (G*T,) int32 pool row per iteration
+    sched: LeanSchedule,
+    scale: float,
+    interpret: bool = False,
+):
+    """Phase 1 of the paged path: :func:`lean_decode_partials` with the
+    routing operand. ``sched.tile_size`` must equal the pool's page size."""
+    return lean_decode_partials(
+        q_seg, k_rows, v_rows, seg_ctx, sched, scale,
+        interpret=interpret, route=route,
+    )
+
+
+def lean_decode_paged_fused(
+    q_seg: jax.Array,          # (S_seg, gq, d)
+    k_rows: jax.Array,         # (num_pages * H_kv, page_size, d) pool rows
+    v_rows: jax.Array,
+    seg_ctx: jax.Array,        # (S_seg,) int32 runtime context lengths
+    route: jax.Array,          # (G*T + P,) int32 pool row per iteration
+    sched: LeanSchedule,
+    scale: float,
+    interpret: bool = False,
+):
+    """Fused paged stream-K decode: :func:`lean_decode_fused` with the
+    routing operand."""
+    return lean_decode_fused(
+        q_seg, k_rows, v_rows, seg_ctx, sched, scale,
+        interpret=interpret, route=route,
+    )
 
 
 def _lean_merge_kernel(

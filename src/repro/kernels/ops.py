@@ -26,6 +26,7 @@ for schedules whose VMEM footprint exceeds the fused budget.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional, Sequence, Union
 
 import jax
@@ -42,6 +43,8 @@ from repro.core.merge import AttnPartial, finalize, merge_n, segment_merge
 from .lean_decode import (
     fused_vmem_bytes,
     lean_decode_fused,
+    lean_decode_paged_fused,
+    lean_decode_paged_partials,
     lean_decode_partials,
     lean_merge_pallas,
 )
@@ -51,11 +54,42 @@ from .flash_prefill import flash_prefill  # re-export
 __all__ = [
     "lean_decode",
     "lean_decode_from_schedule",
+    "lean_decode_paged",
+    "lean_decode_paged_from_schedule",
     "flash_decode",
     "flash_prefill",
     "default_num_workers",
     "FUSED_VMEM_BUDGET",
 ]
+
+
+def _clamp_ctx_lens(ctx_lens: Sequence[int], caps, what: str):
+    """Clamp per-sequence context lengths to their capacity, *loudly*.
+
+    ``caps`` is a scalar (dense KV capacity) or a per-sequence sequence
+    (paged: allocated pages * page_size). A length beyond its capacity can
+    only attend to what the backing store holds — but silently truncating
+    hides bugs upstream (a scheduler admitting contexts the cache cannot
+    hold), so overflow warns instead of passing unnoticed.
+    """
+    n = len(ctx_lens)
+    caps = [int(caps)] * n if np.ndim(caps) == 0 else [int(c) for c in caps]
+    clamped = [min(int(c), cap) for c, cap in zip(ctx_lens, caps)]
+    over = [
+        (i, int(c), cap)
+        for i, (c, cap) in enumerate(zip(ctx_lens, caps))
+        if int(c) > cap
+    ]
+    if over:
+        warnings.warn(
+            f"{what}: context length exceeds KV capacity for sequences "
+            f"{[(i, c, cap) for i, c, cap in over[:8]]}"
+            f"{'...' if len(over) > 8 else ''} — clamping (attention only "
+            "covers the stored tokens)",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+    return clamped
 
 # fused-path resident-state budget; ~half of a TPU core's VMEM, leaving room
 # for pipelined KV tiles. Schedules above this fall back to two-phase.
@@ -91,6 +125,16 @@ def _pad_kv(k_seg, v_seg, tile):
         k_seg = jnp.pad(k_seg, ((0, 0), (0, pad), (0, 0)))
         v_seg = jnp.pad(v_seg, ((0, 0), (0, pad), (0, 0)))
     return k_seg, v_seg
+
+
+def _merge_two_phase(o_p, m_p, l_p, sched, merge_impl, interpret):
+    """Phase 2 shared by the dense and paged two-phase paths: reduce the
+    per-piece partials per segment. Returns (o_seg, lse)."""
+    if merge_impl == "pallas":
+        return lean_merge_pallas(o_p, m_p, l_p, sched, interpret=interpret)
+    part = AttnPartial(o=o_p, m=m_p, l=l_p)
+    seg = segment_merge(part, jnp.asarray(sched.piece_seg), sched.num_segments)
+    return finalize(seg), seg.m + jnp.log(seg.l)
 
 
 def lean_decode_from_schedule(
@@ -133,17 +177,9 @@ def lean_decode_from_schedule(
         o_p, m_p, l_p = lean_decode_partials(
             q_seg, k_seg, v_seg, seg_ctx, sched, scale, interpret=interpret
         )
-        if merge_impl == "pallas":
-            o_seg, lse = lean_merge_pallas(
-                o_p, m_p, l_p, sched, interpret=interpret
-            )
-        else:
-            part = AttnPartial(o=o_p, m=m_p, l=l_p)
-            seg = segment_merge(
-                part, jnp.asarray(sched.piece_seg), sched.num_segments
-            )
-            o_seg = finalize(seg)
-            lse = seg.m + jnp.log(seg.l)
+        o_seg, lse = _merge_two_phase(
+            o_p, m_p, l_p, sched, merge_impl, interpret
+        )
     out = o_seg.reshape(B, Hq, d).astype(q.dtype)
     if return_lse:
         return out, lse.reshape(B, Hq)
@@ -175,7 +211,7 @@ def lean_decode(
     _, Hkv, S, _ = k.shape
     if ctx_lens is None:
         ctx_lens = [S] * B
-    ctx_lens = [min(int(c), S) for c in ctx_lens]   # clamp to KV capacity
+    ctx_lens = _clamp_ctx_lens(ctx_lens, S, "lean_decode")
     tile = tile or default_tile_size(d)
     tile = min(tile, max(8, S))
     num_workers = num_workers or default_num_workers()
@@ -190,6 +226,144 @@ def lean_decode(
     seg_ctx = jnp.asarray(np.repeat(np.asarray(ctx_lens), Hkv), jnp.int32)
     return lean_decode_from_schedule(
         q, k, v, seg_ctx, sched,
+        scale=scale, fused=fused, merge_impl=merge_impl,
+        interpret=interpret, return_lse=return_lse,
+    )
+
+
+def _paged_route(
+    sched: LeanSchedule, page_tbl: jax.Array, num_kv_heads: int, fused: bool
+) -> jax.Array:
+    """Per-grid-iteration flattened pool row ``page * H_kv + head``.
+
+    The schedule contributes static logical routing (batch, head, tile per
+    iteration — :meth:`LeanSchedule.iter_kv_meta`); the runtime page table
+    contributes the physical page. Invalid/merge iterations (and tiles past
+    the table width, which the runtime length always masks) route to the
+    null page's rows.
+    """
+    batch, head, tile_idx, ok = sched.iter_kv_meta(fused=fused)
+    width = page_tbl.shape[1]
+    pages = page_tbl[batch, np.minimum(tile_idx, width - 1)]
+    pages = jnp.where(jnp.asarray(ok) == 1, pages, 0)
+    return pages.astype(jnp.int32) * num_kv_heads + jnp.asarray(head)
+
+
+def lean_decode_paged_from_schedule(
+    q: jax.Array,                  # (B, Hq, d)
+    k_pool: jax.Array,             # (num_pages, Hkv, page_size, d)
+    v_pool: jax.Array,
+    seg_ctx: jax.Array,            # (B*Hkv,) int32 true context lengths
+    page_tbl: jax.Array,           # (B, pages_per_seq) int32 physical pages
+    sched: LeanSchedule,
+    *,
+    scale: Optional[float] = None,
+    fused: bool = True,
+    merge_impl: str = "xla",
+    interpret: bool = False,
+    return_lse: bool = False,
+):
+    """Jit-stable *paged* LeanAttention decode against a prebuilt schedule.
+
+    The paged twin of :func:`lean_decode_from_schedule`: K/V live in a
+    global page pool and each sequence's logical tiles resolve to physical
+    pages through ``page_tbl`` (``sched.tile_size`` must equal the pool's
+    page size; a lean tile IS a page). Pure in the array arguments
+    (q, pools, seg_ctx, page_tbl) — ``sched`` stays the only static key, so
+    schedule-cache hits keep hitting the jit trace cache no matter how
+    sequences migrate across physical pages.
+
+    Runs the identical fp op sequence as the dense path: on equal logical
+    inputs the outputs are bit-identical.
+    """
+    B, Hq, d = q.shape
+    num_pages, Hkv, page_size, _ = k_pool.shape
+    if page_size != sched.tile_size:
+        raise ValueError(
+            f"page_size {page_size} != schedule tile_size {sched.tile_size}"
+            " — lean tiles must map 1:1 onto pages"
+        )
+    scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
+    gq = Hq // Hkv
+    q_seg = q.reshape(B * Hkv, gq, d)
+    seg_ctx = seg_ctx.astype(jnp.int32)
+    # (page, head) flatten: a pool row is one head's page — this is a
+    # layout-preserving reshape (free), and it lets the paged kernels reuse
+    # the dense kernel bodies wholesale with a 1D routing operand
+    k_rows = k_pool.reshape(num_pages * Hkv, page_size, d)
+    v_rows = v_pool.reshape(num_pages * Hkv, page_size, d)
+
+    if fused and fused_vmem_bytes(sched, gq, d) > FUSED_VMEM_BUDGET:
+        fused = False
+    route = _paged_route(sched, page_tbl, Hkv, fused)
+    if fused:
+        o_seg, lse = lean_decode_paged_fused(
+            q_seg, k_rows, v_rows, seg_ctx, route, sched, scale,
+            interpret=interpret,
+        )
+    else:
+        o_p, m_p, l_p = lean_decode_paged_partials(
+            q_seg, k_rows, v_rows, seg_ctx, route, sched, scale,
+            interpret=interpret,
+        )
+        o_seg, lse = _merge_two_phase(
+            o_p, m_p, l_p, sched, merge_impl, interpret
+        )
+    out = o_seg.reshape(B, Hq, d).astype(q.dtype)
+    if return_lse:
+        return out, lse.reshape(B, Hq)
+    return out
+
+
+def lean_decode_paged(
+    q: jax.Array,                  # (B, Hq, d)
+    k_pool: jax.Array,             # (num_pages, Hkv, page_size, d)
+    v_pool: jax.Array,
+    page_tbl,                      # (B, pages_per_seq) int32 (host or device)
+    ctx_lens: Sequence[int],
+    *,
+    page_counts: Optional[Sequence[int]] = None,
+    num_workers: Optional[int] = None,
+    scale: Optional[float] = None,
+    fused: bool = True,
+    merge_impl: str = "xla",
+    schedule_cache: Optional[ScheduleCache] = None,
+    interpret: bool = False,
+    return_lse: bool = False,
+):
+    """Convenience paged decode: builds (or cache-fetches) the schedule from
+    host context lengths, then runs :func:`lean_decode_paged_from_schedule`.
+
+    Lengths clamp to each sequence's *allocated* capacity — ``page_counts``
+    (pages actually held, straight from
+    :meth:`repro.serving.kvpool.KVPagePool.count`) times the page size — not
+    to the dense table width; overflow warns instead of truncating silently.
+    When ``page_counts`` is omitted it is inferred from the table under the
+    null-page convention (page 0 is never allocated, so non-null entries
+    count allocated pages).
+    """
+    B, Hq, d = q.shape
+    num_pages, Hkv, page_size, _ = k_pool.shape
+    ptbl_np = np.asarray(page_tbl)
+    if ptbl_np.shape[0] != B:
+        raise ValueError("page table rows must match the batch")
+    if page_counts is None:
+        page_counts = (ptbl_np != 0).sum(axis=1)
+    ctx_lens = _clamp_ctx_lens(
+        ctx_lens, np.asarray(page_counts) * page_size, "lean_decode_paged"
+    )
+    ctx_lens = [max(1, c) for c in ctx_lens]        # schedule needs >= 1
+    num_workers = num_workers or default_num_workers()
+    max_len = ptbl_np.shape[1] * page_size
+    if schedule_cache is not None:
+        sched = schedule_cache.get(
+            ctx_lens, Hkv, page_size, num_workers, max_len=max_len
+        )
+    else:
+        sched = make_schedule(ctx_lens, Hkv, page_size, num_workers)
+    seg_ctx = jnp.asarray(np.repeat(np.asarray(ctx_lens), Hkv), jnp.int32)
+    return lean_decode_paged_from_schedule(
+        q, k_pool, v_pool, seg_ctx, jnp.asarray(ptbl_np, jnp.int32), sched,
         scale=scale, fused=fused, merge_impl=merge_impl,
         interpret=interpret, return_lse=return_lse,
     )
@@ -247,7 +421,7 @@ def flash_decode(
     _, Hkv, S, _ = k.shape
     if ctx_lens is None:
         ctx_lens = [S] * B
-    ctx_lens = [min(int(c), S) for c in ctx_lens]   # clamp to KV capacity
+    ctx_lens = _clamp_ctx_lens(ctx_lens, S, "flash_decode")
     tile = tile or default_tile_size(d)
     tile = min(tile, max(8, S))
     scale = scale if scale is not None else 1.0 / float(np.sqrt(d))

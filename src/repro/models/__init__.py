@@ -3,6 +3,7 @@ from .transformer import (
     ModelConfig,
     init_params,
     init_cache,
+    init_paged_cache,
     forward,
     loss_fn,
     prefill,

@@ -197,6 +197,75 @@ def attn_decode(
     return out.astype(x.dtype), k_cache, v_cache
 
 
+def attn_decode_paged(
+    p,
+    x: jax.Array,                 # (B, 1, D) current token
+    k_pool: jax.Array,            # (num_pages, Hkv, page_size, hd)
+    v_pool: jax.Array,
+    page_tbl: jax.Array,          # (B, pages_per_slot) int32
+    cur_len,                      # scalar int32 (kept for API symmetry)
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: Optional[float] = 10000.0,
+    compute_dtype=jnp.bfloat16,
+    attn_fn=None,                 # override: f(q, k_pool, v_pool, ctx) -> out
+    ctx_lens: Optional[jax.Array] = None,   # (B,) per-slot lengths, required
+):
+    """Paged twin of :func:`attn_decode` for global-attention layers.
+
+    The KV cache is a global page pool shared by every slot; ``page_tbl``
+    maps each slot's logical tiles to physical pages. The new token's K/V
+    scatter into page ``page_tbl[b, ctx_b // page_size]`` at offset
+    ``ctx_b % page_size`` — idle slots (``ctx == 0`` with an all-null table
+    row) write the reserved null page, whose contents are always masked.
+    ``attn_fn`` receives the *pools* plus the visible lengths (the paged
+    lean kernel consumes them natively; ref/fixed backends gather first).
+    Returns (out, k_pool, v_pool).
+    """
+    if ctx_lens is None:
+        raise ValueError("paged decode requires per-slot ctx_lens")
+    B, _, D = x.shape
+    ps = k_pool.shape[2]
+    capacity = page_tbl.shape[1] * ps
+    xc = x.astype(compute_dtype)
+    q = (xc @ p["wq"].astype(compute_dtype)).reshape(B, 1, n_heads, head_dim)
+    k = (xc @ p["wk"].astype(compute_dtype)).reshape(B, 1, n_kv, head_dim)
+    v = (xc @ p["wv"].astype(compute_dtype)).reshape(B, 1, n_kv, head_dim)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if rope_theta is not None:
+        pos = ctx_lens[:, None]                      # (B, 1) per slot
+        q = rope(q, pos, rope_theta)
+        k = rope(k, pos, rope_theta)
+    # scatter the token into its slot's current page
+    write_pos = jnp.minimum(ctx_lens, capacity - 1)
+    pages_w = page_tbl[jnp.arange(B), write_pos // ps]
+    offs = write_pos % ps
+    k_pool = k_pool.at[pages_w, :, offs].set(k[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[pages_w, :, offs].set(v[:, 0].astype(v_pool.dtype))
+    ctx = jnp.minimum(ctx_lens + 1, capacity).astype(jnp.int32)
+    qd = q.reshape(B, n_heads, head_dim)
+    k_eff, v_eff = k_pool, v_pool
+    if k_pool.dtype not in (jnp.bfloat16, jnp.float16, jnp.float32):
+        k_eff = k_pool.astype(compute_dtype)
+        v_eff = v_pool.astype(compute_dtype)
+    if attn_fn is not None:
+        o = attn_fn(qd, k_eff, v_eff, ctx)
+    else:
+        from repro.core.attention import mha_decode_ref, paged_gather_kv
+
+        o = mha_decode_ref(
+            qd, paged_gather_kv(k_eff, page_tbl),
+            paged_gather_kv(v_eff, page_tbl), ctx_lens=ctx,
+        )
+    o = o.reshape(B, 1, n_heads * head_dim).astype(compute_dtype)
+    out = o @ p["wo"].astype(compute_dtype)
+    return out.astype(x.dtype), k_pool, v_pool
+
+
 # ---------------------------------------------------------------- FFN
 def ffn_init(rng, d_model, d_ff, kind="swiglu", dtype=jnp.float32):
     ks = jax.random.split(rng, 3)

@@ -33,6 +33,7 @@ from repro.core.attention import mha_prefill_chunked
 from repro.distributed.hints import hint
 from .layers import (
     attn_decode,
+    attn_decode_paged,
     attn_forward,
     attn_init,
     dense_init,
@@ -209,6 +210,45 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
                     lambda x: jnp.broadcast_to(x, (reps,) + x.shape), one
                 )
             )
+        cache.append(tuple(unit))
+    return cache
+
+
+def init_paged_cache(
+    cfg: ModelConfig,
+    batch: int,
+    cache_len: int,
+    num_pages: int,
+    page_size: int,
+    kv_dtype=None,
+):
+    """Decode-state pytree for the *paged* engine.
+
+    Global-attention (``attn``) layers hold a shared page pool
+    ``(num_pages, H_kv, page_size, head_dim)`` instead of per-slot dense
+    rows — slot capacity decouples from max context. Sliding-window caches
+    stay dense rings (bounded by the window, they are not the long-context
+    memory wall), and cross-attention / recurrent state stays per-slot.
+    The same logical page ids index every layer's pool (one allocator, many
+    pools), exactly as in paged-attention serving stacks.
+    """
+    if kv_dtype is None:
+        kv_dtype = (
+            jnp.float8_e4m3fn if cfg.kv_cache_dtype == "f8" else jnp.bfloat16
+        )
+    dense = init_cache(cfg, batch, cache_len, kv_dtype=kv_dtype)
+    pool = jnp.zeros(
+        (num_pages, cfg.n_kv_heads, page_size, cfg.head_dim), kv_dtype
+    )
+    cache = []
+    for (pattern, reps), stage_c in zip(cfg.stages, dense):
+        unit = []
+        for kind, lc in zip(pattern, stage_c):
+            if kind == "attn":
+                lc = dict(lc)
+                lc["k"] = jnp.broadcast_to(pool, (reps,) + pool.shape)
+                lc["v"] = jnp.broadcast_to(pool, (reps,) + pool.shape)
+            unit.append(lc)
         cache.append(tuple(unit))
     return cache
 
@@ -510,8 +550,14 @@ def decode_step(
     attn_fn: Optional[Callable] = None,
     win_attn_fn: Optional[Callable] = None,
     ctx_lens: Optional[jax.Array] = None,   # per-slot lengths (ragged)
+    page_tbl: Optional[jax.Array] = None,   # paged KV: (B, pages_per_slot)
 ):
-    """One decode step. Returns (logits (B, V), new_cache)."""
+    """One decode step. Returns (logits (B, V), new_cache).
+
+    ``page_tbl`` switches global-attention layers to the paged KV path: the
+    cache tree must come from :func:`init_paged_cache`, and ``attn_fn`` (if
+    any) receives the page pools instead of dense per-slot KV.
+    """
     x = _embed(params, cfg, tokens, offset=cur_len)
     new_cache = []
     for (pattern, reps), stage_p, stage_c in zip(
@@ -524,15 +570,25 @@ def decode_step(
             for kind, lp, lc in zip(pattern, up, uc):
                 if kind in ATTN_KINDS:
                     window = cfg.window if kind == "win" else None
-                    h, kc, vc = attn_decode(
-                        lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
-                        lc["k"], lc["v"], cur_len,
-                        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
-                        head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
-                        window=window,
-                        attn_fn=win_attn_fn if kind == "win" else attn_fn,
-                        ctx_lens=ctx_lens,
-                    )
+                    if page_tbl is not None and kind == "attn":
+                        h, kc, vc = attn_decode_paged(
+                            lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                            lc["k"], lc["v"], page_tbl, cur_len,
+                            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                            head_dim=cfg.head_dim,
+                            rope_theta=cfg.rope_theta,
+                            attn_fn=attn_fn, ctx_lens=ctx_lens,
+                        )
+                    else:
+                        h, kc, vc = attn_decode(
+                            lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                            lc["k"], lc["v"], cur_len,
+                            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+                            window=window,
+                            attn_fn=win_attn_fn if kind == "win" else attn_fn,
+                            ctx_lens=ctx_lens,
+                        )
                     x = x + h
                     nc = {"k": kc, "v": vc}
                     if kind == "xattn":

@@ -33,6 +33,17 @@ Attention backends:
   * 'ref'    — pure-jnp oracle (fast under jit on CPU).
 
 All backends compute exact attention; the schedule is what differs.
+
+Paged KV mode (``paged=True``, fast path only): global-attention KV lives
+in a page pool ``(num_pages, H_kv, page_size, d)`` managed by
+:class:`repro.serving.kvpool.KVPagePool` instead of dense per-slot rows.
+Admission allocates only the pages the prompt needs (copy-on-admit scatter),
+decode grows sequences page-by-page, and finishing a request returns its
+pages immediately — slot capacity decouples from worst-case context, so an
+undersized pool (``num_pages``) oversubscribes slots and preempts (evict +
+recompute-resume) only when the pool actually fills. The 'lean' backend
+fetches KV tiles *through the page table* natively (tile == page);
+'ref'/'fixed' gather to dense per-slot views first.
 """
 from __future__ import annotations
 
@@ -52,12 +63,21 @@ from repro.core.leantile import (
     fixed_split_factor,
     make_schedule,
 )
+from repro.core.attention import paged_gather_kv
 from repro.kernels import flash_decode, lean_decode
 from repro.kernels.ops import (
     flash_decode_from_lens,
     lean_decode_from_schedule,
+    lean_decode_paged_from_schedule,
 )
-from repro.models import ModelConfig, decode_step, init_cache, prefill
+from repro.models import (
+    ModelConfig,
+    decode_step,
+    init_cache,
+    init_paged_cache,
+    prefill,
+)
+from repro.serving.kvpool import KVPagePool
 
 import contextlib
 
@@ -90,8 +110,10 @@ class EngineStats:
     ticks: int = 0
     tokens_generated: int = 0
     prefills: int = 0
+    preemptions: int = 0
     schedules: List[dict] = field(default_factory=list)
     schedule_cache: dict = field(default_factory=dict)
+    kv_pool: dict = field(default_factory=dict)
 
 
 def _write_slot(cache, cache1, slot):
@@ -109,6 +131,84 @@ def _write_slot(cache, cache1, slot):
         return jax.lax.dynamic_update_slice(dst, row, start)
 
     return jax.tree.map(cp, cache, cache1)
+
+
+def _pages_admit_write(pool, src, pages, page_size):
+    """Copy-on-admit: scatter a freshly-prefilled slot's KV into its pages.
+
+    ``pool: (reps, num_pages, H, page_size, hd)``; ``src`` is batch row 0 of
+    the prefill cache ``(reps, 1, H, cache_len, hd)``; ``pages: (n,)`` the
+    slot's physical page ids. Whole pages are written (tail padded), so any
+    stale data in recycled pages is overwritten on admit.
+    """
+    reps, _, H, L, hd = src.shape
+    n = pages.shape[0]
+    need = n * page_size
+    s = src[:, 0]
+    if need > L:
+        s = jnp.pad(s, ((0, 0), (0, 0), (0, need - L), (0, 0)))
+    chunks = s[:, :, :need].reshape(reps, H, n, page_size, hd)
+    chunks = jnp.moveaxis(chunks, 2, 1)          # (reps, n, H, ps, hd)
+    return pool.at[:, pages].set(chunks.astype(pool.dtype))
+
+
+def _write_slot_paged(cache, cache1, pages, slot, *, cfg: ModelConfig,
+                      page_size: int):
+    """Paged admission write: 'attn' pools take the page scatter, everything
+    else (win rings, cross-attn, recurrent state) takes the dense slot row
+    write. Jitted with the destination donated, like ``_write_slot``."""
+    out = []
+    for (pattern, reps), st_c, st_c1 in zip(cfg.stages, cache, cache1):
+        unit = []
+        for kind, lc, lc1 in zip(pattern, st_c, st_c1):
+            if kind == "attn":
+                nc = dict(lc)
+                nc["k"] = _pages_admit_write(lc["k"], lc1["k"], pages, page_size)
+                nc["v"] = _pages_admit_write(lc["v"], lc1["v"], pages, page_size)
+                unit.append(nc)
+            else:
+                unit.append(_write_slot(lc, lc1, slot))
+        out.append(tuple(unit))
+    return out
+
+
+def _kernel_decode_step_paged(
+    params,
+    cache,
+    tokens,
+    ctx_lens,
+    page_tbl,
+    *,
+    cfg: ModelConfig,
+    backend: str,
+    sched: LeanSchedule,
+    num_splits: int,
+    fused: bool,
+    interpret: bool,
+):
+    """Paged twin of ``_kernel_decode_step``: the page table rides along as
+    a runtime array (no retrace when sequences migrate across pages); the
+    lean backend fetches tiles through it natively, the fixed-split
+    baseline gathers to dense first."""
+
+    def attn_fn(q, k_pool, v_pool, ctx):
+        seg_ctx = jnp.repeat(ctx.astype(jnp.int32), cfg.n_kv_heads)
+        if backend == "lean":
+            return lean_decode_paged_from_schedule(
+                q, k_pool, v_pool, seg_ctx, page_tbl, sched,
+                fused=fused, interpret=interpret,
+            )
+        return flash_decode_from_lens(
+            q, paged_gather_kv(k_pool, page_tbl),
+            paged_gather_kv(v_pool, page_tbl), seg_ctx,
+            num_splits=num_splits, tile=sched.tile_size, interpret=interpret,
+        )
+
+    cur = jnp.max(ctx_lens)
+    return decode_step(
+        params, cfg, cache, tokens, cur, attn_fn=attn_fn,
+        ctx_lens=ctx_lens, page_tbl=page_tbl,
+    )
 
 
 def _kernel_decode_step(
@@ -162,6 +262,9 @@ class DecodeEngine:
         fused: bool = True,
         interpret: Optional[bool] = None,
         schedule_cache_entries: int = 128,
+        paged: bool = False,
+        page_size: Optional[int] = None,
+        num_pages: Optional[int] = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -171,6 +274,7 @@ class DecodeEngine:
         self.num_workers = num_workers
         self.use_fast_path = use_fast_path
         self.fused = fused
+        self.paged = paged
         # Pallas interpret mode: default on for CPU hosts (tests/bench),
         # off on real accelerators where Mosaic compiles the kernels
         self.interpret = (
@@ -178,24 +282,62 @@ class DecodeEngine:
         )
         self.stats = EngineStats()
 
-        self.cache = init_cache(cfg, max_batch, cache_len)
+        # tile is fixed per engine (schedule/jit key stability); the cache
+        # capacity bounds every slot's visible context. Paged mode: lean
+        # tiles map 1:1 onto KV pages, so page_size overrides the tile.
+        if paged and page_size is not None:
+            self.tile = int(page_size)
+        else:
+            self.tile = min(default_tile_size(cfg.head_dim), max(8, cache_len))
+        self.pages_per_slot = -(-cache_len // self.tile)
+
+        if paged:
+            if not use_fast_path:
+                raise ValueError(
+                    "paged KV requires the fast path (use_fast_path=True)"
+                )
+            # default pool = dense-equivalent token capacity (+ null page);
+            # pass a smaller num_pages to oversubscribe slots vs memory
+            if num_pages is None:
+                num_pages = 1 + max_batch * self.pages_per_slot
+            self.pool = KVPagePool(num_pages, self.tile)
+            self.page_tbl = np.zeros(
+                (max_batch, self.pages_per_slot), dtype=np.int32
+            )
+            self.cache = init_paged_cache(
+                cfg, max_batch, cache_len, num_pages, self.tile
+            )
+        else:
+            self.pool = None
+            self.page_tbl = None
+            self.cache = init_cache(cfg, max_batch, cache_len)
         self.ctx_lens = np.zeros(max_batch, dtype=np.int64)   # per-slot
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.queue: List[Request] = []
         self.next_tokens = np.zeros((max_batch, 1), dtype=np.int32)
 
-        # tile is fixed per engine (schedule/jit key stability); the cache
-        # capacity bounds every slot's visible context
-        self.tile = min(default_tile_size(cfg.head_dim), max(8, cache_len))
         self.sched_cache = ScheduleCache(max_entries=schedule_cache_entries)
 
         self._jit_decode = jax.jit(self._decode_fn)
+        self._jit_decode_paged = jax.jit(self._decode_fn_paged)
         self._jit_prefill_slot = jax.jit(
             self._prefill_fn, static_argnames=("plen",)
         )
         self._jit_admit = jax.jit(_write_slot, donate_argnums=(0,))
+        self._jit_admit_paged = jax.jit(
+            functools.partial(
+                _write_slot_paged, cfg=cfg, page_size=self.tile
+            ),
+            donate_argnums=(0,),
+        )
         self._jit_kernel_step = jax.jit(
             functools.partial(_kernel_decode_step, cfg=cfg),
+            static_argnames=("backend", "sched", "num_splits", "fused",
+                             "interpret"),
+            donate_argnames=("cache",),
+        )
+        self._jit_kernel_step_paged = jax.jit(
+            functools.partial(_kernel_decode_step_paged, cfg=cfg),
             static_argnames=("backend", "sched", "num_splits", "fused",
                              "interpret"),
             donate_argnames=("cache",),
@@ -245,6 +387,14 @@ class DecodeEngine:
         )
         return logits, new_cache
 
+    def _decode_fn_paged(self, params, cache, tokens, ctx_lens, page_tbl):
+        cur = jnp.max(ctx_lens)
+        logits, new_cache = decode_step(
+            params, self.cfg, cache, tokens, cur, ctx_lens=ctx_lens,
+            page_tbl=page_tbl,
+        )
+        return logits, new_cache
+
     def _prefill_fn(self, params, tokens, plen):
         logits, cache, cur = prefill(
             params, self.cfg, tokens, cache_len=self.cache_len
@@ -258,15 +408,48 @@ class DecodeEngine:
     def _admit(self):
         for slot in range(self.max_batch):
             if self.slot_req[slot] is None and self.queue:
-                req = self.queue.pop(0)
-                self.slot_req[slot] = req
+                req = self.queue[0]
                 plen = len(req.prompt)
+                pages = None
+                if self.paged:
+                    # a request whose minimum working set (prompt pages +
+                    # the first decode write) exceeds the whole pool can
+                    # NEVER be served — failing fast beats the silent
+                    # admit/preempt livelock waiting for pages that cannot
+                    # materialize
+                    min_pages = min(
+                        self.pages_per_slot, plen // self.tile + 1
+                    )
+                    if min_pages > self.pool.usable_pages:
+                        raise RuntimeError(
+                            f"request uid={req.uid} needs {min_pages} KV "
+                            f"pages ({plen}-token prompt @ page_size "
+                            f"{self.tile}) but the pool holds only "
+                            f"{self.pool.usable_pages} usable pages — "
+                            "raise num_pages or shorten the prompt"
+                        )
+                    # pages allocate lazily: admission takes only what the
+                    # prompt needs, decode grows page-by-page
+                    n = max(1, -(-plen // self.tile))
+                    pages = self.pool.alloc(slot, n)
+                    if pages is None:
+                        break           # pool exhausted; retry next tick
+                    self.page_tbl[slot, :n] = pages
+                self.queue.pop(0)
+                self.slot_req[slot] = req
                 toks = jnp.asarray(req.prompt[None, :], jnp.int32)
                 logits, cache1 = self._jit_prefill_slot(
                     self.params, toks, plen=plen
                 )
                 # copy slot-0 of the fresh cache into our slot
-                if self.use_fast_path:
+                if self.paged:
+                    with _quiet_donation():
+                        self.cache = self._jit_admit_paged(
+                            self.cache, cache1,
+                            jnp.asarray(pages, jnp.int32),
+                            jnp.asarray(slot, jnp.int32),
+                        )
+                elif self.use_fast_path:
                     with _quiet_donation():
                         self.cache = self._jit_admit(
                             self.cache, cache1, jnp.asarray(slot, jnp.int32)
@@ -279,11 +462,55 @@ class DecodeEngine:
                 self.next_tokens[slot, 0] = nxt
                 self.stats.prefills += 1
 
+    # ------------------------------------------------------------ paged mgmt
+    def _ensure_decode_pages(self, active: List[int]) -> List[int]:
+        """Grow each active slot's page list to cover this tick's KV write.
+        A slot the pool cannot serve is preempted (pages freed, request
+        requeued for recompute-resume) — the paged analogue of running out
+        of batch slots, except it only triggers when the pool is
+        oversubscribed."""
+        alive = []
+        for s in active:
+            need = min(int(self.ctx_lens[s]) // self.tile + 1,
+                       self.pages_per_slot)
+            have = self.pool.count(s)
+            if have < need:
+                got = self.pool.alloc(s, need - have)
+                if got is None:
+                    self._preempt(s)
+                    continue
+                self.page_tbl[s, have:need] = got
+            alive.append(s)
+        return alive
+
+    def _preempt(self, slot: int):
+        """Evict a slot: return its pages to the pool and requeue the
+        request to resume by recompute (prompt extended with everything
+        generated so far, so the next prefill rebuilds its exact state)."""
+        req = self.slot_req[slot]
+        self.pool.free_seq(slot, eviction=True)
+        self.page_tbl[slot, :] = 0
+        self.slot_req[slot] = None
+        self.ctx_lens[slot] = 0
+        req.prompt = np.concatenate(
+            [np.asarray(req.prompt),
+             np.asarray(req.generated, dtype=np.asarray(req.prompt).dtype)]
+        )
+        self.queue.insert(0, req)
+        self.stats.preemptions += 1
+
+    def _free_slot_pages(self, slot: int):
+        if self.paged:
+            self.pool.free_seq(slot)
+            self.page_tbl[slot, :] = 0
+
     def tick(self) -> Dict[int, int]:
         """Admit + one decode step for all active slots. Returns
         {uid: new_token}."""
         self._admit()
         active = [s for s in range(self.max_batch) if self.slot_req[s]]
+        if self.paged:
+            active = self._ensure_decode_pages(active)
         if not active:
             return {}
 
@@ -294,22 +521,36 @@ class DecodeEngine:
             self._record_schedule(sched)
             tokens = jnp.asarray(self.next_tokens)
             ctx = jnp.asarray(self.ctx_lens, jnp.int32)
+            ptbl = jnp.asarray(self.page_tbl) if self.paged else None
             if self.attn_backend == "ref":
-                logits, self.cache = self._jit_decode(
-                    self.params, self.cache, tokens, ctx
-                )
+                if self.paged:
+                    logits, self.cache = self._jit_decode_paged(
+                        self.params, self.cache, tokens, ctx, ptbl
+                    )
+                else:
+                    logits, self.cache = self._jit_decode(
+                        self.params, self.cache, tokens, ctx
+                    )
             else:
                 num_splits = fixed_split_factor(
                     int(sched.seg_len.max(initial=1)),
                     sched.num_segments, self.tile, self.num_workers,
                 )
                 with _quiet_donation():
-                    logits, self.cache = self._jit_kernel_step(
-                        self.params, self.cache, tokens, ctx,
-                        backend=self.attn_backend, sched=sched,
-                        num_splits=num_splits, fused=self.fused,
-                        interpret=self.interpret,
-                    )
+                    if self.paged:
+                        logits, self.cache = self._jit_kernel_step_paged(
+                            self.params, self.cache, tokens, ctx, ptbl,
+                            backend=self.attn_backend, sched=sched,
+                            num_splits=num_splits, fused=self.fused,
+                            interpret=self.interpret,
+                        )
+                    else:
+                        logits, self.cache = self._jit_kernel_step(
+                            self.params, self.cache, tokens, ctx,
+                            backend=self.attn_backend, sched=sched,
+                            num_splits=num_splits, fused=self.fused,
+                            interpret=self.interpret,
+                        )
         else:
             logits = self._tick_legacy_step(active)
 
@@ -327,8 +568,14 @@ class DecodeEngine:
             if req.done or self.ctx_lens[s] >= self.cache_len - 1:
                 self.slot_req[s] = None
                 self.ctx_lens[s] = 0
+                # finished sequences return their pages immediately — this
+                # is what lets the pool admit more in-flight work than a
+                # dense worst-case cache could hold
+                self._free_slot_pages(s)
         self.stats.ticks += 1
         self.stats.schedule_cache = self.sched_cache.stats.as_dict()
+        if self.paged:
+            self.stats.kv_pool = self.pool.as_dict()
         return out
 
     # bounded schedule log: a steady-state server ticks forever; keep the

@@ -1,0 +1,217 @@
+"""Paged KV-cache pool: a block allocator over a global page pool.
+
+Dense decode caches reserve ``(slots, H_kv, S_max, d)`` for the *worst-case*
+context of every slot — the memory wall that blocks long-context serving.
+This module replaces that with the standard paged layout: one global pool of
+fixed-size pages
+
+    k_pool, v_pool : (num_pages, H_kv, page_size, d)
+
+plus a small per-sequence *page table* mapping logical KV tile ``t`` of a
+sequence to a physical page id. A LeanAttention tile is already a fixed-size
+KV chunk, so tiles map 1:1 onto pages (``tile_size == page_size``) and the
+stream-K descriptor stream just gains a page-table indirection (see
+:mod:`repro.kernels.lean_decode`).
+
+This module is the *host-side* allocator: it owns the free list, the
+per-sequence page lists, and the accounting invariants
+
+    allocated + free == usable pages          (no leaks)
+    live sequences hold disjoint page sets    (no aliasing)
+
+The device-side pool arrays live in the engine's cache pytree; freeing here
+never touches device memory — pages are recycled by being overwritten on the
+next admit (copy-on-admit hook).
+
+Page id 0 is reserved as the **null page**: page tables are padded with 0,
+idle slots write their garbage token there, and reads from it are always
+masked by the runtime context length. The allocator therefore hands out ids
+``1 .. num_pages-1``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Hashable, List, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["KVPagePool", "PoolStats", "NULL_PAGE"]
+
+NULL_PAGE = 0
+
+
+@dataclass
+class PoolStats:
+    """Cumulative allocator statistics (host-side, cheap to keep exact)."""
+
+    alloc_calls: int = 0
+    pages_allocated: int = 0      # cumulative
+    free_calls: int = 0
+    pages_freed: int = 0          # cumulative
+    failed_allocs: int = 0
+    high_water: int = 0           # max pages simultaneously live
+    evictions: int = 0            # free_seq calls with eviction=True
+
+    def as_dict(self) -> dict:
+        return {
+            "alloc_calls": self.alloc_calls,
+            "pages_allocated": self.pages_allocated,
+            "free_calls": self.free_calls,
+            "pages_freed": self.pages_freed,
+            "failed_allocs": self.failed_allocs,
+            "high_water": self.high_water,
+            "evictions": self.evictions,
+        }
+
+
+class KVPagePool:
+    """Block allocator over ``num_pages`` KV pages of ``page_size`` tokens.
+
+    Sequences are identified by an arbitrary hashable key (the engine uses
+    its slot index). ``alloc`` is all-or-nothing; a failed allocation leaves
+    the pool untouched and bumps ``stats.failed_allocs`` so callers can
+    apply their admission/preemption policy.
+
+    ``on_admit(seq, pages)`` hooks fire after every successful allocation
+    (the engine's device-side copy-on-admit rides on this); ``on_evict(seq,
+    pages)`` hooks fire when a sequence's pages are released.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the null page)")
+        if page_size <= 0:
+            raise ValueError("page_size must be positive")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        # LIFO free list: recently-freed pages are re-used first, which keeps
+        # the working set of hot pages small
+        self._free: List[int] = list(range(self.num_pages - 1, 0, -1))
+        self._seq_pages: Dict[Hashable, List[int]] = {}
+        self._owner: Dict[int, Hashable] = {}
+        self.stats = PoolStats()
+        self.on_admit: List[Callable[[Hashable, List[int]], None]] = []
+        self.on_evict: List[Callable[[Hashable, List[int]], None]] = []
+
+    # ------------------------------------------------------------ accounting
+    @property
+    def usable_pages(self) -> int:
+        """Pages the allocator may hand out (excludes the null page)."""
+        return self.num_pages - 1
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_allocated(self) -> int:
+        return self.usable_pages - len(self._free)
+
+    @property
+    def live_sequences(self) -> int:
+        return len(self._seq_pages)
+
+    def pages_of(self, seq: Hashable) -> List[int]:
+        return list(self._seq_pages.get(seq, ()))
+
+    def count(self, seq: Hashable) -> int:
+        return len(self._seq_pages.get(seq, ()))
+
+    def token_capacity(self, seq: Hashable) -> int:
+        """Tokens the sequence's allocated pages can hold — the clamp bound
+        used by :func:`repro.kernels.ops.lean_decode_paged`."""
+        return self.count(seq) * self.page_size
+
+    # ------------------------------------------------------------- alloc/free
+    def alloc(self, seq: Hashable, n: int = 1) -> Optional[List[int]]:
+        """Allocate ``n`` pages for ``seq``. All-or-nothing; returns the new
+        page ids, or ``None`` (pool unchanged) when fewer than ``n`` free."""
+        self.stats.alloc_calls += 1
+        if n < 0:
+            raise ValueError("n must be >= 0")
+        if n > len(self._free):
+            self.stats.failed_allocs += 1
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._seq_pages.setdefault(seq, []).extend(pages)
+        for p in pages:
+            self._owner[p] = seq
+        self.stats.pages_allocated += n
+        self.stats.high_water = max(self.stats.high_water, self.num_allocated)
+        for hook in self.on_admit:
+            hook(seq, list(pages))
+        return pages
+
+    def free_seq(self, seq: Hashable, *, eviction: bool = False) -> int:
+        """Release every page of ``seq``; returns the count. Fires
+        ``on_evict`` hooks. ``eviction=True`` tags the release as a
+        preemption (vs normal request completion) in the stats."""
+        pages = self._seq_pages.pop(seq, None)
+        if not pages:
+            return 0
+        self.stats.free_calls += 1
+        self.stats.pages_freed += len(pages)
+        if eviction:
+            self.stats.evictions += 1
+        for p in pages:
+            del self._owner[p]
+        self._free.extend(reversed(pages))
+        for hook in self.on_evict:
+            hook(seq, list(pages))
+        return len(pages)
+
+    # ------------------------------------------------------------ page tables
+    def table_row(self, seq: Hashable, width: int) -> np.ndarray:
+        """The sequence's page table padded with the null page to ``width``
+        (``width`` = pages_per_slot, the engine's static table shape)."""
+        pages = self._seq_pages.get(seq, ())
+        if len(pages) > width:
+            raise ValueError(
+                f"sequence holds {len(pages)} pages > table width {width}"
+            )
+        row = np.full(width, NULL_PAGE, dtype=np.int32)
+        row[: len(pages)] = pages
+        return row
+
+    def table(self, seqs: Sequence[Hashable], width: int) -> np.ndarray:
+        """Stacked page table for a batch of sequence keys: (len(seqs), width)."""
+        return np.stack([self.table_row(s, width) for s in seqs])
+
+    # ------------------------------------------------------------- invariants
+    def check(self) -> None:
+        """Assert the pool accounting invariants (tests / debug ticks)."""
+        live = [p for pages in self._seq_pages.values() for p in pages]
+        assert len(live) == len(set(live)), "page referenced by two sequences"
+        assert NULL_PAGE not in live, "null page handed out"
+        assert NULL_PAGE not in self._free, "null page on the free list"
+        assert len(live) + len(self._free) == self.usable_pages, (
+            f"leak: {len(live)} live + {len(self._free)} free "
+            f"!= {self.usable_pages} usable"
+        )
+        assert set(self._owner) == set(live), "owner map out of sync"
+        overlap = set(live) & set(self._free)
+        assert not overlap, f"pages both live and free: {overlap}"
+
+    def fragmentation(self) -> float:
+        """1 - (longest contiguous free run / free pages). Pages are
+        position-independent (the table is full indirection), so this is a
+        diagnostic only — 'defrag' for this pool is simply freeing."""
+        if not self._free:
+            return 0.0
+        ids = np.sort(np.asarray(self._free))
+        runs = np.split(ids, np.flatnonzero(np.diff(ids) != 1) + 1)
+        longest = max(len(r) for r in runs)
+        return 1.0 - longest / len(ids)
+
+    def as_dict(self) -> dict:
+        """Stats snapshot for EngineStats / benchmarks."""
+        return {
+            "num_pages": self.num_pages,
+            "page_size": self.page_size,
+            "allocated": self.num_allocated,
+            "free": self.num_free,
+            "live_sequences": self.live_sequences,
+            "utilization": self.num_allocated / max(1, self.usable_pages),
+            "fragmentation": self.fragmentation(),
+            **self.stats.as_dict(),
+        }

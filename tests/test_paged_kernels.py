@@ -1,0 +1,160 @@
+"""Paged lean-decode kernel parity: fused vs two-phase vs dense, across the
+GQA (mistral-nemo-12b) and MQA (recurrentgemma-9b) head geometries.
+
+The paged kernels re-use the dense kernel bodies and only change how K/V
+tiles are fetched (page-table routing operand), so on identical logical
+inputs the paged output must be *bit-identical* to the dense kernel's — not
+merely allclose. The broader randomized fuzz is marked ``slow`` (dedicated
+CI job); a representative slice runs in tier-1.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.attention import paged_gather_kv
+from repro.kernels.ops import lean_decode, lean_decode_paged
+from repro.kernels.ref import lean_decode_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+# head geometries from the two assigned tiny variants
+GEOMS = {
+    "mistral_nemo_12b": get_smoke_config("mistral-nemo-12b"),   # GQA 4q/2kv
+    "recurrentgemma_9b": get_smoke_config("recurrentgemma-9b"), # MQA 4q/1kv
+}
+
+
+def _paged_problem(rng, lens, Hq, Hkv, d, ps, extra_pages=0):
+    B = len(lens)
+    width = max(-(-L // ps) for L in lens)
+    num_pages = 1 + sum(-(-L // ps) for L in lens) + extra_pages
+    q = jnp.asarray(rng.standard_normal((B, Hq, d)), jnp.float32)
+    k_pool = jnp.asarray(
+        rng.standard_normal((num_pages, Hkv, ps, d)), jnp.float32
+    )
+    v_pool = jnp.asarray(
+        rng.standard_normal((num_pages, Hkv, ps, d)), jnp.float32
+    )
+    order = list(rng.permutation(np.arange(1, num_pages)))
+    ptbl = np.zeros((B, width), np.int32)
+    for b, L in enumerate(lens):
+        n = -(-L // ps)
+        ptbl[b, :n] = [order.pop() for _ in range(n)]
+    return q, k_pool, v_pool, ptbl
+
+
+def _check_case(lens, cfg, ps, G, seed, rtol=2e-5):
+    Hq, Hkv, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    rng = np.random.default_rng(seed)
+    q, k_pool, v_pool, ptbl = _paged_problem(rng, lens, Hq, Hkv, d, ps)
+    k_dense = paged_gather_kv(k_pool, jnp.asarray(ptbl))
+    v_dense = paged_gather_kv(v_pool, jnp.asarray(ptbl))
+    ref = lean_decode_ref(
+        q, k_dense, v_dense, ctx_lens=jnp.asarray(lens, jnp.int32)
+    )
+    outs = {}
+    for fused in (True, False):
+        outs[fused] = np.asarray(lean_decode_paged(
+            q, k_pool, v_pool, ptbl, lens, num_workers=G, fused=fused,
+            interpret=True,
+        ))
+        np.testing.assert_allclose(
+            outs[fused], np.asarray(ref), rtol=rtol, atol=rtol,
+            err_msg=f"paged fused={fused} vs oracle, lens={lens}",
+        )
+        # acceptance: bit-compatible with the dense kernel on equal inputs
+        dense = np.asarray(lean_decode(
+            q, k_dense, v_dense, lens, num_workers=G, tile=ps, fused=fused,
+            interpret=True,
+        ))
+        assert np.array_equal(outs[fused], dense), (
+            f"paged fused={fused} not bit-identical to dense, lens={lens}"
+        )
+    np.testing.assert_allclose(outs[True], outs[False], rtol=rtol, atol=rtol)
+
+
+@pytest.mark.parametrize("geom", sorted(GEOMS))
+def test_fused_vs_two_phase_paged_parity(geom):
+    cfg = GEOMS[geom]
+    _check_case([40, 7, 23], cfg, ps=16, G=6, seed=hash(geom) % 2**32)
+
+
+@pytest.mark.parametrize("geom", sorted(GEOMS))
+def test_paged_freshly_admitted_single_token_slot(geom):
+    """The ctx == 0 freshly-admitted edge: a slot whose cache holds nothing
+    but the token written this very step (runtime length 1, exactly one
+    just-allocated page) next to a mid-stream slot."""
+    cfg = GEOMS[geom]
+    _check_case([1, 50], cfg, ps=16, G=4, seed=hash(geom) % 2**32 + 1)
+
+
+def test_paged_idle_slot_null_page_stays_finite():
+    """An idle slot routed entirely to the null page (all-zero table row)
+    must produce finite output and must not perturb live slots — this is
+    what the engine relies on for empty batch slots."""
+    cfg = GEOMS["mistral_nemo_12b"]
+    Hq, Hkv, d, ps = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, 16
+    rng = np.random.default_rng(3)
+    q, k_pool, v_pool, ptbl = _paged_problem(rng, [33, 16], Hq, Hkv, d, ps)
+    ptbl[1, :] = 0                                   # slot 1 idle: null page
+    lens = [33, 1]
+    ref = lean_decode_ref(
+        q, paged_gather_kv(k_pool, jnp.asarray(ptbl)),
+        paged_gather_kv(v_pool, jnp.asarray(ptbl)),
+        ctx_lens=jnp.asarray(lens, jnp.int32),
+    )
+    for fused in (True, False):
+        out = np.asarray(lean_decode_paged(
+            q, k_pool, v_pool, ptbl, lens, page_counts=[3, 1],
+            num_workers=4, fused=fused, interpret=True,
+        ))
+        assert np.isfinite(out).all()
+        np.testing.assert_allclose(out[0], np.asarray(ref)[0],
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_paged_overflow_clamps_with_warning():
+    """Satellite fix: lengths beyond the allocated pages clamp to the
+    per-sequence page capacity and WARN instead of truncating silently."""
+    cfg = GEOMS["mistral_nemo_12b"]
+    Hq, Hkv, d, ps = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, 16
+    rng = np.random.default_rng(5)
+    q, k_pool, v_pool, ptbl = _paged_problem(rng, [32, 16], Hq, Hkv, d, ps)
+    ref = lean_decode_ref(
+        q, paged_gather_kv(k_pool, jnp.asarray(ptbl)),
+        paged_gather_kv(v_pool, jnp.asarray(ptbl)),
+        ctx_lens=jnp.asarray([32, 16], jnp.int32),
+    )
+    with pytest.warns(RuntimeWarning, match="exceeds KV capacity"):
+        out = lean_decode_paged(
+            q, k_pool, v_pool, ptbl, [32, 999], num_workers=4,
+            interpret=True,
+        )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_dense_overflow_warns_too():
+    rng = np.random.default_rng(6)
+    q = jnp.asarray(rng.standard_normal((1, 2, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 32, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 1, 32, 16)), jnp.float32)
+    with pytest.warns(RuntimeWarning, match="exceeds KV capacity"):
+        lean_decode(q, k, v, [64], num_workers=2, tile=16, interpret=True)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("geom", sorted(GEOMS))
+def test_paged_parity_fuzz(geom):
+    """Randomized sweep: ragged batches, page permutations, worker counts,
+    page sizes — fused vs two-phase vs dense oracle every time."""
+    cfg = GEOMS[geom]
+    rng = np.random.default_rng(hash(geom) % 2**32 + 17)
+    for trial in range(25):
+        B = int(rng.integers(1, 5))
+        ps = int(rng.choice([8, 16, 32]))
+        lens = [int(rng.integers(1, 5 * ps)) for _ in range(B)]
+        G = int(rng.integers(1, 13))
+        _check_case(lens, cfg, ps=ps, G=G, seed=int(rng.integers(2**32)))
