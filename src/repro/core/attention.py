@@ -58,6 +58,81 @@ def paged_gather_kv(pool: jax.Array, page_tbl: jax.Array) -> jax.Array:
     return jnp.moveaxis(g, 2, 1).reshape(B, H, T * ps, d)
 
 
+def paged_scatter_tokens(
+    pool: jax.Array,        # (num_pages, H, page_size, d)
+    page_tbls: jax.Array,   # (N, W) int32 page table rows
+    offs: jax.Array,        # (N,) int32 first logical position of each chunk
+    lens: jax.Array,        # (N,) int32 valid tokens per chunk
+    vals: jax.Array,        # (N, C, H, d) new K or V rows
+) -> jax.Array:
+    """Scatter chunk tokens *directly* into a paged pool via the page table.
+
+    Chunk row ``n`` writes token ``i < lens[n]`` at logical position
+    ``offs[n] + i`` — physical page ``page_tbls[n, pos // page_size]``,
+    offset ``pos % page_size``. Invalid positions (``i >= lens[n]``, e.g.
+    chunk padding or dummy pack rows) route to the null page, whose contents
+    are always masked by runtime context lengths. This is the chunked
+    prefill's KV append: no dense per-slot staging cache, no copy-on-admit.
+
+    Live chunk rows never collide (requests hold disjoint page sets and a
+    chunk's positions are distinct); only null-page writes may overlap,
+    which is harmless by construction.
+    """
+    N, C, H, d = vals.shape
+    ps = pool.shape[2]
+    W = page_tbls.shape[1]
+    pos = offs[:, None] + jnp.arange(C)[None, :]              # (N, C)
+    valid = jnp.arange(C)[None, :] < lens[:, None]
+    tile_idx = jnp.clip(pos // ps, 0, W - 1)
+    pages = jnp.where(
+        valid, jnp.take_along_axis(page_tbls, tile_idx, axis=1), 0
+    )
+    offsets = jnp.where(valid, pos % ps, 0)
+    return pool.at[pages.reshape(-1), :, offsets.reshape(-1)].set(
+        vals.reshape(N * C, H, d).astype(pool.dtype)
+    )
+
+
+def mha_chunk_prefill_paged_ref(
+    q: jax.Array,           # (N, Hq, C, d) one prompt chunk per row
+    k_pool: jax.Array,      # (num_pages, Hkv, page_size, d)
+    v_pool: jax.Array,
+    page_tbls: jax.Array,   # (N, W) int32
+    offs: jax.Array,        # (N,) int32 absolute position of each chunk's q[0]
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Oracle attention for one pack of prefill chunks against paged KV.
+
+    Each chunk row gathers its dense KV view through its page table and
+    attends causally with *per-row* absolute query offsets (``offs`` is a
+    runtime array — rows sit at different depths of different prompts).
+    Causality doubles as the length mask: stale pool data beyond
+    ``offs[n] + C`` always sits at key positions greater than every valid
+    query position. Rows' chunk-padding queries produce garbage outputs
+    that callers discard; they never contaminate valid rows.
+    """
+    N, Hq, C, d = q.shape
+    Hkv = k_pool.shape[1]
+    g = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    k = paged_gather_kv(k_pool, page_tbls)                    # (N, Hkv, K, d)
+    v = paged_gather_kv(v_pool, page_tbls)
+    K = k.shape[2]
+    qg = q.reshape(N, Hkv, g, C, d)
+    s = jnp.einsum(
+        "bhgqd,bhkd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    qpos = offs[:, None] + jnp.arange(C)[None, :]             # (N, C)
+    ok = jnp.arange(K)[None, None, :] <= qpos[..., None]      # (N, C, K)
+    s = jnp.where(ok[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bhgqk,bhkd->bhgqd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(N, Hq, C, d).astype(q.dtype)
+
+
 def mha_decode_ref(
     q: jax.Array,
     k: jax.Array,

@@ -38,6 +38,7 @@ __all__ = [
     "bucket_ctx_lens",
     "bucket_length",
     "make_schedule",
+    "make_chunk_schedule",
     "default_tile_size",
     "fixed_split_factor",
 ]
@@ -338,6 +339,44 @@ def make_schedule(
         seg_head=i32(seg_head),
         seg_len=i32(seg_len),
     )
+
+
+def make_chunk_schedule(
+    visible_lens: Sequence[int],
+    num_kv_heads: int,
+    tile_size: int,
+    num_workers: int,
+    *,
+    max_len: Optional[int] = None,
+    cache: Optional["ScheduleCache"] = None,
+) -> LeanSchedule:
+    """Stream-K schedule for a *pack of prefill chunks* (the ragged chunk
+    grid of the continuous-batching scheduler).
+
+    A chunk pack is N concurrent prompt chunks, one per in-flight request;
+    ``visible_lens[n]`` is the KV the n-th chunk attends over — everything
+    already prefilled for that request *plus* the chunk itself
+    (``off + chunk_len``). The workload is exactly a decode workload with a
+    taller query block (``g * chunk_capacity`` rows per segment instead of
+    ``g``), so the segment/tile/piece linearization is :func:`make_schedule`
+    verbatim — only the kernel differs (causal masking per q row, see
+    :mod:`repro.kernels.lean_prefill`).
+
+    Dummy pack rows (fewer live chunks than the pack width) pass visible
+    length 0 and are clamped to one fully-masked tile, mirroring how idle
+    slots ride in decode schedules. With ``cache`` given, lengths bucket
+    through the shared :class:`ScheduleCache` — chunk schedules hit the
+    same memoized lattice as decode schedules, so steady-state chunked
+    prefill builds zero schedules too.
+    """
+    lens = [max(1, int(n)) for n in visible_lens]
+    if cache is not None:
+        return cache.get(
+            lens, num_kv_heads, tile_size, num_workers, max_len=max_len
+        )
+    if max_len is not None:
+        lens = [min(n, max_len) for n in lens]
+    return make_schedule(lens, num_kv_heads, tile_size, num_workers)
 
 
 # --------------------------------------------------------------- bucketing

@@ -1,15 +1,19 @@
 """Pallas TPU kernels for the paper's compute hot-spot: decode attention.
 
 lean_decode  — stream-K LeanAttention decode (the paper's contribution)
+lean_prefill — stream-K chunked prefill (ragged chunk packs, paged KV)
 flash_decode — fixed-split FlashDecoding baseline
-flash_prefill — FlashAttention-2 prefill (causal + sliding window, GQA)
+flash_prefill — FlashAttention-2 prefill (causal + sliding window, GQA;
+                dense and page-table-routed chunk variants)
 ops.py jit'd wrappers; ref.py pure-jnp oracles.
 Validated on CPU via interpret=True; TPU is the compile target.
 """
 from .ops import (
     lean_decode,
     lean_decode_from_schedule,
+    lean_prefill_chunks,
     flash_decode,
     flash_prefill,
+    flash_prefill_paged,
     default_num_workers,
 )

@@ -49,15 +49,18 @@ from .lean_decode import (
     lean_merge_pallas,
 )
 from .flash_decode import flash_decode_partials
-from .flash_prefill import flash_prefill  # re-export
+from .flash_prefill import flash_prefill, flash_prefill_paged  # re-export
+from .lean_prefill import lean_prefill_chunk_partials
 
 __all__ = [
     "lean_decode",
     "lean_decode_from_schedule",
     "lean_decode_paged",
     "lean_decode_paged_from_schedule",
+    "lean_prefill_chunks",
     "flash_decode",
     "flash_prefill",
+    "flash_prefill_paged",
     "default_num_workers",
     "FUSED_VMEM_BUDGET",
 ]
@@ -367,6 +370,52 @@ def lean_decode_paged(
         scale=scale, fused=fused, merge_impl=merge_impl,
         interpret=interpret, return_lse=return_lse,
     )
+
+
+def lean_prefill_chunks(
+    q: jax.Array,                  # (N, Hq, C, d) one prompt chunk per row
+    k_pool: jax.Array,             # (num_pages, Hkv, page_size, d)
+    v_pool: jax.Array,
+    seg_ctx: jax.Array,            # (N*Hkv,) int32 visible KV (off + len)
+    seg_qstart: jax.Array,         # (N*Hkv,) int32 chunk start offsets
+    page_tbls: jax.Array,          # (N, W) int32 page table rows
+    sched: LeanSchedule,
+    *,
+    scale: Optional[float] = None,
+    merge_impl: str = "xla",
+    interpret: bool = False,
+):
+    """Jit-stable stream-K chunked prefill against a prebuilt chunk schedule.
+
+    The prefill analogue of :func:`lean_decode_paged_from_schedule`: ``sched``
+    comes from :func:`repro.core.leantile.make_chunk_schedule` over the pack's
+    visible KV lengths and is the only static argument — ``seg_ctx``,
+    ``seg_qstart``, and ``page_tbls`` are runtime arrays, so bucketed chunk
+    schedules replay one trace as requests advance through their prompts and
+    migrate across physical pages. Two-phase execution; the merge phase is
+    the decode one (partials are the same ``(o, m, l)`` triple with
+    ``g * C`` rows per segment instead of ``g``).
+    """
+    N, Hq, C, d = q.shape
+    num_pages, Hkv, page_size, _ = k_pool.shape
+    if page_size != sched.tile_size:
+        raise ValueError(
+            f"page_size {page_size} != schedule tile_size {sched.tile_size}"
+            " — lean tiles must map 1:1 onto pages"
+        )
+    scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
+    g = Hq // Hkv
+    q_seg = q.reshape(N, Hkv, g, C, d).reshape(N * Hkv, g * C, d)
+    k_rows = k_pool.reshape(num_pages * Hkv, page_size, d)
+    v_rows = v_pool.reshape(num_pages * Hkv, page_size, d)
+    route = _paged_route(sched, page_tbls, Hkv, fused=False)
+    o_p, m_p, l_p = lean_prefill_chunk_partials(
+        q_seg, k_rows, v_rows, seg_ctx.astype(jnp.int32),
+        seg_qstart.astype(jnp.int32), route, sched, scale,
+        chunk_cap=C, interpret=interpret,
+    )
+    o_seg, _lse = _merge_two_phase(o_p, m_p, l_p, sched, merge_impl, interpret)
+    return o_seg.reshape(N, Hq, C, d).astype(q.dtype)
 
 
 def flash_decode_from_lens(

@@ -7,6 +7,8 @@ from .transformer import (
     forward,
     loss_fn,
     prefill,
+    prefill_chunks,
+    supports_chunked_prefill,
     decode_step,
     count_params,
     count_active_params,

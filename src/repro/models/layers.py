@@ -11,7 +11,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.attention import mha_decode_ref, mha_prefill_ref
+from repro.core.attention import (
+    mha_chunk_prefill_paged_ref,
+    mha_decode_ref,
+    mha_prefill_ref,
+    paged_scatter_tokens,
+)
 
 
 def dense_init(rng, shape, scale=None, dtype=jnp.float32):
@@ -263,6 +268,67 @@ def attn_decode_paged(
         )
     o = o.reshape(B, 1, n_heads * head_dim).astype(compute_dtype)
     out = o @ p["wo"].astype(compute_dtype)
+    return out.astype(x.dtype), k_pool, v_pool
+
+
+def attn_prefill_chunk_paged(
+    p,
+    x: jax.Array,                 # (N, C, D) one prompt chunk per row
+    k_pool: jax.Array,            # (num_pages, Hkv, page_size, hd)
+    v_pool: jax.Array,
+    page_tbls: jax.Array,         # (N, W) int32 page table rows
+    offs: jax.Array,              # (N,) int32 absolute position of chunk[0]
+    lens: jax.Array,              # (N,) int32 valid tokens per chunk
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: Optional[float] = 10000.0,
+    compute_dtype=jnp.bfloat16,
+    attn_fn=None,     # override: f(q, k_pool, v_pool, page_tbls, offs) -> o
+):
+    """Chunked-prefill attention for global-attention layers (paged KV).
+
+    The prefill sibling of :func:`attn_decode_paged`: each batch row is one
+    prompt *chunk* of an in-flight request — ``C`` positions starting at
+    absolute offset ``offs[n]``, of which ``lens[n]`` are valid. The chunk's
+    K/V append **directly into the page pool** through the row's page table
+    (no dense staging cache), then queries attend causally over the row's
+    visible prefix ``[0, offs[n] + lens[n])`` read back through the same
+    table. RoPE uses absolute positions, so chunked and whole-prompt
+    prefill produce the same cache contents.
+
+    Chunk-padding positions (``i >= lens[n]``) write the null page and
+    produce garbage activations confined to their own rows; callers gather
+    logits only at valid positions. Returns ``(out, k_pool, v_pool)``.
+    """
+    N, C, D = x.shape
+    xc = x.astype(compute_dtype)
+    q = (xc @ p["wq"].astype(compute_dtype)).reshape(N, C, n_heads, head_dim)
+    k = (xc @ p["wk"].astype(compute_dtype)).reshape(N, C, n_kv, head_dim)
+    v = (xc @ p["wv"].astype(compute_dtype)).reshape(N, C, n_kv, head_dim)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if rope_theta is not None:
+        pos = offs[:, None] + jnp.arange(C)[None, :]       # (N, C) per row
+        q = rope(q, pos, rope_theta)
+        k = rope(k, pos, rope_theta)
+    # append the chunk's KV to the pool FIRST — queries attend their own
+    # chunk (causally), so the read below must see these writes
+    k_pool = paged_scatter_tokens(k_pool, page_tbls, offs, lens, k)
+    v_pool = paged_scatter_tokens(v_pool, page_tbls, offs, lens, v)
+    qh = jnp.swapaxes(q, 1, 2)                             # (N, Hq, C, hd)
+    k_eff, v_eff = k_pool, v_pool
+    if k_pool.dtype not in (jnp.bfloat16, jnp.float16, jnp.float32):
+        k_eff = k_pool.astype(compute_dtype)
+        v_eff = v_pool.astype(compute_dtype)
+    if attn_fn is not None:
+        o = attn_fn(qh, k_eff, v_eff, page_tbls, offs)
+    else:
+        o = mha_chunk_prefill_paged_ref(qh, k_eff, v_eff, page_tbls, offs)
+    o = jnp.swapaxes(o, 1, 2).reshape(N, C, n_heads * head_dim)
+    out = o.astype(compute_dtype) @ p["wo"].astype(compute_dtype)
     return out.astype(x.dtype), k_pool, v_pool
 
 

@@ -35,6 +35,7 @@ from .layers import (
     attn_decode,
     attn_decode_paged,
     attn_forward,
+    attn_prefill_chunk_paged,
     attn_init,
     dense_init,
     ffn_forward,
@@ -457,10 +458,35 @@ def loss_fn(params, cfg: ModelConfig, batch, loss_chunk: Optional[int] = None):
 
 
 # ------------------------------------------------------------------ prefill
-def prefill(params, cfg: ModelConfig, tokens, cache_len: int, img_emb=None):
+def prefill(params, cfg: ModelConfig, tokens, cache_len: int, img_emb=None,
+            true_len=None):
     """Forward over the prompt, building decode caches.
-    Returns (last_logits (B, V), cache, cur_len)."""
+    Returns (last_logits (B, V), cache, cur_len).
+
+    ``true_len`` (runtime scalar) enables *bucketed* prefill: ``tokens`` is
+    the prompt padded up to a canonical bucket length, and only the first
+    ``true_len`` positions are real. Causality keeps pad positions from
+    contaminating real ones, logits are gathered at ``true_len - 1``, and
+    sliding-window rings only admit real positions — so one trace per
+    bucket serves every prompt length in it. KV rows beyond ``true_len``
+    hold pad garbage that downstream ragged masking (``ctx_lens``) never
+    reads. Recurrent stages scan pad tokens into their state, so bucketing
+    is rejected for them.
+    """
     B, L = tokens.shape
+    if true_len is not None:
+        bad = [
+            kind
+            for pattern, _ in cfg.stages
+            for kind in pattern
+            if kind not in ATTN_KINDS
+        ]
+        if bad:
+            raise ValueError(
+                f"bucketed prefill (true_len) unsupported for recurrent "
+                f"stage kinds {sorted(set(bad))}: pad tokens would corrupt "
+                "the carried state"
+            )
     x = _embed(params, cfg, tokens)
     cache = []
     for (pattern, reps), stage_p in zip(cfg.stages, params["stages"]):
@@ -472,7 +498,7 @@ def prefill(params, cfg: ModelConfig, tokens, cache_len: int, img_emb=None):
                     x, (kh, vh), xkv = _attn_full(lp, x, cfg, kind, img_emb)
                     if kind == "win":
                         S = min(cache_len, cfg.window)
-                        kc, vc = _ring_from_prefill(kh, vh, S, L)
+                        kc, vc = _ring_from_prefill(kh, vh, S, L, true_len)
                     else:
                         S = cache_len
                         pad = S - L
@@ -520,23 +546,154 @@ def prefill(params, cfg: ModelConfig, tokens, cache_len: int, img_emb=None):
 
             x, stage_cache = jax.lax.scan(body, x, stage_p)
         cache.append(stage_cache)
-    x = rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
-    return _unembed(params, cfg, x), cache, jnp.asarray(L, jnp.int32)
+    if true_len is None:
+        x_last = x[:, -1]
+        cur = jnp.asarray(L, jnp.int32)
+    else:
+        cur = jnp.asarray(true_len, jnp.int32)
+        x_last = jax.lax.dynamic_index_in_dim(
+            x, jnp.clip(cur - 1, 0, L - 1), axis=1, keepdims=False
+        )
+    x_last = rms_norm(x_last, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, cfg, x_last), cache, cur
 
 
-def _ring_from_prefill(kh, vh, S, L):
-    """Place the last S prefill positions into ring-buffer slots pos % S."""
+def _ring_from_prefill(kh, vh, S, L, true_len=None):
+    """Place the last S prefill positions into ring-buffer slots pos % S.
+
+    With ``true_len`` (bucketed prefill), only real positions
+    ``[true_len - S, true_len)`` land in the ring; pad positions scatter
+    out-of-bounds and drop, so pad garbage never displaces real KV."""
     B, H, _, hd = kh.shape
-    take = min(S, L)
-    pos = jnp.arange(L - take, L)
-    slots = pos % S
+    if true_len is None:
+        take = min(S, L)
+        pos = jnp.arange(L - take, L)
+        slots = pos % S
+        kc = jnp.zeros((B, H, S, hd), kh.dtype).at[:, :, slots].set(
+            kh[:, :, L - take :]
+        )
+        vc = jnp.zeros((B, H, S, hd), vh.dtype).at[:, :, slots].set(
+            vh[:, :, L - take :]
+        )
+        return kc, vc
+    pos = jnp.arange(L)
+    valid = (pos < true_len) & (pos >= true_len - S)
+    slots = jnp.where(valid, pos % S, S)            # S -> out of bounds
     kc = jnp.zeros((B, H, S, hd), kh.dtype).at[:, :, slots].set(
-        kh[:, :, L - take :]
+        kh, mode="drop"
     )
     vc = jnp.zeros((B, H, S, hd), vh.dtype).at[:, :, slots].set(
-        vh[:, :, L - take :]
+        vh, mode="drop"
     )
     return kc, vc
+
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Chunked prefill streams prompt pieces through the *paged* KV pool:
+    every stage must be a global-attention layer (the pooled kind) and
+    positions must be rotary (applied per-row at attention time). Window
+    rings, cross-attention state, and recurrent carries would need their
+    own chunk-resume plumbing — those architectures fall back to blocking
+    whole-prompt admission."""
+    return cfg.rope_theta is not None and all(
+        kind == "attn" for pattern, _ in cfg.stages for kind in pattern
+    )
+
+
+def prefill_chunks(
+    params,
+    cfg: ModelConfig,
+    cache,
+    tokens,                 # (N, C) int32 — one prompt chunk per row
+    offs,                   # (N,) int32 — tokens already prefilled per row
+    lens,                   # (N,) int32 — valid tokens in each chunk
+    page_tbls,              # (N, W) int32 — page table rows of the chunks
+    attn_fn: Optional[Callable] = None,
+):
+    """Forward N prompt chunks against the shared paged decode cache.
+
+    The chunked-prefill sibling of :func:`decode_step`: each row is one
+    chunk of one in-flight request's prompt, at its own depth ``offs[n]``.
+    K/V append directly into the page pools through ``page_tbls`` (no dense
+    staging, no copy-on-admit), queries attend causally over each row's
+    visible prefix, and the returned logits are each row's *last valid
+    position* — the row finishing its prompt samples its first token from
+    them. Shapes (N, C, W) are static: one trace serves every chunk of
+    every prompt (``offs``/``lens``/``page_tbls`` are runtime arrays).
+
+    Requires :func:`supports_chunked_prefill`. Returns
+    ``(logits (N, V) f32, new_cache)``.
+    """
+    if not supports_chunked_prefill(cfg):
+        raise ValueError(
+            f"{cfg.name}: chunked prefill requires all-'attn' stages and "
+            "rotary positions (see supports_chunked_prefill)"
+        )
+    N, C = tokens.shape
+    x = _embed(params, cfg, tokens)
+    offs = jnp.asarray(offs, jnp.int32)
+    lens = jnp.asarray(lens, jnp.int32)
+    new_cache = []
+    for (pattern, reps), stage_p, stage_c in zip(
+        cfg.stages, params["stages"], cache
+    ):
+
+        def unit_fn(x, up_uc):
+            up, uc = up_uc
+            new_cs = []
+            for kind, lp, lc in zip(pattern, up, uc):
+                h, kc, vc = attn_prefill_chunk_paged(
+                    lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                    lc["k"], lc["v"], page_tbls, offs, lens,
+                    n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                    head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+                    attn_fn=attn_fn,
+                )
+                x = x + h
+                x, _ = _ffn_part(lp, x, cfg)
+                new_cs.append({"k": kc, "v": vc})
+            return x, tuple(new_cs)
+
+        if reps == 1 or not cfg.scan_layers:
+            ncs = []
+            for r in range(reps):
+                up = jax.tree.map(lambda a: a[r], stage_p)
+                uc = jax.tree.map(lambda a: a[r], stage_c)
+                x, nc = unit_fn(x, (up, uc))
+                ncs.append(nc)
+            stage_nc = jax.tree.map(lambda *a: jnp.stack(a), *ncs)
+        else:
+            # same carry pattern as decode_step: the stacked pools ride in
+            # the scan carry, updated in place layer by layer
+            def body(carry, up_i):
+                x, cache_c = carry
+                up, r = up_i
+                uc = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, r, 0, keepdims=False
+                    ),
+                    cache_c,
+                )
+                x, nc = unit_fn(x, (up, uc))
+                cache_c = jax.tree.map(
+                    lambda buf, new: jax.lax.dynamic_update_index_in_dim(
+                        buf, new.astype(buf.dtype), r, 0
+                    ),
+                    cache_c,
+                    nc,
+                )
+                return (x, cache_c), None
+
+            (x, stage_nc), _ = jax.lax.scan(
+                body, (x, stage_c), (stage_p, jnp.arange(reps))
+            )
+        new_cache.append(stage_nc)
+    # each row's last valid position: the first-token logits for rows whose
+    # chunk completes the prompt (other rows' logits are simply unused)
+    idx = jnp.clip(lens - 1, 0, C - 1)
+    x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    x_last = rms_norm(x_last, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, cfg, x_last), new_cache
 
 
 # ------------------------------------------------------------------ decode

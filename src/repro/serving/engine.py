@@ -59,16 +59,20 @@ import numpy as np
 from repro.core.leantile import (
     LeanSchedule,
     ScheduleCache,
+    bucket_length,
     default_tile_size,
     fixed_split_factor,
+    make_chunk_schedule,
     make_schedule,
 )
 from repro.core.attention import paged_gather_kv
 from repro.kernels import flash_decode, lean_decode
 from repro.kernels.ops import (
     flash_decode_from_lens,
+    flash_prefill_paged,
     lean_decode_from_schedule,
     lean_decode_paged_from_schedule,
+    lean_prefill_chunks,
 )
 from repro.models import (
     ModelConfig,
@@ -76,8 +80,11 @@ from repro.models import (
     init_cache,
     init_paged_cache,
     prefill,
+    prefill_chunks,
 )
+from repro.models import supports_chunked_prefill as _cfg_supports_chunked
 from repro.serving.kvpool import KVPagePool
+from repro.serving.telemetry import Histogram
 
 import contextlib
 
@@ -99,6 +106,9 @@ class Request:
     prompt: np.ndarray              # (L,) int32
     max_new_tokens: int
     generated: List[int] = field(default_factory=list)
+    # generated tokens already folded into ``prompt`` by recompute-resume
+    # preemption — keeps a second preemption from folding them twice
+    folded: int = 0
 
     @property
     def done(self):
@@ -109,11 +119,29 @@ class Request:
 class EngineStats:
     ticks: int = 0
     tokens_generated: int = 0
-    prefills: int = 0
+    prefills: int = 0                 # blocking whole-prompt admissions
+    chunk_prefills: int = 0           # chunked-prefill chunk executions
+    prefill_tokens: int = 0           # prompt tokens pushed through chunks
     preemptions: int = 0
+    prefill_compiles: int = 0         # distinct bucketed prefill shapes
     schedules: List[dict] = field(default_factory=list)
     schedule_cache: dict = field(default_factory=dict)
     kv_pool: dict = field(default_factory=dict)
+    # per-tick prefill-vs-decode token split (capped like the schedule log)
+    tick_prefill_tokens: List[int] = field(default_factory=list)
+    tick_decode_tokens: List[int] = field(default_factory=list)
+    # latency histograms (seconds) — populated by the Scheduler, which is
+    # the layer that knows arrival/first-token/per-token timestamps
+    ttft: Histogram = field(default_factory=Histogram)
+    tpot: Histogram = field(default_factory=Histogram)
+    queue_wait: Histogram = field(default_factory=Histogram)
+
+    def latency_dict(self) -> dict:
+        return {
+            "ttft": self.ttft.as_dict(),
+            "tpot": self.tpot.as_dict(),
+            "queue_wait": self.queue_wait.as_dict(),
+        }
 
 
 def _write_slot(cache, cache1, slot):
@@ -247,6 +275,53 @@ def _kernel_decode_step(
     )
 
 
+def _chunk_prefill_step(
+    params,
+    cache,
+    tokens,          # (N, C) int32 — one prompt chunk per pack row
+    offs,            # (N,) int32
+    lens,            # (N,) int32
+    page_tbls,       # (N, W) int32
+    *,
+    cfg: ModelConfig,
+    backend: str,
+    sched: LeanSchedule,
+    interpret: bool,
+):
+    """One packed chunked-prefill step: pure in the array args; ``sched``
+    (built over the pack's bucketed visible KV lengths) is the only static
+    key, so the engine jits this end-to-end exactly like the decode step —
+    one trace per (pack shape, schedule signature), replayed as requests
+    advance through their prompts."""
+    if backend == "lean":
+
+        def attn_fn(q, k_pool, v_pool, tbls, o):
+            visible = jnp.maximum(offs + lens, 1).astype(jnp.int32)
+            seg_ctx = jnp.repeat(visible, cfg.n_kv_heads)
+            seg_qstart = jnp.repeat(offs.astype(jnp.int32), cfg.n_kv_heads)
+            return lean_prefill_chunks(
+                q, k_pool, v_pool, seg_ctx, seg_qstart, tbls, sched,
+                interpret=interpret,
+            )
+
+    elif backend == "fixed":
+
+        def attn_fn(q, k_pool, v_pool, tbls, o):
+            return flash_prefill_paged(
+                q, k_pool, v_pool, tbls, o, interpret=interpret
+            )
+
+    else:
+        attn_fn = None            # gather + jnp reference
+    logits, new_cache = prefill_chunks(
+        params, cfg, cache, tokens, offs, lens, page_tbls, attn_fn=attn_fn
+    )
+    # rows completing their prompt need only the sampled token — argmax on
+    # device so the host sync moves pack_width ints, not the vocab-wide
+    # logits block (mirrors the decode tick's single small argmax sync)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
+
+
 class DecodeEngine:
     def __init__(
         self,
@@ -318,10 +393,31 @@ class DecodeEngine:
 
         self.sched_cache = ScheduleCache(max_entries=schedule_cache_entries)
 
+        # bucketed admission prefill: pad prompts up to canonical bucket
+        # lengths so distinct prompt lengths stop costing one XLA compile
+        # each (jit keys on the padded shape; true length is runtime).
+        # Recurrent stages would scan pad tokens into their state — those
+        # architectures keep the exact-length path.
+        self.bucket_prefill = all(
+            kind in ("attn", "win", "xattn")
+            for pattern, _ in cfg.stages
+            for kind in pattern
+        )
+        self._prefill_shapes: set = set()     # distinct padded lengths seen
+        # a Scheduler can redirect preempted requests into its own queue
+        # instead of the engine-local one
+        self.preempt_sink = None
+
         self._jit_decode = jax.jit(self._decode_fn)
         self._jit_decode_paged = jax.jit(self._decode_fn_paged)
         self._jit_prefill_slot = jax.jit(
             self._prefill_fn, static_argnames=("plen",)
+        )
+        self._jit_prefill_bucketed = jax.jit(self._prefill_fn_bucketed)
+        self._jit_prefill_chunks = jax.jit(
+            functools.partial(_chunk_prefill_step, cfg=cfg),
+            static_argnames=("backend", "sched", "interpret"),
+            donate_argnames=("cache",),
         )
         self._jit_admit = jax.jit(_write_slot, donate_argnums=(0,))
         self._jit_admit_paged = jax.jit(
@@ -344,13 +440,14 @@ class DecodeEngine:
         )
 
     # ------------------------------------------------------------- schedule
-    def _tick_schedule(self) -> LeanSchedule:
+    def _tick_schedule(self, ctx_lens=None) -> LeanSchedule:
         """The (cached) stream-K schedule for this tick's ragged workload:
         every slot attends over its context plus the token being written,
         clamped to cache capacity. Built over ALL slots (the kernel sees the
-        full batch; idle slots contribute one masked tile)."""
+        full batch; idle and masked-out slots contribute one masked tile)."""
         s_pad = self.cache_len + ((-self.cache_len) % self.tile)
-        lens = np.minimum(self.ctx_lens + 1, self.cache_len)
+        ctx = self.ctx_lens if ctx_lens is None else ctx_lens
+        lens = np.minimum(ctx + 1, self.cache_len)
         return self.sched_cache.get(
             lens.tolist(), self.cfg.n_kv_heads, self.tile, self.num_workers,
             max_len=s_pad,
@@ -401,66 +498,212 @@ class DecodeEngine:
         )
         return logits, cache
 
+    def _prefill_fn_bucketed(self, params, tokens, plen):
+        # tokens padded to a canonical bucket; plen is a RUNTIME scalar —
+        # the jit key is the padded shape, so compiles stay O(log cache_len)
+        logits, cache, cur = prefill(
+            params, self.cfg, tokens, cache_len=self.cache_len, true_len=plen
+        )
+        return logits, cache
+
+    def _run_prompt_prefill(self, prompt: np.ndarray):
+        """Whole-prompt prefill -> (last-position logits, 1-slot cache).
+        Bucketed (padded shape + runtime length) when the architecture
+        allows it; exact static-length trace otherwise."""
+        plen = len(prompt)
+        if not self.bucket_prefill:
+            toks = jnp.asarray(np.asarray(prompt)[None, :], jnp.int32)
+            self._track_prefill_shape(plen)
+            return self._jit_prefill_slot(self.params, toks, plen=plen)
+        pad_len = bucket_length(plen, self.tile, max_len=self.cache_len)
+        toks = np.zeros((1, pad_len), dtype=np.int32)
+        toks[0, :plen] = np.asarray(prompt)
+        self._track_prefill_shape(pad_len)
+        return self._jit_prefill_bucketed(
+            self.params, jnp.asarray(toks), jnp.asarray(plen, jnp.int32)
+        )
+
+    def _track_prefill_shape(self, padded_len: int):
+        self._prefill_shapes.add(int(padded_len))
+        self.stats.prefill_compiles = len(self._prefill_shapes)
+
     # ------------------------------------------------------------- public
     def submit(self, req: Request):
         self.queue.append(req)
 
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.max_batch) if self.slot_req[s] is None]
+
+    def _check_fits_pool(self, req: Request):
+        """A request whose minimum working set (prompt pages + the first
+        decode write) exceeds the whole pool can NEVER be served — failing
+        fast beats the silent admit/preempt livelock waiting for pages that
+        cannot materialize. Likewise a prompt beyond one slot's page-table
+        capacity: chunked appends would wrap onto the last page and corrupt
+        earlier KV, so it is rejected outright."""
+        plen = len(req.prompt)
+        if plen > self.pages_per_slot * self.tile:
+            raise RuntimeError(
+                f"request uid={req.uid}: {plen}-token prompt exceeds the "
+                f"per-slot KV capacity ({self.pages_per_slot} pages x "
+                f"{self.tile} tokens) — raise cache_len or truncate"
+            )
+        min_pages = min(self.pages_per_slot, plen // self.tile + 1)
+        if min_pages > self.pool.usable_pages:
+            raise RuntimeError(
+                f"request uid={req.uid} needs {min_pages} KV "
+                f"pages ({plen}-token prompt @ page_size "
+                f"{self.tile}) but the pool holds only "
+                f"{self.pool.usable_pages} usable pages — "
+                "raise num_pages or shorten the prompt"
+            )
+
+    def admit_blocking(self, req: Request, slot: int) -> bool:
+        """Classic admission: whole-prompt prefill into ``slot``, cache row
+        written, first token sampled. Returns False (engine unchanged) when
+        the paged pool cannot currently hold the prompt. Does NOT touch the
+        engine queue — callers (``_admit`` or a Scheduler) own queueing."""
+        plen = len(req.prompt)
+        pages = None
+        if self.paged:
+            self._check_fits_pool(req)
+            # pages allocate lazily: admission takes only what the
+            # prompt needs, decode grows page-by-page
+            n = max(1, -(-plen // self.tile))
+            pages = self.pool.alloc(slot, n)
+            if pages is None:
+                return False            # pool exhausted; retry next tick
+            self.page_tbl[slot, :n] = pages
+        self.slot_req[slot] = req
+        logits, cache1 = self._run_prompt_prefill(req.prompt)
+        # copy slot-0 of the fresh cache into our slot
+        if self.paged:
+            with _quiet_donation():
+                self.cache = self._jit_admit_paged(
+                    self.cache, cache1,
+                    jnp.asarray(pages, jnp.int32),
+                    jnp.asarray(slot, jnp.int32),
+                )
+        elif self.use_fast_path:
+            with _quiet_donation():
+                self.cache = self._jit_admit(
+                    self.cache, cache1, jnp.asarray(slot, jnp.int32)
+                )
+        else:
+            self.cache = _copy_slot(self.cache, cache1, slot)
+        self.ctx_lens[slot] = plen
+        nxt = int(jnp.argmax(logits[0]))
+        req.generated.append(nxt)
+        self.next_tokens[slot, 0] = nxt
+        self.stats.prefills += 1
+        return True
+
     def _admit(self):
         for slot in range(self.max_batch):
             if self.slot_req[slot] is None and self.queue:
-                req = self.queue[0]
-                plen = len(req.prompt)
-                pages = None
-                if self.paged:
-                    # a request whose minimum working set (prompt pages +
-                    # the first decode write) exceeds the whole pool can
-                    # NEVER be served — failing fast beats the silent
-                    # admit/preempt livelock waiting for pages that cannot
-                    # materialize
-                    min_pages = min(
-                        self.pages_per_slot, plen // self.tile + 1
-                    )
-                    if min_pages > self.pool.usable_pages:
-                        raise RuntimeError(
-                            f"request uid={req.uid} needs {min_pages} KV "
-                            f"pages ({plen}-token prompt @ page_size "
-                            f"{self.tile}) but the pool holds only "
-                            f"{self.pool.usable_pages} usable pages — "
-                            "raise num_pages or shorten the prompt"
-                        )
-                    # pages allocate lazily: admission takes only what the
-                    # prompt needs, decode grows page-by-page
-                    n = max(1, -(-plen // self.tile))
-                    pages = self.pool.alloc(slot, n)
-                    if pages is None:
-                        break           # pool exhausted; retry next tick
-                    self.page_tbl[slot, :n] = pages
+                if not self.admit_blocking(self.queue[0], slot):
+                    break               # pool exhausted; retry next tick
                 self.queue.pop(0)
+
+    # --------------------------------------------------------- chunked prefill
+    def supports_chunked_prefill(self) -> bool:
+        """Chunked prefill streams prompt pieces straight into the paged
+        pool — it needs paged mode (the pool + page tables ARE the staging
+        area) and an architecture whose whole prompt state lives in pooled
+        global-attention KV."""
+        return self.paged and _cfg_supports_chunked(self.cfg)
+
+    def claim_slot(self, req: Request) -> Optional[int]:
+        """Reserve a free slot for ``req`` without prefilling anything —
+        the entry point of the PREFILLING lifecycle state. The slot starts
+        at context 0 with an all-null page table row; chunk pages allocate
+        lazily per chunk (:meth:`ensure_chunk_pages`)."""
+        if self.paged:
+            self._check_fits_pool(req)
+        for slot in range(self.max_batch):
+            if self.slot_req[slot] is None:
                 self.slot_req[slot] = req
-                toks = jnp.asarray(req.prompt[None, :], jnp.int32)
-                logits, cache1 = self._jit_prefill_slot(
-                    self.params, toks, plen=plen
-                )
-                # copy slot-0 of the fresh cache into our slot
+                self.ctx_lens[slot] = 0
                 if self.paged:
-                    with _quiet_donation():
-                        self.cache = self._jit_admit_paged(
-                            self.cache, cache1,
-                            jnp.asarray(pages, jnp.int32),
-                            jnp.asarray(slot, jnp.int32),
-                        )
-                elif self.use_fast_path:
-                    with _quiet_donation():
-                        self.cache = self._jit_admit(
-                            self.cache, cache1, jnp.asarray(slot, jnp.int32)
-                        )
-                else:
-                    self.cache = _copy_slot(self.cache, cache1, slot)
-                self.ctx_lens[slot] = plen
-                nxt = int(jnp.argmax(logits[0]))
-                req.generated.append(nxt)
-                self.next_tokens[slot, 0] = nxt
-                self.stats.prefills += 1
+                    self.page_tbl[slot, :] = 0
+                return slot
+        return None
+
+    def ensure_chunk_pages(self, slot: int, upto_tokens: int) -> bool:
+        """Grow ``slot``'s page list to cover prompt positions
+        ``[0, upto_tokens)``. Returns False (pool unchanged beyond failed-
+        alloc stats) when the pool cannot serve it right now."""
+        need = min(-(-int(upto_tokens) // self.tile), self.pages_per_slot)
+        have = self.pool.count(slot)
+        if have >= need:
+            return True
+        got = self.pool.alloc(slot, need - have)
+        if got is None:
+            return False
+        self.page_tbl[slot, have:need] = got
+        return True
+
+    def prefill_chunks_tick(
+        self, work: List[tuple], pack_width: int, chunk_cap: int
+    ) -> np.ndarray:
+        """Run one packed chunked-prefill step.
+
+        ``work``: up to ``pack_width`` tuples ``(slot, chunk_tokens, off)``
+        — each one chunk (``len <= chunk_cap``) of one PREFILLING slot's
+        prompt, whose pages already cover ``off + len`` tokens
+        (:meth:`ensure_chunk_pages`). KV appends directly into the page
+        pool through each slot's table row; no dense staging, no
+        copy-on-admit. Returns the (pack_width,) greedy next-token ids at
+        each row's last valid position — rows that finished their prompt
+        use theirs as the request's first token (argmax runs on device;
+        the host sync moves ints, not vocab-wide logits). Pack geometry is
+        static (pad rows are masked), so one trace per (pack, chunk,
+        schedule-signature) serves the whole run.
+        """
+        if not self.supports_chunked_prefill():
+            raise RuntimeError(
+                "chunked prefill requires paged=True and an all-'attn' "
+                "architecture (see supports_chunked_prefill)"
+            )
+        if len(work) > pack_width:
+            raise ValueError(f"{len(work)} chunks > pack width {pack_width}")
+        N, C = pack_width, chunk_cap
+        toks = np.zeros((N, C), dtype=np.int32)
+        offs = np.zeros(N, dtype=np.int32)
+        lens = np.zeros(N, dtype=np.int32)
+        tbls = np.zeros((N, self.pages_per_slot), dtype=np.int32)
+        visible = [1] * N
+        for i, (slot, chunk, off) in enumerate(work):
+            chunk = np.asarray(chunk)
+            if len(chunk) > C:
+                raise ValueError(f"chunk of {len(chunk)} tokens > cap {C}")
+            toks[i, : len(chunk)] = chunk
+            offs[i] = off
+            lens[i] = len(chunk)
+            tbls[i] = self.page_tbl[slot]
+            visible[i] = max(1, int(off) + len(chunk))
+        # chunk schedules ride the same bucketed cache lattice as decode;
+        # only the lean backend consumes one — keying ref/fixed on it
+        # would retrace their whole chunk step per schedule signature
+        sched = None
+        if self.attn_backend == "lean":
+            sched = make_chunk_schedule(
+                visible, self.cfg.n_kv_heads, self.tile, self.num_workers,
+                max_len=self.pages_per_slot * self.tile,
+                cache=self.sched_cache,
+            )
+        with _quiet_donation():
+            next_tok, self.cache = self._jit_prefill_chunks(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(offs), jnp.asarray(lens), jnp.asarray(tbls),
+                backend=self.attn_backend, sched=sched,
+                interpret=self.interpret,
+            )
+        n_tokens = int(lens.sum())
+        self.stats.chunk_prefills += len(work)
+        self.stats.prefill_tokens += n_tokens
+        self._log_tick_tokens(self.stats.tick_prefill_tokens, n_tokens)
+        return np.asarray(next_tok)
 
     # ------------------------------------------------------------ paged mgmt
     def _ensure_decode_pages(self, active: List[int]) -> List[int]:
@@ -486,18 +729,36 @@ class DecodeEngine:
     def _preempt(self, slot: int):
         """Evict a slot: return its pages to the pool and requeue the
         request to resume by recompute (prompt extended with everything
-        generated so far, so the next prefill rebuilds its exact state)."""
+        generated so far, so the next prefill rebuilds its exact state).
+        With a ``preempt_sink`` registered (the Scheduler), the request
+        goes there instead of the engine-local queue."""
         req = self.slot_req[slot]
         self.pool.free_seq(slot, eviction=True)
         self.page_tbl[slot, :] = 0
         self.slot_req[slot] = None
         self.ctx_lens[slot] = 0
+        fresh = req.generated[req.folded :]
         req.prompt = np.concatenate(
             [np.asarray(req.prompt),
-             np.asarray(req.generated, dtype=np.asarray(req.prompt).dtype)]
+             np.asarray(fresh, dtype=np.asarray(req.prompt).dtype)]
         )
-        self.queue.insert(0, req)
+        req.folded = len(req.generated)
+        if self.preempt_sink is not None:
+            self.preempt_sink(req)
+        else:
+            self.queue.insert(0, req)
         self.stats.preemptions += 1
+
+    def preempt_slot(self, slot: int):
+        """Public eviction hook for schedulers (pool-pressure deadlock
+        breaking): works for both DECODING and PREFILLING occupants —
+        a mid-prefill request simply restarts its prompt on re-admission
+        (its ``generated`` list is still empty)."""
+        if not self.paged:
+            raise RuntimeError("preemption only applies to paged engines")
+        if self.slot_req[slot] is None:
+            raise ValueError(f"slot {slot} is idle")
+        self._preempt(slot)
 
     def _free_slot_pages(self, slot: int):
         if self.paged:
@@ -508,20 +769,49 @@ class DecodeEngine:
         """Admit + one decode step for all active slots. Returns
         {uid: new_token}."""
         self._admit()
-        active = [s for s in range(self.max_batch) if self.slot_req[s]]
+        return self.decode_tick()
+
+    def decode_tick(self, exclude=None) -> Dict[int, int]:
+        """One decode step over the active slots. Returns {uid: new_token}.
+
+        ``exclude`` masks slots out of this tick — the Scheduler passes its
+        PREFILLING slots, whose pool pages hold a *partial* prompt that the
+        decode step must neither read (context forced to 0, so their
+        schedule segment is fully masked) nor write (their page-table rows
+        are nulled for this call, routing the garbage token write to the
+        reserved null page). The excluded slots' real page tables and
+        progress are untouched.
+        """
+        exclude = set(exclude) if exclude else set()
+        active = [
+            s for s in range(self.max_batch)
+            if self.slot_req[s] and s not in exclude
+        ]
         if self.paged:
             active = self._ensure_decode_pages(active)
         if not active:
             return {}
 
+        ctx_np = self.ctx_lens.copy()
+        ptbl_np = self.page_tbl
+        if exclude:
+            if not self.use_fast_path:
+                raise RuntimeError("slot masking requires the fast path")
+            for s in exclude:
+                ctx_np[s] = 0
+            if self.paged:
+                ptbl_np = self.page_tbl.copy()
+                for s in exclude:
+                    ptbl_np[s, :] = 0
+
         if self.use_fast_path:
             # ONE schedule build (cached) serves both the stats record and
             # the kernel step — nothing is derived twice per tick
-            sched = self._tick_schedule()
+            sched = self._tick_schedule(ctx_np)
             self._record_schedule(sched)
             tokens = jnp.asarray(self.next_tokens)
-            ctx = jnp.asarray(self.ctx_lens, jnp.int32)
-            ptbl = jnp.asarray(self.page_tbl) if self.paged else None
+            ctx = jnp.asarray(ctx_np, jnp.int32)
+            ptbl = jnp.asarray(ptbl_np) if self.paged else None
             if self.attn_backend == "ref":
                 if self.paged:
                     logits, self.cache = self._jit_decode_paged(
@@ -556,6 +846,14 @@ class DecodeEngine:
 
         # one host sync for the whole batch
         next_all = np.asarray(jnp.argmax(logits, axis=-1))
+        # context cap: the cache row, and in paged mode also the whole
+        # pool — a context allowed past usable_pages * tile could never be
+        # re-admitted after a recompute-resume preemption (its regrown
+        # prompt would fail the pool fit check), so it is finished here,
+        # with its final token, like any other capacity cut
+        cap = self.cache_len
+        if self.paged:
+            cap = min(cap, self.pool.usable_pages * self.tile)
         out = {}
         for s in active:
             req = self.slot_req[s]
@@ -565,7 +863,7 @@ class DecodeEngine:
             self.ctx_lens[s] += 1
             out[req.uid] = nxt
             self.stats.tokens_generated += 1
-            if req.done or self.ctx_lens[s] >= self.cache_len - 1:
+            if req.done or self.ctx_lens[s] >= cap - 1:
                 self.slot_req[s] = None
                 self.ctx_lens[s] = 0
                 # finished sequences return their pages immediately — this
@@ -573,10 +871,16 @@ class DecodeEngine:
                 # dense worst-case cache could hold
                 self._free_slot_pages(s)
         self.stats.ticks += 1
+        self._log_tick_tokens(self.stats.tick_decode_tokens, len(active))
         self.stats.schedule_cache = self.sched_cache.stats.as_dict()
         if self.paged:
             self.stats.kv_pool = self.pool.as_dict()
         return out
+
+    def _log_tick_tokens(self, log: List[int], n: int):
+        log.append(n)
+        if len(log) > self.SCHEDULE_LOG_CAP:
+            del log[: -self.SCHEDULE_LOG_CAP]
 
     # bounded schedule log: a steady-state server ticks forever; keep the
     # benchmark/debug record from growing without limit

@@ -1,0 +1,472 @@
+"""Continuous-batching scheduler: chunked stream-K prefill + decode ticks.
+
+The :class:`repro.serving.engine.DecodeEngine` provides the *mechanisms* —
+a fused decode tick, a paged KV pool, blocking whole-prompt admission, and
+(new) a packed chunked-prefill step. This module provides the *policy*
+layer that turns those into a server:
+
+  * a request lifecycle ``QUEUED -> PREFILLING -> DECODING -> FINISHED``
+    (preemption folds back to ``QUEUED`` for recompute-resume);
+  * a token-budget **tick composer**: each :meth:`Scheduler.step` packs up
+    to ``prefill_pack`` prompt chunks (each at most ``chunk_size`` tokens,
+    all together at most ``token_budget`` minus the decode batch) *plus*
+    the decode batch — so a 32k-token prompt streams into the paged pool a
+    chunk per tick while every in-flight sequence keeps decoding, instead
+    of stalling the whole batch behind one blocking prefill;
+  * admission **policies** (``fcfs`` | ``priority``) with a hard
+    *starvation bound*: any request queued for more than
+    ``starvation_bound`` scheduler steps outranks every younger request
+    regardless of priority (FIFO among the starving);
+  * **streaming**: an ``on_token(uid, token, done)`` callback fires for
+    every generated token, including the first one sampled off the final
+    prefill chunk;
+  * **telemetry**: TTFT / TPOT / queue-wait histograms (recorded into the
+    engine's :class:`~repro.serving.engine.EngineStats`), queue-depth and
+    per-tick prefill-vs-decode token logs.
+
+Chunked prefill requires a paged engine and an all-global-attention
+architecture (``engine.supports_chunked_prefill()``); otherwise the
+scheduler transparently falls back to blocking admission — same lifecycle,
+same telemetry, same token streams. The blocking path doubles as the
+*oracle* for the chunked path: both must generate token-identical output
+(``tests/test_scheduler.py``).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.engine import DecodeEngine, Request
+
+__all__ = ["RequestState", "SchedulerConfig", "ScheduledRequest", "Scheduler"]
+
+
+class RequestState(Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    FINISHED = "finished"
+
+
+@dataclass
+class SchedulerConfig:
+    """Tick-composition and policy knobs.
+
+    ``token_budget`` is the per-tick token *target*: decode tokens (one per
+    DECODING slot) are latency-critical and always run; prefill chunks fill
+    the remainder. ``chunk_size`` trades TTFT for decode interference (see
+    EXPERIMENTS.md); ``prefill_pack`` bounds how many requests prefill
+    concurrently in one packed kernel call (its value is a static jit
+    shape — keep it fixed per scheduler).
+    """
+
+    chunk_size: int = 32
+    prefill_pack: int = 2
+    token_budget: int = 64
+    chunked: Optional[bool] = None        # None -> auto-detect from engine
+    policy: str = "fcfs"                  # 'fcfs' | 'priority'
+    starvation_bound: int = 64            # scheduler steps
+
+    def __post_init__(self):
+        if self.policy not in ("fcfs", "priority"):
+            raise ValueError(f"unknown policy {self.policy!r}")
+        if self.chunk_size <= 0 or self.prefill_pack <= 0:
+            raise ValueError("chunk_size and prefill_pack must be positive")
+        if self.starvation_bound <= 0:
+            raise ValueError("starvation_bound must be positive")
+
+
+@dataclass
+class ScheduledRequest:
+    """A submitted request plus its lifecycle/telemetry state — the handle
+    :meth:`Scheduler.submit` returns (token stream in ``req.generated``)."""
+
+    req: Request
+    priority: int = 0
+    on_token: Optional[Callable[[int, int, bool], None]] = None
+    state: RequestState = RequestState.QUEUED
+    slot: int = -1
+    prefill_done: int = 0                 # prompt tokens already chunked in
+    arrival_seq: int = 0                  # submission order (FCFS tiebreak)
+    arrival_step: int = 0
+    arrival_time: float = 0.0
+    enqueue_time: float = 0.0             # last (re-)queue time: wait metric
+    admit_step: int = -1
+    first_token_time: float = -1.0
+    last_token_time: float = -1.0
+    preemptions: int = 0
+
+    @property
+    def uid(self) -> int:
+        return self.req.uid
+
+    @property
+    def done(self) -> bool:
+        return self.state is RequestState.FINISHED
+
+    @property
+    def generated(self) -> List[int]:
+        return self.req.generated
+
+    def queue_age(self, now_step: int) -> int:
+        return now_step - self.arrival_step
+
+
+@dataclass
+class SchedulerStats:
+    steps: int = 0
+    admitted: int = 0
+    finished: int = 0
+    chunks: int = 0
+    stalled_chunk_ticks: int = 0          # ticks where page pressure held
+    deadlock_preemptions: int = 0         # chunks back entirely
+    queue_depth: List[int] = field(default_factory=list)
+    # admission audit trail for the starvation-bound invariant: one record
+    # per admission (step, uid, age, #starving requests passed over)
+    admissions: List[dict] = field(default_factory=list)
+
+    LOG_CAP = 4096
+
+    def log_depth(self, d: int):
+        self.queue_depth.append(d)
+        if len(self.queue_depth) > self.LOG_CAP:
+            del self.queue_depth[: -self.LOG_CAP]
+
+
+class Scheduler:
+    """Continuous-batching policy layer over a :class:`DecodeEngine`."""
+
+    def __init__(self, engine: DecodeEngine, config: Optional[SchedulerConfig] = None):
+        self.engine = engine
+        self.config = config or SchedulerConfig()
+        if self.config.chunked is None:
+            self.chunked = engine.supports_chunked_prefill()
+        else:
+            self.chunked = self.config.chunked
+            if self.chunked and not engine.supports_chunked_prefill():
+                raise ValueError(
+                    "chunked prefill requires a paged engine and an "
+                    "all-'attn' architecture "
+                    "(engine.supports_chunked_prefill() is False)"
+                )
+        self.queue: List[ScheduledRequest] = []
+        self.requests: Dict[int, ScheduledRequest] = {}
+        self._slot_sr: Dict[int, ScheduledRequest] = {}
+        self._next_uid = 0
+        self._arrival_seq = 0
+        self.stats = SchedulerStats()
+        # engine preemptions (pool pressure mid-decode) fold back into OUR
+        # queue, keeping their arrival time so aging continues
+        engine.preempt_sink = self._on_preempt
+
+    # ---------------------------------------------------------------- submit
+    def submit(
+        self,
+        prompt,
+        max_new_tokens: int,
+        *,
+        priority: int = 0,
+        on_token: Optional[Callable[[int, int, bool], None]] = None,
+        uid: Optional[int] = None,
+    ) -> ScheduledRequest:
+        """Enqueue a request; returns its handle immediately. Tokens stream
+        through ``on_token(uid, token, done)`` as :meth:`step` produces
+        them and accumulate in ``handle.generated``."""
+        prompt = np.asarray(prompt, dtype=np.int32)
+        if prompt.size == 0:
+            raise ValueError("empty prompt (nothing to prefill)")
+        if uid is None:
+            uid = self._next_uid
+        self._next_uid = max(self._next_uid, uid + 1)
+        if uid in self.requests:
+            raise ValueError(f"duplicate request uid {uid}")
+        now = time.perf_counter()
+        sr = ScheduledRequest(
+            req=Request(
+                uid=uid,
+                prompt=prompt,
+                max_new_tokens=max_new_tokens,
+            ),
+            priority=priority,
+            on_token=on_token,
+            arrival_seq=self._arrival_seq,
+            arrival_step=self.stats.steps,
+            arrival_time=now,
+            enqueue_time=now,
+        )
+        self._arrival_seq += 1
+        self.requests[uid] = sr
+        self.queue.append(sr)
+        return sr
+
+    def _on_preempt(self, req: Request):
+        sr = self.requests.get(req.uid)
+        if sr is None or sr.req is not req:
+            # a request admitted through the raw engine API on the same
+            # engine is not ours — preserve the engine's own requeue
+            # semantics instead of corrupting scheduler state
+            self.engine.queue.insert(0, req)
+            return
+        if sr.slot >= 0:
+            self._slot_sr.pop(sr.slot, None)
+        sr.state = RequestState.QUEUED
+        sr.slot = -1
+        sr.prefill_done = 0           # recompute-resume restarts the prompt
+        sr.preemptions += 1
+        sr.enqueue_time = time.perf_counter()
+        self.queue.insert(0, sr)
+
+    # ---------------------------------------------------------------- policy
+    def _starving(self, sr: ScheduledRequest) -> bool:
+        return sr.queue_age(self.stats.steps) > self.config.starvation_bound
+
+    def _order_queue(self):
+        """Admission order. FCFS: arrival. Priority: higher ``priority``
+        first — EXCEPT that requests older than the starvation bound
+        outrank everything, FIFO among themselves. Sort is stable, so
+        equal keys keep arrival order."""
+        if self.config.policy == "fcfs":
+            self.queue.sort(key=lambda sr: sr.arrival_seq)
+        else:
+            self.queue.sort(
+                key=lambda sr: (
+                    0 if self._starving(sr) else 1,
+                    -sr.priority if not self._starving(sr) else 0,
+                    sr.arrival_seq,
+                )
+            )
+
+    # ------------------------------------------------------------- admission
+    def _record_admission(self, sr: ScheduledRequest):
+        # audit, not logic: admission always takes the ordered queue head,
+        # so this stays 0 unless a future change starts skipping past
+        # blocked heads — the fuzz suite pins the invariant either way
+        passed_over = sum(
+            1 for other in self.queue if self._starving(other)
+            and not self._starving(sr)
+        )
+        self.stats.admitted += 1
+        sr.admit_step = self.stats.steps
+        self.stats.admissions.append(
+            {
+                "step": self.stats.steps,
+                "uid": sr.uid,
+                "age": sr.queue_age(self.stats.steps),
+                "starving_passed_over": passed_over,
+            }
+        )
+        if len(self.stats.admissions) > SchedulerStats.LOG_CAP:
+            del self.stats.admissions[: -SchedulerStats.LOG_CAP]
+        # wait since the LAST enqueue: a preempted request's decode
+        # residency must not be booked as queue wait on re-admission
+        self.engine.stats.queue_wait.observe(
+            time.perf_counter() - sr.enqueue_time
+        )
+
+    def _admit(self):
+        if not self.queue:
+            return
+        self._order_queue()
+        while self.queue and self.engine.free_slots():
+            sr = self.queue[0]
+            if self.chunked:
+                slot = self.engine.claim_slot(sr.req)
+                if slot is None:
+                    break
+                sr.state = RequestState.PREFILLING
+                sr.prefill_done = 0
+            else:
+                slot = self.engine.free_slots()[0]
+                if not self.engine.admit_blocking(sr.req, slot):
+                    break                 # pool exhausted; retry next step
+                sr.state = RequestState.DECODING
+            self.queue.pop(0)
+            sr.slot = slot
+            self._slot_sr[slot] = sr
+            self._record_admission(sr)
+            if not self.chunked:
+                # blocking admission already sampled the first token
+                self._emit_first_token(sr)
+
+    # --------------------------------------------------------------- prefill
+    def _prefill_slots(self) -> List[ScheduledRequest]:
+        srs = [
+            sr for sr in self._slot_sr.values()
+            if sr.state is RequestState.PREFILLING
+        ]
+        srs.sort(key=lambda sr: sr.arrival_seq)     # oldest first
+        return srs
+
+    def _decoding_slots(self) -> List[int]:
+        return [
+            s for s, sr in self._slot_sr.items()
+            if sr.state is RequestState.DECODING
+        ]
+
+    def _compose_chunks(self) -> List[tuple]:
+        """Pick this tick's prefill chunks under the token budget. Returns
+        ``[(sr, slot, chunk_tokens, off), ...]`` (at most ``prefill_pack``).
+        """
+        cfg = self.config
+        budget = max(0, cfg.token_budget - len(self._decoding_slots()))
+        if budget == 0:
+            # liveness floor: a saturated decode batch must not starve
+            # prefill forever — grant one token of prefill progress
+            budget = 1
+        work = []
+        pressure = False
+        for sr in self._prefill_slots():
+            if len(work) >= cfg.prefill_pack or budget <= 0:
+                break
+            plen = len(sr.req.prompt)
+            clen = min(cfg.chunk_size, plen - sr.prefill_done, budget)
+            if clen <= 0:
+                continue
+            if not self.engine.ensure_chunk_pages(
+                sr.slot, sr.prefill_done + clen
+            ):
+                pressure = True
+                continue                  # pool pressure; retry next tick
+            chunk = sr.req.prompt[sr.prefill_done : sr.prefill_done + clen]
+            work.append((sr, sr.slot, chunk, sr.prefill_done))
+            budget -= clen
+        if pressure and not work:
+            self.stats.stalled_chunk_ticks += 1
+            self._break_page_deadlock()
+        return work
+
+    def _break_page_deadlock(self):
+        """Nothing could prefill for want of pages. If decode is running,
+        completions will free pages — wait. If NOT, the pool is wedged by
+        half-prefilled requests: evict the youngest PREFILLING slot so the
+        oldest can make progress (recompute-resume on re-admission)."""
+        if self._decoding_slots():
+            return
+        srs = self._prefill_slots()
+        if len(srs) < 2:
+            return                        # single occupant always fits
+        victim = srs[-1]
+        self.engine.preempt_slot(victim.slot)   # routes to _on_preempt
+        self.stats.deadlock_preemptions += 1
+
+    def _run_prefill(self):
+        work = self._compose_chunks()
+        if not work:
+            return
+        first_toks = self.engine.prefill_chunks_tick(
+            [(slot, chunk, off) for _, slot, chunk, off in work],
+            pack_width=self.config.prefill_pack,
+            chunk_cap=self.config.chunk_size,
+        )
+        self.stats.chunks += len(work)
+        for i, (sr, slot, chunk, off) in enumerate(work):
+            sr.prefill_done = off + len(chunk)
+            if sr.prefill_done == len(sr.req.prompt):
+                # prompt complete: this row's sampled token IS the first
+                # token — the request joins the decode batch next tick
+                nxt = int(first_toks[i])
+                sr.req.generated.append(nxt)
+                self.engine.next_tokens[slot, 0] = nxt
+                self.engine.ctx_lens[slot] = len(sr.req.prompt)
+                sr.state = RequestState.DECODING
+                self._emit_first_token(sr)
+
+    # ---------------------------------------------------------------- tokens
+    def _emit_first_token(self, sr: ScheduledRequest):
+        now = time.perf_counter()
+        if sr.first_token_time < 0:
+            # a preempted-and-resumed request re-enters here; TTFT is the
+            # time to its FIRST first-token only
+            sr.first_token_time = now
+            self.engine.stats.ttft.observe(now - sr.arrival_time)
+        sr.last_token_time = now
+        tok = sr.req.generated[-1]
+        done = sr.req.done
+        if sr.on_token:
+            sr.on_token(sr.uid, tok, done)
+        if done:
+            self._finish(sr, free_engine_slot=True)
+
+    def _emit_decode_token(self, sr: ScheduledRequest, tok: int, done: bool):
+        now = time.perf_counter()
+        if sr.last_token_time >= 0:
+            self.engine.stats.tpot.observe(now - sr.last_token_time)
+        sr.last_token_time = now
+        if sr.on_token:
+            sr.on_token(sr.uid, tok, done)
+
+    def _finish(self, sr: ScheduledRequest, free_engine_slot: bool = False):
+        slot = sr.slot
+        if free_engine_slot and slot >= 0:
+            # the engine frees slots itself after decode ticks; this path
+            # covers requests whose budget was exhausted by the first token
+            self.engine.slot_req[slot] = None
+            self.engine.ctx_lens[slot] = 0
+            self.engine._free_slot_pages(slot)
+        self._slot_sr.pop(slot, None)
+        sr.slot = -1
+        sr.state = RequestState.FINISHED
+        self.stats.finished += 1
+        # a steady-state server must not grow per-request state forever:
+        # the handle stays with the caller, the scheduler forgets it (and
+        # its uid becomes reusable)
+        self.requests.pop(sr.uid, None)
+
+    # ------------------------------------------------------------------ step
+    def step(self) -> Dict[int, int]:
+        """One scheduler tick: admit, pack prefill chunks, decode.
+        Returns {uid: token} for decode-produced tokens (first tokens
+        stream via callbacks and ``handle.generated``)."""
+        self.stats.steps += 1
+        self.stats.log_depth(len(self.queue))
+        self._admit()
+        if self.chunked:
+            self._run_prefill()
+        prefilling = [
+            s for s, sr in self._slot_sr.items()
+            if sr.state is RequestState.PREFILLING
+        ]
+        out = self.engine.decode_tick(exclude=prefilling)
+        for uid, tok in out.items():
+            sr = self.requests[uid]
+            # the engine frees the slot when the budget is spent OR the
+            # context cap is hit — either way this request is terminal, and
+            # the stream contract owes its consumer a done=True token
+            finished = self.engine.slot_req[sr.slot] is not sr.req
+            self._emit_decode_token(sr, tok, done=finished)
+            if finished:
+                self._finish(sr)
+        return out
+
+    # -------------------------------------------------------------- draining
+    @property
+    def pending(self) -> int:
+        return len(self.queue) + len(self._slot_sr)
+
+    def run_to_completion(self, max_steps: int = 10_000) -> SchedulerStats:
+        while self.pending and self.stats.steps < max_steps:
+            self.step()
+        return self.stats
+
+    def telemetry(self) -> dict:
+        """JSON-friendly snapshot: scheduler counters + engine latency
+        histograms + per-tick token split (for BENCH_decode_step.json)."""
+        es = self.engine.stats
+        return {
+            "steps": self.stats.steps,
+            "admitted": self.stats.admitted,
+            "finished": self.stats.finished,
+            "chunks": self.stats.chunks,
+            "chunked": self.chunked,
+            "policy": self.config.policy,
+            "stalled_chunk_ticks": self.stats.stalled_chunk_ticks,
+            "deadlock_preemptions": self.stats.deadlock_preemptions,
+            "queue_depth_max": max(self.stats.queue_depth, default=0),
+            "prefill_tokens": es.prefill_tokens,
+            "tokens_generated": es.tokens_generated,
+            **es.latency_dict(),
+        }

@@ -1,0 +1,267 @@
+"""Chunked prefill into the paged KV pool: kernel parity (stream-K chunk
+pack + page-routed FA2 vs the gather oracle) across GQA/MQA/MHA geometries,
+direct-to-pool scatter round-trips, model-level chunked-vs-blocking
+equivalence, and bucketed whole-prompt prefill exactness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.core.attention import (
+    mha_chunk_prefill_paged_ref,
+    paged_gather_kv,
+    paged_scatter_tokens,
+)
+from repro.core.leantile import ScheduleCache, make_chunk_schedule
+from repro.kernels.ops import flash_prefill_paged, lean_prefill_chunks
+from repro.models import (
+    init_params,
+    init_paged_cache,
+    prefill,
+    prefill_chunks,
+    supports_chunked_prefill,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _paged_problem(rng, Hq, Hkv, d, ps, W, offs, lens, dtype=jnp.float32):
+    """Pools + disjoint page tables + chunk queries for a pack."""
+    N = len(offs)
+    num_pages = 1 + N * W
+    kp = jnp.asarray(rng.normal(size=(num_pages, Hkv, ps, d)), dtype)
+    vp = jnp.asarray(rng.normal(size=(num_pages, Hkv, ps, d)), dtype)
+    tbls = np.zeros((N, W), np.int32)
+    for n in range(N):
+        npages = -(-int(offs[n] + lens[n]) // ps)
+        tbls[n, :npages] = 1 + n * W + np.arange(npages)
+    C = int(max(lens))
+    q = jnp.asarray(rng.normal(size=(N, Hq, C, d)), dtype)
+    return kp, vp, jnp.asarray(tbls), q
+
+
+def _run_all(q, kp, vp, tbls, offs, lens, Hkv, ps, W, workers=4):
+    offs_j = jnp.asarray(offs, jnp.int32)
+    ref = mha_chunk_prefill_paged_ref(q, kp, vp, tbls, offs_j)
+    visible = [int(o + l) for o, l in zip(offs, lens)]
+    sched = make_chunk_schedule(visible, Hkv, ps, workers, max_len=W * ps)
+    seg_ctx = jnp.asarray(np.repeat(visible, Hkv), jnp.int32)
+    seg_qs = jnp.asarray(np.repeat(offs, Hkv), jnp.int32)
+    lean = lean_prefill_chunks(
+        q, kp, vp, seg_ctx, seg_qs, tbls, sched, interpret=True
+    )
+    fa = flash_prefill_paged(q, kp, vp, tbls, offs_j, interpret=True)
+    return ref, lean, fa
+
+
+@pytest.mark.parametrize(
+    "Hq,Hkv", [(4, 2), (4, 1), (8, 8)], ids=["gqa", "mqa", "mha"]
+)
+def test_chunk_kernels_match_oracle(Hq, Hkv):
+    """Both chunk kernels == gather oracle on a ragged pack: rows at
+    different prompt depths, short tails, a fresh (offset-0) chunk."""
+    rng = np.random.default_rng(0)
+    d, ps, W = 16, 8, 6
+    offs = np.array([0, 9, 3], np.int64)
+    lens = np.array([5, 8, 1], np.int64)
+    kp, vp, tbls, q = _paged_problem(rng, Hq, Hkv, d, ps, W, offs, lens)
+    ref, lean, fa = _run_all(q, kp, vp, tbls, offs, lens, Hkv, ps, W)
+    for n in range(len(offs)):
+        L = int(lens[n])      # only valid rows are defined
+        np.testing.assert_allclose(ref[n, :, :L], lean[n, :, :L], atol=2e-5)
+        np.testing.assert_allclose(ref[n, :, :L], fa[n, :, :L], atol=2e-5)
+
+
+def test_chunk_schedule_buckets_via_cache():
+    """Chunk schedules share the decode bucket lattice: nearby visible
+    lengths hit the same cached schedule, and bucketed schedules stay
+    exact (runtime masking)."""
+    rng = np.random.default_rng(1)
+    d, ps, W, Hq, Hkv = 16, 8, 8, 4, 2
+    cache = ScheduleCache()
+    offs = np.array([17, 2], np.int64)
+    lens = np.array([4, 4], np.int64)
+    kp, vp, tbls, q = _paged_problem(rng, Hq, Hkv, d, ps, W, offs, lens)
+    ref = mha_chunk_prefill_paged_ref(q, kp, vp, tbls, jnp.asarray(offs, jnp.int32))
+    seen = []
+    for shift in (0, 1, 2):         # visible 21/6 -> 22/6 -> 23/6: one bucket
+        visible = [int(o + l) + shift for o, l in zip(offs, lens)]
+        sched = make_chunk_schedule(
+            visible, Hkv, ps, 4, max_len=W * ps, cache=cache
+        )
+        seen.append(sched)
+    assert cache.stats.misses == 1 and cache.stats.hits == 2
+    assert seen[0] is seen[1] is seen[2]
+    # the bucketed schedule still computes the exact (unshifted) answer
+    visible = [int(o + l) for o, l in zip(offs, lens)]
+    out = lean_prefill_chunks(
+        q, kp, vp,
+        jnp.asarray(np.repeat(visible, Hkv), jnp.int32),
+        jnp.asarray(np.repeat(offs, Hkv), jnp.int32),
+        tbls, seen[0], interpret=True,
+    )
+    for n in range(2):
+        L = int(lens[n])
+        np.testing.assert_allclose(ref[n, :, :L], out[n, :, :L], atol=2e-5)
+
+
+def test_paged_scatter_roundtrip():
+    rng = np.random.default_rng(2)
+    d, ps, W, N, C, H = 4, 8, 4, 2, 6, 2
+    pool = jnp.zeros((1 + N * W, H, ps, d))
+    tbls = jnp.asarray([[1, 2, 3, 4], [5, 6, 7, 8]], jnp.int32)
+    offs = jnp.asarray([5, 0], jnp.int32)
+    lens = jnp.asarray([6, 4], jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(N, C, H, d)), jnp.float32)
+    pool2 = paged_scatter_tokens(pool, tbls, offs, lens, vals)
+    dense = paged_gather_kv(pool2, tbls)
+    for n in range(N):
+        for i in range(int(lens[n])):
+            np.testing.assert_array_equal(
+                dense[n, :, int(offs[n]) + i], vals[n, i]
+            )
+    # pages of other rows untouched beyond written positions
+    assert float(jnp.abs(dense[1, :, 4:]).max()) == 0.0
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = get_smoke_config("mistral-nemo-12b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _chunked_vs_blocking(cfg, params, plen, C, ps, W, cache_len=32):
+    rng = np.random.default_rng(plen)
+    prompt = rng.integers(0, cfg.vocab_size, plen)
+    logits_b, cache_b, _ = prefill(
+        params, cfg, jnp.asarray(prompt[None], jnp.int32), cache_len=cache_len
+    )
+    cache_c = init_paged_cache(cfg, 1, cache_len, 1 + W, ps)
+    tbl = jnp.asarray(np.arange(1, W + 1)[None, :], jnp.int32)
+    logits_c = None
+    for off in range(0, plen, C):
+        clen = min(C, plen - off)
+        toks = np.zeros((1, C), np.int32)
+        toks[0, :clen] = prompt[off:off + clen]
+        logits_c, cache_c = prefill_chunks(
+            params, cfg, cache_c, jnp.asarray(toks),
+            jnp.asarray([off], jnp.int32), jnp.asarray([clen], jnp.int32),
+            tbl,
+        )
+    return logits_b, cache_b, logits_c, cache_c, tbl, prompt
+
+
+def test_prefill_chunks_matches_blocking_prefill(smoke):
+    """Model-level acceptance: chunk-streamed KV and first-token logits are
+    bit-identical to the whole-prompt prefill (same fp ops, same RoPE
+    positions, KV written straight to the pool)."""
+    cfg, params = smoke
+    assert supports_chunked_prefill(cfg)
+    logits_b, cache_b, logits_c, cache_c, tbl, prompt = _chunked_vs_blocking(
+        cfg, params, plen=13, C=5, ps=8, W=4
+    )
+    plen = len(prompt)
+    np.testing.assert_array_equal(
+        np.asarray(logits_b[0]), np.asarray(logits_c[0])
+    )
+    for st_b, st_c in zip(cache_b, cache_c):
+        for lc_b, lc_c in zip(st_b, st_c):
+            for key in ("k", "v"):
+                reps = lc_b[key].shape[0]
+                for r in range(reps):
+                    dense = lc_b[key][r, 0, :, :plen]
+                    gathered = paged_gather_kv(lc_c[key][r], tbl)[0, :, :plen]
+                    np.testing.assert_array_equal(
+                        np.asarray(dense), np.asarray(gathered)
+                    )
+
+
+def test_prefill_chunks_mqa_geometry(smoke):
+    """Same model-level parity on an MQA variant (n_kv_heads=1)."""
+    cfg, _ = smoke
+    cfg_mqa = dataclasses.replace(cfg, name="smoke-mqa", n_kv_heads=1)
+    params = init_params(jax.random.PRNGKey(1), cfg_mqa)
+    logits_b, _, logits_c, _, _, _ = _chunked_vs_blocking(
+        cfg_mqa, params, plen=11, C=4, ps=8, W=3
+    )
+    np.testing.assert_array_equal(
+        np.asarray(logits_b[0]), np.asarray(logits_c[0])
+    )
+
+
+def test_prefill_chunks_rejects_unsupported_arch():
+    cfg = get_smoke_config("recurrentgemma-9b")
+    assert not supports_chunked_prefill(cfg)
+    with pytest.raises(ValueError, match="chunked prefill"):
+        prefill_chunks(
+            None, cfg, None, jnp.zeros((1, 4), jnp.int32),
+            jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32),
+            jnp.zeros((1, 2), jnp.int32),
+        )
+
+
+def test_bucketed_prefill_is_exact(smoke):
+    """prefill(true_len): padded prompt + runtime length == exact prefill
+    (logits bit-equal, KV rows equal over the true length)."""
+    cfg, params = smoke
+    rng = np.random.default_rng(7)
+    plen, pad_to, cache_len = 13, 16, 32
+    prompt = rng.integers(0, cfg.vocab_size, plen)
+    logits_e, cache_e, cur_e = prefill(
+        params, cfg, jnp.asarray(prompt[None], jnp.int32), cache_len=cache_len
+    )
+    padded = np.zeros((1, pad_to), np.int32)
+    padded[0, :plen] = prompt
+    logits_p, cache_p, cur_p = prefill(
+        params, cfg, jnp.asarray(padded), cache_len=cache_len,
+        true_len=jnp.asarray(plen, jnp.int32),
+    )
+    assert int(cur_p) == plen
+    np.testing.assert_array_equal(np.asarray(logits_e), np.asarray(logits_p))
+    ke = cache_e[0][0]["k"][:, :, :, :plen]
+    kp = cache_p[0][0]["k"][:, :, :, :plen]
+    np.testing.assert_array_equal(np.asarray(ke), np.asarray(kp))
+
+
+def test_bucketed_prefill_rejects_recurrent_arch():
+    cfg = get_smoke_config("recurrentgemma-9b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="bucketed prefill"):
+        prefill(
+            params, cfg, jnp.zeros((1, 8), jnp.int32), cache_len=32,
+            true_len=jnp.asarray(5, jnp.int32),
+        )
+
+
+@pytest.mark.slow
+@settings(max_examples=20, deadline=None)
+@given(
+    geom=st.sampled_from([(4, 2, 16), (4, 1, 8), (2, 2, 16), (8, 4, 8)]),
+    ps=st.sampled_from([4, 8, 16]),
+    workers=st.integers(2, 10),
+    n_chunks=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+)
+def test_fuzz_chunk_kernels(geom, ps, workers, n_chunks, seed):
+    """Slow sweep: random pack geometries/depths/lengths — both chunk
+    kernels track the gather oracle."""
+    Hq, Hkv, d = geom
+    rng = np.random.default_rng(seed)
+    W = 8
+    offs = rng.integers(0, W * ps - 1, n_chunks)
+    lens = np.array(
+        [rng.integers(1, min(ps * 2, W * ps - o) + 1) for o in offs]
+    )
+    kp, vp, tbls, q = _paged_problem(rng, Hq, Hkv, d, ps, W, offs, lens)
+    ref, lean, fa = _run_all(
+        q, kp, vp, tbls, offs, lens, Hkv, ps, W, workers=workers
+    )
+    for n in range(n_chunks):
+        L = int(lens[n])
+        np.testing.assert_allclose(ref[n, :, :L], lean[n, :, :L], atol=5e-5)
+        np.testing.assert_allclose(ref[n, :, :L], fa[n, :, :L], atol=5e-5)
