@@ -19,10 +19,14 @@ def main() -> None:
     only = [s for s in args.only.split(",") if s]
 
     rows: list = []
-    from . import attention_bench, decode_step_bench, e2e_bench, ragged_bench
+    from . import (
+        attention_bench, decode_step_bench, e2e_bench, prefix_bench,
+        ragged_bench,
+    )
 
     suites = {
         "decode_step": lambda: decode_step_bench.run(rows),
+        "prefix": lambda: prefix_bench.run(rows),
         "fig7": lambda: attention_bench.fig7_context_sweep(rows),
         "fig7b": lambda: attention_bench.fig7b_heads_sweep(rows),
         "fig7c": lambda: attention_bench.fig7c_batch_sweep(rows),

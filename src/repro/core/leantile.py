@@ -32,12 +32,14 @@ from typing import Optional, Sequence, Tuple
 import numpy as np
 
 __all__ = [
+    "CascadeSchedule",
     "LeanSchedule",
     "ScheduleCache",
     "ScheduleCacheStats",
     "bucket_ctx_lens",
     "bucket_length",
     "make_schedule",
+    "make_cascade_schedule",
     "make_chunk_schedule",
     "default_tile_size",
     "fixed_split_factor",
@@ -379,6 +381,187 @@ def make_chunk_schedule(
     return make_schedule(lens, num_kv_heads, tile_size, num_workers)
 
 
+# ----------------------------------------------------------------- cascade
+@dataclass(frozen=True, eq=False)
+class CascadeSchedule:
+    """Prefix-grouped (cascade) stream-K schedule for shared-prompt decode.
+
+    Sequences sharing a page-aligned prompt prefix form a *group*; the
+    cascade splits their attention into two ordinary stream-K phases:
+
+      * **prefix phase** — one segment per (group, kv_head) whose query
+        block stacks every member's query rows (``group_size * g`` rows,
+        padded to the largest group), walking the group's *shared* prefix
+        pages exactly once per group instead of once per member;
+      * **suffix phase** — the normal per-sequence decode over each
+        member's private tail pages (table shifted past the prefix).
+
+    Both phases are plain :class:`LeanSchedule` instances, so they reuse
+    the paged kernels untouched; the merge phase (``segment_merge``)
+    reduces each sequence's prefix piece rows and suffix pieces into its
+    final output. Associativity of the softmax re-scaling operator
+    (paper §IV-A) is exactly what licenses this regrouping.
+
+    Hashes/compares by content (like :class:`LeanSchedule`), so it is a
+    valid ``jax.jit`` static argument.
+    """
+
+    batch: int                 # B sequences
+    num_kv_heads: int          # H_kv
+    num_groups: int            # NG (every sequence is in exactly one group)
+    group_size: int            # nmax: members per group, padded
+    tile_size: int
+    prefix_sched: LeanSchedule  # NG * H_kv segments, nmax * g query rows
+    suffix_sched: LeanSchedule  # B * H_kv segments, g query rows
+    members: np.ndarray        # (NG, nmax) int32 batch ids, -1 padding
+    seq_group: np.ndarray      # (B,) int32 group of each sequence
+    prefix_pages: np.ndarray   # (NG,) int32 aligned shared pages per group
+    prefix_lens: np.ndarray    # (NG,) int32 == prefix_pages * tile_size
+    seq_prefix_len: np.ndarray  # (B,) int32 prefix tokens of each sequence
+
+    @property
+    def signature(self) -> tuple:
+        sig = self.__dict__.get("_sig")
+        if sig is None:
+            sig = (
+                self.batch, self.num_kv_heads, self.num_groups,
+                self.group_size, self.tile_size,
+                self.prefix_sched.signature, self.suffix_sched.signature,
+                self.members.tobytes(), self.prefix_pages.tobytes(),
+            )
+            object.__setattr__(self, "_sig", sig)
+        return sig
+
+    def __hash__(self) -> int:
+        h = self.__dict__.get("_hash")
+        if h is None:
+            h = hash(self.signature)
+            object.__setattr__(self, "_hash", h)
+        return h
+
+    def __eq__(self, other) -> bool:
+        if self is other:
+            return True
+        if not isinstance(other, CascadeSchedule):
+            return NotImplemented
+        return self.signature == other.signature
+
+    def merge_piece_seg(self) -> np.ndarray:
+        """Per-piece segment ids for the cascade merge, over the combined
+        piece axis ``[expanded prefix pieces (member-major), suffix
+        pieces]``.
+
+        A prefix piece of segment ``(group j, head h)`` carries every
+        member's partial rows; expanded entry ``(i, p)`` (member rank i,
+        prefix piece p) targets sequence segment ``members[j, i] * H_kv +
+        h`` — padding members target the garbage segment ``B * H_kv`` and
+        are dropped by ``segment_merge``. Suffix pieces already target
+        per-sequence segments. Memoized."""
+        ids = self.__dict__.get("_merge_ids")
+        if ids is None:
+            H = self.num_kv_heads
+            Pp = self.prefix_sched.num_pieces
+            pseg = self.prefix_sched.piece_seg.astype(np.int64)   # (Pp,)
+            grp = pseg // H
+            head = pseg % H
+            mem = self.members[grp]                               # (Pp, nmax)
+            tgt = np.where(
+                mem >= 0, mem * H + head[:, None], self.batch * H
+            )                                                     # (Pp, nmax)
+            ids = np.concatenate(
+                [tgt.T.reshape(-1), self.suffix_sched.piece_seg]
+            ).astype(np.int32)
+            object.__setattr__(self, "_merge_ids", np.ascontiguousarray(ids))
+        return ids
+
+
+def make_cascade_schedule(
+    ctx_lens: Sequence[int],
+    groups: Sequence[Sequence[int]],
+    prefix_pages: Sequence[int],
+    num_kv_heads: int,
+    tile_size: int,
+    num_workers: int,
+    *,
+    max_len: Optional[int] = None,
+    bucket: bool = True,
+) -> CascadeSchedule:
+    """Build the cascade (prefix-grouped) schedule.
+
+    Args:
+      ctx_lens: full visible context per sequence (prefix + private tail).
+      groups: partition of ``range(len(ctx_lens))`` into shared-prefix
+        groups (singletons allowed — they simply get an empty prefix
+        phase segment).
+      prefix_pages: shared *page-aligned* prefix pages per group; clamped
+        so every member keeps at least one private suffix token (the
+        decode step always writes the current token past the prefix).
+      max_len: per-slot KV capacity in tokens (caps suffix buckets so the
+        shifted suffix table walk never leaves the backing table row).
+      bucket: round phase lengths to the canonical bucket lattice
+        (:func:`bucket_length`) — runtime masking keeps results exact, and
+        schedule signatures stay stable as sequences grow.
+    """
+    ctx = np.asarray(list(ctx_lens), dtype=np.int64)
+    B = len(ctx)
+    NG = len(groups)
+    if NG != len(prefix_pages):
+        raise ValueError("one prefix_pages entry per group required")
+    seen = sorted(b for g in groups for b in g)
+    if seen != list(range(B)):
+        raise ValueError("groups must partition range(batch) exactly")
+    nmax = max(len(g) for g in groups)
+    members = np.full((NG, nmax), -1, dtype=np.int32)
+    seq_group = np.zeros(B, dtype=np.int32)
+    pp = np.zeros(NG, dtype=np.int64)
+    for j, g in enumerate(groups):
+        members[j, : len(g)] = np.asarray(sorted(g), dtype=np.int32)
+        for b in g:
+            seq_group[b] = j
+        # every member must keep >= 1 suffix token past the shared prefix
+        cap = (int(ctx[list(g)].min()) - 1) // tile_size
+        pp[j] = min(int(prefix_pages[j]), max(0, cap))
+    prefix_lens = pp * tile_size
+    seq_prefix = prefix_lens[seq_group]
+    suffix_lens = ctx - seq_prefix                       # all >= 1
+
+    # schedule walks: prefix lengths are page multiples already; an empty
+    # prefix still contributes one fully-masked tile (runtime ctx 0) so the
+    # phase geometry stays uniform across groups
+    pref_walk = np.maximum(prefix_lens, 1)
+    suf_walk = suffix_lens
+    if bucket:
+        pref_walk = [bucket_length(int(n), tile_size) for n in pref_walk]
+        suf_cap = None
+        if max_len is not None:
+            # a sequence's suffix table row is its slot row shifted by the
+            # prefix pages, so its usable width shrinks by exactly that much
+            suf_cap = np.asarray(max_len, dtype=np.int64) - seq_prefix
+        suf_walk = [
+            bucket_length(
+                int(n), tile_size,
+                None if suf_cap is None else int(suf_cap[b]),
+            )
+            for b, n in enumerate(suf_walk)
+        ]
+    prefix_sched = make_schedule(pref_walk, num_kv_heads, tile_size, num_workers)
+    suffix_sched = make_schedule(suf_walk, num_kv_heads, tile_size, num_workers)
+    return CascadeSchedule(
+        batch=B,
+        num_kv_heads=int(num_kv_heads),
+        num_groups=NG,
+        group_size=nmax,
+        tile_size=int(tile_size),
+        prefix_sched=prefix_sched,
+        suffix_sched=suffix_sched,
+        members=members,
+        seq_group=seq_group,
+        prefix_pages=pp.astype(np.int32),
+        prefix_lens=prefix_lens.astype(np.int32),
+        seq_prefix_len=seq_prefix.astype(np.int32),
+    )
+
+
 # --------------------------------------------------------------- bucketing
 def bucket_length(n: int, tile_size: int, max_len: Optional[int] = None) -> int:
     """Round a context length up to a canonical bucket.
@@ -498,6 +681,72 @@ class ScheduleCache:
         sched.fused_descriptors()
         sched.iter_kv_meta(fused=False)
         sched.iter_kv_meta(fused=True)
+        self._entries[key] = sched
+        if len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1
+        return sched
+
+    def get_cascade(
+        self,
+        ctx_lens: Sequence[int],
+        groups: Sequence[Sequence[int]],
+        prefix_pages: Sequence[int],
+        num_kv_heads: int,
+        tile_size: int,
+        num_workers: int,
+        max_len: Optional[int] = None,
+    ) -> "CascadeSchedule":
+        """Memoized :func:`make_cascade_schedule`.
+
+        The key buckets the *suffix* lengths (context minus each group's
+        shared prefix) — the components that actually change tick to tick —
+        so steady-state cascade decode hits one entry per grouping, exactly
+        like plain decode hits one entry per bucketed ragged shape.
+        """
+        ctx = [int(n) for n in ctx_lens]
+        gkey = tuple(tuple(sorted(int(b) for b in g)) for g in groups)
+        pkey = tuple(int(p) for p in prefix_pages)
+        # suffix lengths only matter through their buckets; recompute them
+        # the same way make_cascade_schedule will (incl. the per-member
+        # prefix clamp) so equal-bucket ticks share one entry. The key
+        # carries the CLAMPED prefix pages — two calls whose requested
+        # prefixes clamp differently must not collide (and ones that clamp
+        # equal may share)
+        seq_pref = {}
+        pp_clamped = []
+        for g, p in zip(gkey, pkey):
+            cap = (min(ctx[b] for b in g) - 1) // tile_size
+            pp = min(p, max(0, cap))
+            pp_clamped.append(pp)
+            for b in g:
+                seq_pref[b] = pp * tile_size
+        skey = tuple(
+            bucket_length(
+                ctx[b] - seq_pref[b], tile_size,
+                None if max_len is None else max_len - seq_pref[b],
+            )
+            for b in range(len(ctx))
+        )
+        key = (
+            "cascade", skey, gkey, tuple(pp_clamped), int(num_kv_heads),
+            int(tile_size), int(num_workers), max_len,
+        )
+        sched = self._entries.get(key)
+        if sched is not None:
+            self.stats.hits += 1
+            self._entries.move_to_end(key)
+            return sched
+        self.stats.misses += 1
+        sched = make_cascade_schedule(
+            ctx, groups, prefix_pages, num_kv_heads, tile_size, num_workers,
+            max_len=max_len, bucket=True,
+        )
+        sched.prefix_sched.packed_descriptors()
+        sched.suffix_sched.packed_descriptors()
+        sched.prefix_sched.iter_kv_meta(fused=False)
+        sched.suffix_sched.iter_kv_meta(fused=False)
+        sched.merge_piece_seg()
         self._entries[key] = sched
         if len(self._entries) > self.max_entries:
             self._entries.popitem(last=False)

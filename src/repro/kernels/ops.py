@@ -27,15 +27,17 @@ from __future__ import annotations
 
 import functools
 import warnings
-from typing import Optional, Sequence, Union
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.leantile import (
+    CascadeSchedule,
     LeanSchedule,
     ScheduleCache,
+    make_cascade_schedule,
     make_schedule,
     default_tile_size,
 )
@@ -57,6 +59,9 @@ __all__ = [
     "lean_decode_from_schedule",
     "lean_decode_paged",
     "lean_decode_paged_from_schedule",
+    "lean_decode_cascade",
+    "lean_decode_cascade_from_schedule",
+    "cascade_tables",
     "lean_prefill_chunks",
     "flash_decode",
     "flash_prefill",
@@ -369,6 +374,190 @@ def lean_decode_paged(
         q, k_pool, v_pool, seg_ctx, jnp.asarray(ptbl_np, jnp.int32), sched,
         scale=scale, fused=fused, merge_impl=merge_impl,
         interpret=interpret, return_lse=return_lse,
+    )
+
+
+def lean_decode_cascade_from_schedule(
+    q: jax.Array,                  # (B, Hq, d)
+    k_pool: jax.Array,             # (num_pages, Hkv, page_size, d)
+    v_pool: jax.Array,
+    seg_ctx_suffix: jax.Array,     # (B*Hkv,) int32 true suffix lengths
+    prefix_tbl: jax.Array,         # (NG, Wp) int32 shared prefix pages
+    suffix_tbl: jax.Array,         # (B, Ws) int32 private tails (shifted)
+    csched: CascadeSchedule,
+    *,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+    return_lse: bool = False,
+):
+    """Jit-stable cascade (prefix-grouped) paged LeanAttention decode.
+
+    Two ordinary stream-K phases + one merge:
+
+      * prefix phase: segment = (group, kv_head), query block = every
+        member's rows stacked (``group_size * g``, padded groups carry
+        member-0 copies whose partials are dropped at merge) — the shared
+        prefix pages are walked ONCE per group, which is where the KV
+        traffic/grid-iteration savings come from;
+      * suffix phase: the normal per-sequence walk over the private tail
+        through ``suffix_tbl`` (the slot row shifted past the prefix);
+      * merge: prefix piece rows are re-sliced per member and reduced
+        together with the suffix pieces by the standard ``segment_merge``
+        — the same associative operator the unshared path uses.
+
+    Pure in the array arguments; ``csched`` is the only static key. The
+    prefix phase's runtime lengths are ``csched.prefix_lens`` (static
+    content of the schedule — an empty prefix masks to identity), the
+    suffix phase masks with ``seg_ctx_suffix``.
+
+    Numerics: sharing physical pages is bit-neutral (asserted in tests
+    against the same cascade over duplicated pages); the *regrouping*
+    itself re-associates the softmax reduction, so against the unshared
+    single-walk schedule the result is exact-but-not-bitwise (fp32
+    tolerance), exactly like any other stream-K repartition.
+    """
+    B, Hq, d = q.shape
+    num_pages, Hkv, page_size, _ = k_pool.shape
+    if page_size != csched.tile_size:
+        raise ValueError(
+            f"page_size {page_size} != schedule tile_size {csched.tile_size}"
+            " — lean tiles must map 1:1 onto pages"
+        )
+    if B != csched.batch or Hkv != csched.num_kv_heads:
+        raise ValueError("cascade schedule does not match the batch geometry")
+    scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
+    g = Hq // Hkv
+    nmax = csched.group_size
+    NG = csched.num_groups
+    k_rows = k_pool.reshape(num_pages * Hkv, page_size, d)
+    v_rows = v_pool.reshape(num_pages * Hkv, page_size, d)
+
+    # ---- prefix phase: stacked member queries, shared pages walked once
+    mem = np.clip(csched.members, 0, None)               # (NG, nmax)
+    q_r = q.reshape(B, Hkv, g, d)
+    q_pref = q_r[jnp.asarray(mem)]                       # (NG, nmax, Hkv, g, d)
+    q_pref = jnp.moveaxis(q_pref, 2, 1).reshape(NG * Hkv, nmax * g, d)
+    seg_ctx_prefix = jnp.repeat(
+        jnp.asarray(csched.prefix_lens, jnp.int32), Hkv
+    )
+    route_p = _paged_route(csched.prefix_sched, prefix_tbl, Hkv, fused=False)
+    o_p, m_p, l_p = lean_decode_paged_partials(
+        q_pref, k_rows, v_rows, seg_ctx_prefix, route_p,
+        csched.prefix_sched, scale, interpret=interpret,
+    )
+
+    # ---- suffix phase: ordinary per-sequence walk of the private tail
+    q_suf = q.reshape(B * Hkv, g, d)
+    route_s = _paged_route(csched.suffix_sched, suffix_tbl, Hkv, fused=False)
+    o_s, m_s, l_s = lean_decode_paged_partials(
+        q_suf, k_rows, v_rows, seg_ctx_suffix.astype(jnp.int32), route_s,
+        csched.suffix_sched, scale, interpret=interpret,
+    )
+
+    # ---- merge: slice prefix pieces per member, reduce with suffix pieces
+    Pp = csched.prefix_sched.num_pieces
+    o_pe = jnp.swapaxes(o_p.reshape(Pp, nmax, g, d), 0, 1).reshape(
+        nmax * Pp, g, d
+    )
+    m_pe = jnp.swapaxes(m_p.reshape(Pp, nmax, g), 0, 1).reshape(nmax * Pp, g)
+    l_pe = jnp.swapaxes(l_p.reshape(Pp, nmax, g), 0, 1).reshape(nmax * Pp, g)
+    part = AttnPartial(
+        o=jnp.concatenate([o_pe, o_s]),
+        m=jnp.concatenate([m_pe, m_s]),
+        l=jnp.concatenate([l_pe, l_s]),
+    )
+    ids = jnp.asarray(csched.merge_piece_seg())
+    seg = segment_merge(part, ids, B * Hkv)
+    out = finalize(seg).reshape(B, Hq, d).astype(q.dtype)
+    if return_lse:
+        return out, (seg.m + jnp.log(seg.l)).reshape(B, Hq)
+    return out
+
+
+def cascade_tables(
+    page_tbl: np.ndarray, csched: CascadeSchedule
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side (prefix_tbl, suffix_tbl) for a cascade call.
+
+    ``prefix_tbl[j]`` is the shared prefix run of group ``j`` (taken from
+    its first member's table row — all members alias the same physical
+    pages there); ``suffix_tbl[b]`` is sequence ``b``'s row shifted left
+    past its group's prefix pages. Widths stay at the slot table width so
+    bucketed schedule walks never index out of range.
+    """
+    ptbl = np.asarray(page_tbl)
+    B, W = ptbl.shape
+    NG = csched.num_groups
+    prefix_tbl = np.zeros((NG, W), dtype=np.int32)
+    suffix_tbl = np.zeros((B, W), dtype=np.int32)
+    for j in range(NG):
+        lead = int(csched.members[j, 0])
+        n = int(csched.prefix_pages[j])
+        prefix_tbl[j, :n] = ptbl[lead, :n]
+    for b in range(B):
+        n = int(csched.prefix_pages[csched.seq_group[b]])
+        suffix_tbl[b, : W - n] = ptbl[b, n:]
+    return prefix_tbl, suffix_tbl
+
+
+def lean_decode_cascade(
+    q: jax.Array,                  # (B, Hq, d)
+    k_pool: jax.Array,             # (num_pages, Hkv, page_size, d)
+    v_pool: jax.Array,
+    page_tbl,                      # (B, pages_per_seq) int32
+    ctx_lens: Sequence[int],
+    groups: Sequence[Sequence[int]],
+    prefix_pages: Sequence[int],
+    *,
+    num_workers: Optional[int] = None,
+    scale: Optional[float] = None,
+    schedule_cache: Optional[ScheduleCache] = None,
+    interpret: bool = False,
+    return_lse: bool = False,
+):
+    """Convenience cascade decode: builds (or cache-fetches) the cascade
+    schedule from host lengths/grouping, derives the phase tables, and runs
+    :func:`lean_decode_cascade_from_schedule`.
+
+    ``groups`` partitions the batch into shared-prefix groups and
+    ``prefix_pages`` gives each group's page-aligned shared prefix — the
+    exact outputs of a radix-cache admission
+    (:mod:`repro.serving.prefix_cache`). Lengths clamp to allocated
+    capacity like :func:`lean_decode_paged`.
+    """
+    B, Hq, d = q.shape
+    num_pages, Hkv, page_size, _ = k_pool.shape
+    ptbl_np = np.asarray(page_tbl)
+    if ptbl_np.shape[0] != B:
+        raise ValueError("page table rows must match the batch")
+    page_counts = (ptbl_np != 0).sum(axis=1)
+    ctx_lens = _clamp_ctx_lens(
+        ctx_lens, np.asarray(page_counts) * page_size, "lean_decode_cascade"
+    )
+    ctx_lens = [max(1, c) for c in ctx_lens]
+    num_workers = num_workers or default_num_workers()
+    max_len = ptbl_np.shape[1] * page_size
+    if schedule_cache is not None:
+        csched = schedule_cache.get_cascade(
+            ctx_lens, groups, prefix_pages, Hkv, page_size, num_workers,
+            max_len=max_len,
+        )
+    else:
+        csched = make_cascade_schedule(
+            ctx_lens, groups, prefix_pages, Hkv, page_size, num_workers,
+            max_len=max_len,
+        )
+    prefix_tbl, suffix_tbl = cascade_tables(ptbl_np, csched)
+    seg_ctx_suffix = jnp.asarray(
+        np.repeat(
+            np.asarray(ctx_lens) - np.asarray(csched.seq_prefix_len), Hkv
+        ),
+        jnp.int32,
+    )
+    return lean_decode_cascade_from_schedule(
+        q, k_pool, v_pool, seg_ctx_suffix,
+        jnp.asarray(prefix_tbl, jnp.int32), jnp.asarray(suffix_tbl, jnp.int32),
+        csched, scale=scale, interpret=interpret, return_lse=return_lse,
     )
 
 

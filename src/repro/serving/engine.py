@@ -57,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.leantile import (
+    CascadeSchedule,
     LeanSchedule,
     ScheduleCache,
     bucket_length,
@@ -68,8 +69,10 @@ from repro.core.leantile import (
 from repro.core.attention import paged_gather_kv
 from repro.kernels import flash_decode, lean_decode
 from repro.kernels.ops import (
+    cascade_tables,
     flash_decode_from_lens,
     flash_prefill_paged,
+    lean_decode_cascade_from_schedule,
     lean_decode_from_schedule,
     lean_decode_paged_from_schedule,
     lean_prefill_chunks,
@@ -84,6 +87,7 @@ from repro.models import (
 )
 from repro.models import supports_chunked_prefill as _cfg_supports_chunked
 from repro.serving.kvpool import KVPagePool
+from repro.serving.prefix_cache import RadixPrefixCache
 from repro.serving.telemetry import Histogram
 
 import contextlib
@@ -124,9 +128,15 @@ class EngineStats:
     prefill_tokens: int = 0           # prompt tokens pushed through chunks
     preemptions: int = 0
     prefill_compiles: int = 0         # distinct bucketed prefill shapes
+    prefix_matched_tokens: int = 0    # prompt tokens served from the radix cache
+    prefix_attach_count: int = 0      # admissions that hit the radix cache
+    cow_copies: int = 0               # copy-on-write page copies
+    cascade_ticks: int = 0            # decode ticks run on the cascade path
+    cascade_grouped_slots: int = 0    # cumulative slots decoded via a group
     schedules: List[dict] = field(default_factory=list)
     schedule_cache: dict = field(default_factory=dict)
     kv_pool: dict = field(default_factory=dict)
+    prefix_cache: dict = field(default_factory=dict)
     # per-tick prefill-vs-decode token split (capped like the schedule log)
     tick_prefill_tokens: List[int] = field(default_factory=list)
     tick_decode_tokens: List[int] = field(default_factory=list)
@@ -239,6 +249,64 @@ def _kernel_decode_step_paged(
     )
 
 
+def _kernel_decode_step_cascade(
+    params,
+    cache,
+    tokens,
+    ctx_lens,
+    page_tbl,
+    prefix_tbl,
+    suffix_tbl,
+    *,
+    cfg: ModelConfig,
+    csched: CascadeSchedule,
+    interpret: bool,
+):
+    """Cascade (prefix-grouped) twin of ``_kernel_decode_step_paged``: the
+    KV write still goes through the full per-slot ``page_tbl``; attention
+    runs the grouped prefix pass + per-slot suffix pass and merges. The
+    grouping/schedule is the only static key — tables are runtime arrays."""
+
+    def attn_fn(q, k_pool, v_pool, ctx):
+        suffix = jnp.maximum(
+            ctx.astype(jnp.int32) - jnp.asarray(csched.seq_prefix_len), 0
+        )
+        seg_suffix = jnp.repeat(suffix, cfg.n_kv_heads)
+        return lean_decode_cascade_from_schedule(
+            q, k_pool, v_pool, seg_suffix, prefix_tbl, suffix_tbl, csched,
+            interpret=interpret,
+        )
+
+    cur = jnp.max(ctx_lens)
+    return decode_step(
+        params, cfg, cache, tokens, cur, attn_fn=attn_fn,
+        ctx_lens=ctx_lens, page_tbl=page_tbl,
+    )
+
+
+def _copy_page(cache, src, dst, *, cfg: ModelConfig):
+    """Copy-on-write device op: clone page ``src`` onto page ``dst`` in
+    every pooled ('attn') layer. ``src``/``dst`` are traced scalars, so one
+    trace serves every CoW; jitted with the cache donated."""
+    out = []
+    for (pattern, reps), st_c in zip(cfg.stages, cache):
+        unit = []
+        for kind, lc in zip(pattern, st_c):
+            if kind == "attn":
+                nc = dict(lc)
+                for key in ("k", "v"):
+                    pool = lc[key]
+                    row = jax.lax.dynamic_slice_in_dim(pool, src, 1, axis=1)
+                    nc[key] = jax.lax.dynamic_update_slice_in_dim(
+                        pool, row, dst, axis=1
+                    )
+                unit.append(nc)
+            else:
+                unit.append(lc)
+        out.append(tuple(unit))
+    return out
+
+
 def _kernel_decode_step(
     params,
     cache,
@@ -340,6 +408,8 @@ class DecodeEngine:
         paged: bool = False,
         page_size: Optional[int] = None,
         num_pages: Optional[int] = None,
+        prefix_cache: bool = False,
+        cascade: bool = False,
     ):
         self.cfg = cfg
         self.params = params
@@ -350,6 +420,7 @@ class DecodeEngine:
         self.use_fast_path = use_fast_path
         self.fused = fused
         self.paged = paged
+        self.cascade = cascade
         # Pallas interpret mode: default on for CPU hosts (tests/bench),
         # off on real accelerators where Mosaic compiles the kernels
         self.interpret = (
@@ -386,6 +457,34 @@ class DecodeEngine:
             self.pool = None
             self.page_tbl = None
             self.cache = init_cache(cfg, max_batch, cache_len)
+
+        if prefix_cache and not paged:
+            raise ValueError("prefix_cache=True requires paged=True")
+        if cascade:
+            if not prefix_cache:
+                raise ValueError("cascade=True requires prefix_cache=True")
+            if attn_backend != "lean":
+                raise ValueError(
+                    "cascade decode is a lean-kernel path "
+                    "(attn_backend='lean')"
+                )
+        self.prefix_cache: Optional[RadixPrefixCache] = None
+        if prefix_cache:
+            n_attn = sum(
+                reps for pattern, reps in cfg.stages
+                for kind in pattern if kind == "attn"
+            )
+            kv_bytes = 1 if cfg.kv_cache_dtype == "f8" else 2
+            self.prefix_cache = RadixPrefixCache(
+                self.pool,
+                page_bytes=2 * n_attn * cfg.n_kv_heads * self.tile
+                * cfg.head_dim * kv_bytes,
+            )
+        # per-slot prefix-sharing state: which logical tiles are shared
+        # (immutable — copy-on-write before any KV write lands in one) and
+        # how many *leading full* shared pages form the cascade prefix
+        self._slot_shared_tiles: List[set] = [set() for _ in range(max_batch)]
+        self._slot_prefix_full: List[int] = [0] * max_batch
         self.ctx_lens = np.zeros(max_batch, dtype=np.int64)   # per-slot
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.queue: List[Request] = []
@@ -437,6 +536,14 @@ class DecodeEngine:
             static_argnames=("backend", "sched", "num_splits", "fused",
                              "interpret"),
             donate_argnames=("cache",),
+        )
+        self._jit_kernel_step_cascade = jax.jit(
+            functools.partial(_kernel_decode_step_cascade, cfg=cfg),
+            static_argnames=("csched", "interpret"),
+            donate_argnames=("cache",),
+        )
+        self._jit_copy_page = jax.jit(
+            functools.partial(_copy_page, cfg=cfg), donate_argnums=(0,)
         )
 
     # ------------------------------------------------------------- schedule
@@ -558,6 +665,82 @@ class DecodeEngine:
                 "raise num_pages or shorten the prompt"
             )
 
+    def _pool_alloc(self, seq, n: int):
+        """Pool allocation with radix-cache backpressure: on exhaustion,
+        evict LRU unreferenced prefix-cache leaves and retry once. Cached
+        pages are *elastic* capacity — live requests always win."""
+        got = self.pool.alloc(seq, n)
+        if got is None and self.prefix_cache is not None:
+            need = n - self.pool.num_free
+            if self.prefix_cache.evict(need) > 0 or self.pool.num_free >= n:
+                got = self.pool.alloc(seq, n)
+        return got
+
+    # --------------------------------------------------------- prefix sharing
+    def attach_prefix(self, slot: int, prompt) -> int:
+        """Map the longest cached prefix of ``prompt`` into ``slot``'s page
+        table (refcount-shared, zero recompute) and return the number of
+        prompt tokens it covers — the caller starts chunked prefill at that
+        offset. The match is capped at ``len(prompt) - 1`` so at least one
+        token always runs through the model (the first-token logits must be
+        computed, not recalled). No-op (returns 0) without a prefix cache
+        or on a slot that already has pages."""
+        if self.prefix_cache is None:
+            return 0
+        if self.pool.holds(slot) or self.ctx_lens[slot] != 0:
+            raise RuntimeError(
+                f"attach_prefix on slot {slot} with existing pages/context"
+            )
+        prompt = np.asarray(prompt)
+        plen = len(prompt)
+        match = self.prefix_cache.match(prompt.tolist())
+        matched = min(match.matched_tokens, plen - 1)
+        if matched <= 0:
+            return 0
+        keep = -(-matched // self.tile)
+        pages = match.pages[:keep]
+        self.pool.share(slot, pages)
+        self.page_tbl[slot, :keep] = pages
+        self._slot_shared_tiles[slot] = set(range(keep))
+        self._slot_prefix_full[slot] = matched // self.tile
+        self.stats.prefix_matched_tokens += matched
+        self.stats.prefix_attach_count += 1
+        return matched
+
+    def _cow_tile(self, slot: int, t: int) -> bool:
+        """Copy-on-write logical tile ``t`` of ``slot`` before a KV write
+        lands in a shared page: clone the page device-side onto a fresh one,
+        swap the table entry, release the share. Returns False (state
+        unchanged) when no page can be allocated right now."""
+        old = int(self.page_tbl[slot, t])
+        got = self._pool_alloc(slot, 1)
+        if got is None:
+            return False
+        new = got[0]
+        with _quiet_donation():
+            self.cache = self._jit_copy_page(
+                self.cache, jnp.asarray(old, jnp.int32),
+                jnp.asarray(new, jnp.int32),
+            )
+        self.page_tbl[slot, t] = new
+        self.pool.release_pages(slot, [old])
+        self._slot_shared_tiles[slot].discard(t)
+        if t < self._slot_prefix_full[slot]:
+            self._slot_prefix_full[slot] = t
+        self.stats.cow_copies += 1
+        return True
+
+    def _cow_for_writes(self, slot: int, start: int, upto: int) -> bool:
+        """CoW every shared tile that KV writes for positions
+        ``[start, upto)`` would touch."""
+        shared = self._slot_shared_tiles[slot]
+        if not shared or upto <= start:
+            return True
+        for t in range(start // self.tile, (upto - 1) // self.tile + 1):
+            if t in shared and not self._cow_tile(slot, t):
+                return False
+        return True
+
     def admit_blocking(self, req: Request, slot: int) -> bool:
         """Classic admission: whole-prompt prefill into ``slot``, cache row
         written, first token sampled. Returns False (engine unchanged) when
@@ -570,7 +753,7 @@ class DecodeEngine:
             # pages allocate lazily: admission takes only what the
             # prompt needs, decode grows page-by-page
             n = max(1, -(-plen // self.tile))
-            pages = self.pool.alloc(slot, n)
+            pages = self._pool_alloc(slot, n)
             if pages is None:
                 return False            # pool exhausted; retry next tick
             self.page_tbl[slot, :n] = pages
@@ -626,21 +809,32 @@ class DecodeEngine:
                 self.ctx_lens[slot] = 0
                 if self.paged:
                     self.page_tbl[slot, :] = 0
+                self._slot_shared_tiles[slot] = set()
+                self._slot_prefix_full[slot] = 0
                 return slot
         return None
 
-    def ensure_chunk_pages(self, slot: int, upto_tokens: int) -> bool:
+    def ensure_chunk_pages(
+        self, slot: int, upto_tokens: int, write_from: Optional[int] = None
+    ) -> bool:
         """Grow ``slot``'s page list to cover prompt positions
-        ``[0, upto_tokens)``. Returns False (pool unchanged beyond failed-
-        alloc stats) when the pool cannot serve it right now."""
+        ``[0, upto_tokens)``. With ``write_from`` given (the chunk's start
+        offset), shared pages the chunk's KV writes would land in are
+        copy-on-written first — a radix partial-page match hands the slot
+        an immutable page that its own appends must not touch. Returns
+        False (pool unchanged beyond failed-alloc stats) when the pool
+        cannot serve it right now."""
         need = min(-(-int(upto_tokens) // self.tile), self.pages_per_slot)
         have = self.pool.count(slot)
-        if have >= need:
-            return True
-        got = self.pool.alloc(slot, need - have)
-        if got is None:
-            return False
-        self.page_tbl[slot, have:need] = got
+        if have < need:
+            got = self._pool_alloc(slot, need - have)
+            if got is None:
+                return False
+            self.page_tbl[slot, have:need] = got
+        if write_from is not None:
+            return self._cow_for_writes(
+                slot, int(write_from), int(upto_tokens)
+            )
         return True
 
     def prefill_chunks_tick(
@@ -714,15 +908,21 @@ class DecodeEngine:
         oversubscribed."""
         alive = []
         for s in active:
-            need = min(int(self.ctx_lens[s]) // self.tile + 1,
-                       self.pages_per_slot)
+            ctx = int(self.ctx_lens[s])
+            need = min(ctx // self.tile + 1, self.pages_per_slot)
             have = self.pool.count(s)
             if have < need:
-                got = self.pool.alloc(s, need - have)
+                got = self._pool_alloc(s, need - have)
                 if got is None:
                     self._preempt(s)
                     continue
                 self.page_tbl[s, have:need] = got
+            # this tick's token writes at position ctx — if that lands in a
+            # shared (radix-matched) page, copy-on-write it first
+            wt = min(ctx, self.pages_per_slot * self.tile - 1) // self.tile
+            if wt in self._slot_shared_tiles[s] and not self._cow_tile(s, wt):
+                self._preempt(s)
+                continue
             alive.append(s)
         return alive
 
@@ -733,10 +933,15 @@ class DecodeEngine:
         With a ``preempt_sink`` registered (the Scheduler), the request
         goes there instead of the engine-local queue."""
         req = self.slot_req[slot]
-        self.pool.free_seq(slot, eviction=True)
+        if self.pool.holds(slot):
+            # shares release (refcount - 1); only the slot's private pages
+            # actually return to the free list
+            self.pool.free_seq(slot, eviction=True)
         self.page_tbl[slot, :] = 0
         self.slot_req[slot] = None
         self.ctx_lens[slot] = 0
+        self._slot_shared_tiles[slot] = set()
+        self._slot_prefix_full[slot] = 0
         fresh = req.generated[req.folded :]
         req.prompt = np.concatenate(
             [np.asarray(req.prompt),
@@ -760,10 +965,72 @@ class DecodeEngine:
             raise ValueError(f"slot {slot} is idle")
         self._preempt(slot)
 
+    def _donate_to_prefix_cache(self, slot: int, req: Optional[Request]):
+        """Offer a finishing slot's KV pages to the radix cache before its
+        refs are released — cached blocks survive the release and serve
+        future prompts starting with the same tokens."""
+        if self.prefix_cache is None or req is None:
+            return
+        n_tok = int(self.ctx_lens[slot])
+        if n_tok <= 0 or not self.pool.holds(slot):
+            return
+        fresh = req.generated[req.folded :]
+        toks = np.concatenate(
+            [np.asarray(req.prompt, dtype=np.int64),
+             np.asarray(fresh, dtype=np.int64)]
+        )[:n_tok]
+        n_tok = min(n_tok, self.pool.count(slot) * self.tile)
+        toks = toks[:n_tok]
+        if len(toks) == 0:
+            return
+        pages = self.page_tbl[slot, : -(-len(toks) // self.tile)].tolist()
+        self.prefix_cache.insert(toks.tolist(), pages)
+
+    def release_slot(self, slot: int):
+        """Finish a slot: donate its prefix to the radix cache (when one is
+        configured), release its page refs (shared pages survive under
+        their other holders), and clear the slot state."""
+        self._donate_to_prefix_cache(slot, self.slot_req[slot])
+        self.slot_req[slot] = None
+        self.ctx_lens[slot] = 0
+        self._free_slot_pages(slot)
+
     def _free_slot_pages(self, slot: int):
         if self.paged:
-            self.pool.free_seq(slot)
+            if self.pool.holds(slot):
+                self.pool.free_seq(slot)
             self.page_tbl[slot, :] = 0
+            self._slot_shared_tiles[slot] = set()
+            self._slot_prefix_full[slot] = 0
+
+    def _cascade_grouping(self, active: List[int]):
+        """Partition ALL slots into shared-prefix groups for this tick's
+        cascade schedule. Active slots with identical leading runs of full
+        shared (radix-matched) pages group together; everything else —
+        idle, excluded, or unshared slots — rides as singletons with an
+        empty prefix. Returns (groups, prefix_pages) in
+        :func:`make_cascade_schedule` form."""
+        by_prefix: Dict[tuple, List[int]] = {}
+        singles: List[int] = []
+        active_set = set(active)
+        for s in range(self.max_batch):
+            npref = self._slot_prefix_full[s] if s in active_set else 0
+            if npref > 0:
+                key = tuple(int(p) for p in self.page_tbl[s, :npref])
+                by_prefix.setdefault(key, []).append(s)
+            else:
+                singles.append(s)
+        groups, pps = [], []
+        for key, mem in by_prefix.items():
+            if len(mem) >= 2:
+                groups.append(mem)
+                pps.append(len(key))
+            else:
+                singles.extend(mem)
+        for s in singles:
+            groups.append([s])
+            pps.append(0)
+        return groups, pps
 
     def tick(self) -> Dict[int, int]:
         """Admit + one decode step for all active slots. Returns
@@ -804,7 +1071,34 @@ class DecodeEngine:
                 for s in exclude:
                     ptbl_np[s, :] = 0
 
-        if self.use_fast_path:
+        csched = None
+        if self.use_fast_path and self.cascade and self.attn_backend == "lean":
+            groups, pps = self._cascade_grouping(active)
+            if any(len(g) >= 2 for g in groups):
+                s_pad = self.cache_len + ((-self.cache_len) % self.tile)
+                lens = np.minimum(ctx_np + 1, self.cache_len)
+                csched = self.sched_cache.get_cascade(
+                    lens.tolist(), groups, pps, self.cfg.n_kv_heads,
+                    self.tile, self.num_workers, max_len=s_pad,
+                )
+        if csched is not None:
+            # cascade decode: shared prefixes walked once per group
+            self._record_schedule(csched.suffix_sched)
+            prefix_tbl, suffix_tbl = cascade_tables(ptbl_np, csched)
+            with _quiet_donation():
+                logits, self.cache = self._jit_kernel_step_cascade(
+                    self.params, self.cache,
+                    jnp.asarray(self.next_tokens),
+                    jnp.asarray(ctx_np, jnp.int32),
+                    jnp.asarray(ptbl_np),
+                    jnp.asarray(prefix_tbl), jnp.asarray(suffix_tbl),
+                    csched=csched, interpret=self.interpret,
+                )
+            self.stats.cascade_ticks += 1
+            self.stats.cascade_grouped_slots += sum(
+                len(g) for g in groups if len(g) >= 2
+            )
+        elif self.use_fast_path:
             # ONE schedule build (cached) serves both the stats record and
             # the kernel step — nothing is derived twice per tick
             sched = self._tick_schedule(ctx_np)
@@ -864,17 +1158,18 @@ class DecodeEngine:
             out[req.uid] = nxt
             self.stats.tokens_generated += 1
             if req.done or self.ctx_lens[s] >= cap - 1:
-                self.slot_req[s] = None
-                self.ctx_lens[s] = 0
-                # finished sequences return their pages immediately — this
-                # is what lets the pool admit more in-flight work than a
-                # dense worst-case cache could hold
-                self._free_slot_pages(s)
+                # finished sequences release their pages immediately (after
+                # offering their prefix to the radix cache) — this is what
+                # lets the pool admit more in-flight work than a dense
+                # worst-case cache could hold
+                self.release_slot(s)
         self.stats.ticks += 1
         self._log_tick_tokens(self.stats.tick_decode_tokens, len(active))
         self.stats.schedule_cache = self.sched_cache.stats.as_dict()
         if self.paged:
             self.stats.kv_pool = self.pool.as_dict()
+        if self.prefix_cache is not None:
+            self.stats.prefix_cache = self.prefix_cache.as_dict()
         return out
 
     def _log_tick_tokens(self, log: List[int], n: int):

@@ -1,4 +1,4 @@
-"""Paged KV-cache pool: a block allocator over a global page pool.
+"""Paged KV-cache pool: a refcounted block allocator over a global page pool.
 
 Dense decode caches reserve ``(slots, H_kv, S_max, d)`` for the *worst-case*
 context of every slot — the memory wall that blocks long-context serving.
@@ -14,10 +14,20 @@ stream-K descriptor stream just gains a page-table indirection (see
 :mod:`repro.kernels.lean_decode`).
 
 This module is the *host-side* allocator: it owns the free list, the
-per-sequence page lists, and the accounting invariants
+per-sequence page lists, the per-page **reference counts**, and the
+accounting invariants
 
-    allocated + free == usable pages          (no leaks)
-    live sequences hold disjoint page sets    (no aliasing)
+    live (refcount > 0) + free == usable pages     (no leaks)
+    refcount(p) == number of holders of p          (no phantom shares)
+    a sequence never holds the same page twice     (no self-aliasing)
+
+Pages are refcounted so that *prefix sharing* works on top of the same
+allocator: ``alloc`` hands out fresh pages at refcount 1, ``share`` lets a
+second holder (another sequence, or the radix prefix cache —
+:mod:`repro.serving.prefix_cache`) reference the same physical page, and a
+page returns to the free list only when its last holder releases it.
+Holders that share a page MUST treat it as immutable (copy-on-write before
+any in-place mutation — the engine owns that policy).
 
 The device-side pool arrays live in the engine's cache pytree; freeing here
 never touches device memory — pages are recycled by being overwritten on the
@@ -30,8 +40,8 @@ masked by the runtime context length. The allocator therefore hands out ids
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Hashable, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Callable, Dict, Hashable, Iterable, List, Optional, Sequence
 
 import numpy as np
 
@@ -45,12 +55,15 @@ class PoolStats:
     """Cumulative allocator statistics (host-side, cheap to keep exact)."""
 
     alloc_calls: int = 0
-    pages_allocated: int = 0      # cumulative
+    pages_allocated: int = 0      # cumulative fresh allocations
     free_calls: int = 0
-    pages_freed: int = 0          # cumulative
+    pages_freed: int = 0          # cumulative returns to the free list
     failed_allocs: int = 0
     high_water: int = 0           # max pages simultaneously live
     evictions: int = 0            # free_seq calls with eviction=True
+    share_calls: int = 0
+    pages_shared: int = 0         # cumulative refcount increments via share
+    pages_released: int = 0       # cumulative holder releases (any refcount)
 
     def as_dict(self) -> dict:
         return {
@@ -61,20 +74,25 @@ class PoolStats:
             "failed_allocs": self.failed_allocs,
             "high_water": self.high_water,
             "evictions": self.evictions,
+            "share_calls": self.share_calls,
+            "pages_shared": self.pages_shared,
+            "pages_released": self.pages_released,
         }
 
 
 class KVPagePool:
-    """Block allocator over ``num_pages`` KV pages of ``page_size`` tokens.
+    """Refcounted block allocator over ``num_pages`` KV pages.
 
     Sequences are identified by an arbitrary hashable key (the engine uses
-    its slot index). ``alloc`` is all-or-nothing; a failed allocation leaves
-    the pool untouched and bumps ``stats.failed_allocs`` so callers can
-    apply their admission/preemption policy.
+    its slot index; the radix prefix cache uses a reserved key). ``alloc``
+    is all-or-nothing; a failed allocation leaves the pool untouched and
+    bumps ``stats.failed_allocs`` so callers can apply their
+    admission/eviction/preemption policy.
 
     ``on_admit(seq, pages)`` hooks fire after every successful allocation
     (the engine's device-side copy-on-admit rides on this); ``on_evict(seq,
-    pages)`` hooks fire when a sequence's pages are released.
+    pages)`` hooks fire when a sequence releases pages — with the subset of
+    those pages that actually returned to the free list (refcount 0).
     """
 
     def __init__(self, num_pages: int, page_size: int):
@@ -88,7 +106,7 @@ class KVPagePool:
         # the working set of hot pages small
         self._free: List[int] = list(range(self.num_pages - 1, 0, -1))
         self._seq_pages: Dict[Hashable, List[int]] = {}
-        self._owner: Dict[int, Hashable] = {}
+        self._refcount: Dict[int, int] = {}
         self.stats = PoolStats()
         self.on_admit: List[Callable[[Hashable, List[int]], None]] = []
         self.on_evict: List[Callable[[Hashable, List[int]], None]] = []
@@ -105,11 +123,24 @@ class KVPagePool:
 
     @property
     def num_allocated(self) -> int:
+        """Distinct physical pages live (a shared page counts once)."""
         return self.usable_pages - len(self._free)
 
     @property
     def live_sequences(self) -> int:
         return len(self._seq_pages)
+
+    @property
+    def pages_saved(self) -> int:
+        """Σ (refcount - 1) over live pages: physical pages that sharing is
+        currently saving vs. an unshared allocator serving the same holders."""
+        return sum(rc - 1 for rc in self._refcount.values())
+
+    def holds(self, seq: Hashable) -> bool:
+        return seq in self._seq_pages
+
+    def refcount(self, page: int) -> int:
+        return self._refcount.get(page, 0)
 
     def pages_of(self, seq: Hashable) -> List[int]:
         return list(self._seq_pages.get(seq, ()))
@@ -118,14 +149,15 @@ class KVPagePool:
         return len(self._seq_pages.get(seq, ()))
 
     def token_capacity(self, seq: Hashable) -> int:
-        """Tokens the sequence's allocated pages can hold — the clamp bound
+        """Tokens the sequence's held pages can hold — the clamp bound
         used by :func:`repro.kernels.ops.lean_decode_paged`."""
         return self.count(seq) * self.page_size
 
     # ------------------------------------------------------------- alloc/free
     def alloc(self, seq: Hashable, n: int = 1) -> Optional[List[int]]:
-        """Allocate ``n`` pages for ``seq``. All-or-nothing; returns the new
-        page ids, or ``None`` (pool unchanged) when fewer than ``n`` free."""
+        """Allocate ``n`` fresh pages for ``seq`` at refcount 1.
+        All-or-nothing; returns the new page ids, or ``None`` (pool
+        unchanged) when fewer than ``n`` are free."""
         self.stats.alloc_calls += 1
         if n < 0:
             raise ValueError("n must be >= 0")
@@ -135,30 +167,92 @@ class KVPagePool:
         pages = [self._free.pop() for _ in range(n)]
         self._seq_pages.setdefault(seq, []).extend(pages)
         for p in pages:
-            self._owner[p] = seq
+            self._refcount[p] = 1
         self.stats.pages_allocated += n
         self.stats.high_water = max(self.stats.high_water, self.num_allocated)
         for hook in self.on_admit:
             hook(seq, list(pages))
         return pages
 
+    def share(self, seq: Hashable, pages: Sequence[int]) -> None:
+        """Register ``seq`` as an additional holder of live ``pages``
+        (refcount + 1 each, appended to the sequence's page list in order).
+
+        The pages must be live (held by someone) and not already held by
+        ``seq`` — a sequence holding the same physical page at two logical
+        tiles would corrupt its own KV. Shared pages are immutable to every
+        holder; the engine copy-on-writes before mutating one.
+        """
+        pages = [int(p) for p in pages]
+        held = set(self._seq_pages.get(seq, ()))
+        for p in pages:
+            if self._refcount.get(p, 0) <= 0:
+                raise ValueError(f"cannot share dead/free page {p}")
+            if p in held:
+                raise ValueError(f"sequence {seq!r} already holds page {p}")
+            held.add(p)
+        self._seq_pages.setdefault(seq, []).extend(pages)
+        for p in pages:
+            self._refcount[p] += 1
+        self.stats.share_calls += 1
+        self.stats.pages_shared += len(pages)
+
+    def _release(self, pages: Iterable[int]) -> List[int]:
+        """Drop one reference per page; return the subset that died."""
+        dead = []
+        for p in pages:
+            rc = self._refcount[p] - 1
+            self.stats.pages_released += 1
+            if rc == 0:
+                del self._refcount[p]
+                dead.append(p)
+            else:
+                self._refcount[p] = rc
+        # LIFO: most-recently-dead first, mirroring the old free order
+        self._free.extend(reversed(dead))
+        self.stats.pages_freed += len(dead)
+        return dead
+
+    def release_pages(self, seq: Hashable, pages: Sequence[int]) -> List[int]:
+        """Release ``seq``'s hold on specific ``pages`` (each freed only if
+        this was the last reference). Returns the pages actually freed.
+        Raises ``KeyError`` for an unknown seq, ``ValueError`` for a page
+        the sequence does not hold."""
+        if seq not in self._seq_pages:
+            raise KeyError(f"unknown sequence {seq!r}")
+        held = self._seq_pages[seq]
+        for p in pages:
+            try:
+                held.remove(int(p))
+            except ValueError:
+                raise ValueError(
+                    f"sequence {seq!r} does not hold page {p}"
+                ) from None
+        if not held:
+            del self._seq_pages[seq]
+        dead = self._release(int(p) for p in pages)
+        if dead:
+            for hook in self.on_evict:
+                hook(seq, list(dead))
+        return dead
+
     def free_seq(self, seq: Hashable, *, eviction: bool = False) -> int:
-        """Release every page of ``seq``; returns the count. Fires
-        ``on_evict`` hooks. ``eviction=True`` tags the release as a
-        preemption (vs normal request completion) in the stats."""
-        pages = self._seq_pages.pop(seq, None)
-        if not pages:
-            return 0
+        """Release every page ``seq`` holds; returns the count of pages that
+        actually returned to the free list (shared pages survive under
+        their remaining holders). Raises ``KeyError`` for a sequence the
+        pool does not know — a silent 0-page return here masked double-free
+        bugs upstream. ``eviction=True`` tags the release as a preemption
+        (vs normal request completion) in the stats."""
+        if seq not in self._seq_pages:
+            raise KeyError(f"unknown sequence {seq!r}")
+        pages = self._seq_pages.pop(seq)
         self.stats.free_calls += 1
-        self.stats.pages_freed += len(pages)
         if eviction:
             self.stats.evictions += 1
-        for p in pages:
-            del self._owner[p]
-        self._free.extend(reversed(pages))
+        dead = self._release(pages)
         for hook in self.on_evict:
-            hook(seq, list(pages))
-        return len(pages)
+            hook(seq, list(dead))
+        return len(dead)
 
     # ------------------------------------------------------------ page tables
     def table_row(self, seq: Hashable, width: int) -> np.ndarray:
@@ -180,17 +274,27 @@ class KVPagePool:
     # ------------------------------------------------------------- invariants
     def check(self) -> None:
         """Assert the pool accounting invariants (tests / debug ticks)."""
-        live = [p for pages in self._seq_pages.values() for p in pages]
-        assert len(live) == len(set(live)), "page referenced by two sequences"
+        holders: Dict[int, int] = {}
+        for seq, pages in self._seq_pages.items():
+            assert pages, f"empty page list left behind for {seq!r}"
+            assert len(pages) == len(set(pages)), (
+                f"sequence {seq!r} holds a page twice: {pages}"
+            )
+            for p in pages:
+                holders[p] = holders.get(p, 0) + 1
+        live = set(holders)
         assert NULL_PAGE not in live, "null page handed out"
         assert NULL_PAGE not in self._free, "null page on the free list"
+        assert holders == self._refcount, (
+            f"refcounts out of sync: holders={holders} rc={self._refcount}"
+        )
         assert len(live) + len(self._free) == self.usable_pages, (
             f"leak: {len(live)} live + {len(self._free)} free "
             f"!= {self.usable_pages} usable"
         )
-        assert set(self._owner) == set(live), "owner map out of sync"
-        overlap = set(live) & set(self._free)
+        overlap = live & set(self._free)
         assert not overlap, f"pages both live and free: {overlap}"
+        assert len(self._free) == len(set(self._free)), "free list duplicates"
 
     def fragmentation(self) -> float:
         """1 - (longest contiguous free run / free pages). Pages are
@@ -211,6 +315,7 @@ class KVPagePool:
             "allocated": self.num_allocated,
             "free": self.num_free,
             "live_sequences": self.live_sequences,
+            "pages_saved": self.pages_saved,
             "utilization": self.num_allocated / max(1, self.usable_pages),
             "fragmentation": self.fragmentation(),
             **self.stats.as_dict(),

@@ -278,7 +278,13 @@ class Scheduler:
                 if slot is None:
                     break
                 sr.state = RequestState.PREFILLING
-                sr.prefill_done = 0
+                # radix prefix cache: matched prompt tokens map their cached
+                # KV pages straight into the slot's table — prefill starts
+                # past them, and only the unmatched tail is ever charged to
+                # the chunk token budget
+                sr.prefill_done = self.engine.attach_prefix(
+                    slot, sr.req.prompt
+                )
             else:
                 slot = self.engine.free_slots()[0]
                 if not self.engine.admit_blocking(sr.req, slot):
@@ -327,7 +333,7 @@ class Scheduler:
             if clen <= 0:
                 continue
             if not self.engine.ensure_chunk_pages(
-                sr.slot, sr.prefill_done + clen
+                sr.slot, sr.prefill_done + clen, write_from=sr.prefill_done
             ):
                 pressure = True
                 continue                  # pool pressure; retry next tick
@@ -404,9 +410,9 @@ class Scheduler:
         if free_engine_slot and slot >= 0:
             # the engine frees slots itself after decode ticks; this path
             # covers requests whose budget was exhausted by the first token
-            self.engine.slot_req[slot] = None
-            self.engine.ctx_lens[slot] = 0
-            self.engine._free_slot_pages(slot)
+            # (release_slot also donates the finished prefix to the radix
+            # cache before letting the page refs go)
+            self.engine.release_slot(slot)
         self._slot_sr.pop(slot, None)
         sr.slot = -1
         sr.state = RequestState.FINISHED
@@ -468,5 +474,10 @@ class Scheduler:
             "queue_depth_max": max(self.stats.queue_depth, default=0),
             "prefill_tokens": es.prefill_tokens,
             "tokens_generated": es.tokens_generated,
+            "prefix_matched_tokens": es.prefix_matched_tokens,
+            "prefix_attach_count": es.prefix_attach_count,
+            "cow_copies": es.cow_copies,
+            "cascade_ticks": es.cascade_ticks,
+            "prefix_cache": dict(es.prefix_cache),
             **es.latency_dict(),
         }

@@ -54,11 +54,13 @@ class Histogram:
         return self.sum / self.count if self.count else 0.0
 
     def percentile(self, p: float) -> float:
-        """Approximate p-th percentile (0 <= p <= 100): linear interpolation
-        inside the winning bucket, clamped to the exact [min, max]."""
+        """Approximate p-th percentile: linear interpolation inside the
+        winning bucket, clamped to the exact [min, max]. Empty histograms
+        report 0.0 (never the ±inf sentinels in ``min``/``max``), and ``p``
+        is clamped into [0, 100]."""
         if not self.count:
             return 0.0
-        rank = p / 100.0 * self.count
+        rank = min(max(p, 0.0), 100.0) / 100.0 * self.count
         acc = 0
         for i, c in enumerate(self.counts):
             if c == 0:
@@ -78,6 +80,8 @@ class Histogram:
         self.counts = [a + b for a, b in zip(self.counts, other.counts)]
         self.count += other.count
         self.sum += other.sum
+        # min/max are ±inf sentinels on an empty side; plain min/max keeps
+        # them correct, and a doubly-empty merge stays the empty histogram
         self.min = min(self.min, other.min)
         self.max = max(self.max, other.max)
         return self

@@ -1,0 +1,345 @@
+"""Cascade (prefix-grouped) decode: numerics, bit-identity, engine parity.
+
+The sharing contract has two layers, each with its own strongest-true
+assertion:
+
+  * **page aliasing is bit-neutral** — the production decode path shares
+    physical pages through the page table while keeping the unshared
+    stream-K schedule; output is asserted BIT-identical to the same decode
+    over per-sequence duplicated pages (same schedule, same shapes, same
+    values ⇒ same bits, by construction);
+  * **the cascade regrouping is exact** — the grouped prefix pass + suffix
+    pass + merge is the associative softmax reduction re-bracketed, so it
+    is asserted bit-identical under sharing vs duplicated pages (equal
+    schedule), and fp32-tight against the vanilla unshared paged decode
+    and the dense reference oracle (a stream-K repartition re-associates
+    the reduction, like any worker-count change).
+
+Engine level: a cascade engine must generate token-identical streams to
+the plain paged lean engine, and copy-on-write must fire (and stay
+correct) when a request appends into a partially-shared page.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attention import paged_gather_kv
+from repro.core.leantile import ScheduleCache, make_cascade_schedule
+from repro.kernels.ops import (
+    cascade_tables,
+    lean_decode_cascade,
+    lean_decode_paged,
+)
+from repro.kernels.ref import lean_decode_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+GEOMS = [(4, 2, 16), (4, 1, 16), (3, 3, 8), (8, 2, 32)]   # GQA/MQA/MHA
+
+
+def _shared_problem(rng, Hq, Hkv, d, ps, pp, suffixes, extra_groups=0):
+    """Pool + tables where the first len(suffixes) sequences share a
+    ``pp``-page prefix; optional extra singleton sequences follow."""
+    B = len(suffixes) + extra_groups
+    lens = [pp * ps + s for s in suffixes] + [
+        ps + 3 * i for i in range(extra_groups)
+    ]
+    W = max(-(-L // ps) for L in lens) + 1
+    total = sum(-(-L // ps) for L in lens) + pp * (len(suffixes) - 1)
+    num_pages = 1 + total + 4
+    k_pool = rng.standard_normal((num_pages, Hkv, ps, d)).astype(np.float32)
+    v_pool = rng.standard_normal((num_pages, Hkv, ps, d)).astype(np.float32)
+    q = jnp.asarray(rng.standard_normal((B, Hq, d)), jnp.float32)
+    free = list(rng.permutation(np.arange(1, num_pages)))
+    shared = [int(free.pop()) for _ in range(pp)]
+    ptbl = np.zeros((B, W), np.int32)
+    for b, L in enumerate(lens):
+        n = -(-L // ps)
+        if b < len(suffixes):
+            ptbl[b, :pp] = shared
+            ptbl[b, pp:n] = [int(free.pop()) for _ in range(n - pp)]
+        else:
+            ptbl[b, :n] = [int(free.pop()) for _ in range(n)]
+    groups = [list(range(len(suffixes)))] + [
+        [len(suffixes) + i] for i in range(extra_groups)
+    ]
+    pps = [pp] + [0] * extra_groups
+    return q, k_pool, v_pool, ptbl, lens, groups, pps, shared, free
+
+
+def _duplicate_shared(k_pool, v_pool, ptbl, shared, free, members):
+    """Unshare: give every member (past the first) its own copy of the
+    shared pages — identical values on distinct physical pages."""
+    k2, v2, p2 = k_pool.copy(), v_pool.copy(), ptbl.copy()
+    free = list(free)
+    for b in members[1:]:
+        dup = [int(free.pop()) for _ in range(len(shared))]
+        k2[dup] = k2[shared]
+        v2[dup] = v2[shared]
+        p2[b, : len(shared)] = dup
+    return k2, v2, p2
+
+
+@pytest.mark.parametrize("geom", GEOMS)
+def test_cascade_matches_oracle_and_paged(geom):
+    Hq, Hkv, d = geom
+    ps, pp = 16, 3
+    rng = np.random.default_rng(hash(geom) % 2**32)
+    q, k_pool, v_pool, ptbl, lens, groups, pps, *_ = _shared_problem(
+        rng, Hq, Hkv, d, ps, pp, suffixes=[5, 20, 33], extra_groups=1
+    )
+    kj, vj = jnp.asarray(k_pool), jnp.asarray(v_pool)
+    ref = lean_decode_ref(
+        q, paged_gather_kv(kj, jnp.asarray(ptbl)),
+        paged_gather_kv(vj, jnp.asarray(ptbl)),
+        ctx_lens=jnp.asarray(lens, jnp.int32),
+    )
+    paged = lean_decode_paged(
+        q, kj, vj, ptbl, lens, num_workers=6, interpret=True
+    )
+    casc = lean_decode_cascade(
+        q, kj, vj, ptbl, lens, groups, pps, num_workers=6, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(casc), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(casc), np.asarray(paged),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("geom", GEOMS)
+def test_sharing_is_bit_identical_to_unshared(geom):
+    """THE sharing bit-identity assertions, per GQA/MQA geometry:
+
+    (a) default path — ``lean_decode_paged`` over an aliased table equals
+        the same call over duplicated pages BIT-exactly (this is what the
+        engine's prefix-sharing decode runs every tick);
+    (b) cascade path — ``lean_decode_cascade`` under sharing equals the
+        same cascade over duplicated pages BIT-exactly (sharing the pass
+        and the pages changes nothing vs. per-sequence copies).
+    """
+    Hq, Hkv, d = geom
+    ps, pp = 8, 4
+    rng = np.random.default_rng((hash(geom) + 7) % 2**32)
+    q, k_pool, v_pool, ptbl, lens, groups, pps, shared, free = (
+        _shared_problem(rng, Hq, Hkv, d, ps, pp, suffixes=[3, 9, 17, 6])
+    )
+    k2, v2, p2 = _duplicate_shared(k_pool, v_pool, ptbl, shared, free,
+                                   members=groups[0])
+    kj, vj = jnp.asarray(k_pool), jnp.asarray(v_pool)
+    k2j, v2j = jnp.asarray(k2), jnp.asarray(v2)
+
+    a1 = lean_decode_paged(q, kj, vj, ptbl, lens, num_workers=5,
+                           interpret=True)
+    a2 = lean_decode_paged(q, k2j, v2j, p2, lens, num_workers=5,
+                           interpret=True)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+    c1 = lean_decode_cascade(q, kj, vj, ptbl, lens, groups, pps,
+                             num_workers=5, interpret=True)
+    c2 = lean_decode_cascade(q, k2j, v2j, p2, lens, groups, pps,
+                             num_workers=5, interpret=True)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_cascade_bucketed_cache_stays_exact_and_hits():
+    """Cascade schedules built through the ScheduleCache bucket the suffix
+    lengths; runtime masking keeps results exact, and a tick-over-tick
+    length drift inside one bucket must HIT the cache."""
+    Hq, Hkv, d, ps, pp = 4, 2, 16, 16, 2
+    rng = np.random.default_rng(3)
+    q, k_pool, v_pool, ptbl, lens, groups, pps, *_ = _shared_problem(
+        rng, Hq, Hkv, d, ps, pp, suffixes=[4, 9, 13]
+    )
+    kj, vj = jnp.asarray(k_pool), jnp.asarray(v_pool)
+    cache = ScheduleCache()
+    ref = lean_decode_ref(
+        q, paged_gather_kv(kj, jnp.asarray(ptbl)),
+        paged_gather_kv(vj, jnp.asarray(ptbl)),
+        ctx_lens=jnp.asarray(lens, jnp.int32),
+    )
+    out = lean_decode_cascade(q, kj, vj, ptbl, lens, groups, pps,
+                              num_workers=4, schedule_cache=cache,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    # +1 token on every suffix: same buckets, must hit
+    lens2 = [n + 1 for n in lens]
+    lean_decode_cascade(q, kj, vj, ptbl, lens2, groups, pps,
+                        num_workers=4, schedule_cache=cache, interpret=True)
+    assert cache.stats.hits >= 1
+
+
+def test_cascade_schedule_clamps_prefix_to_member_capacity():
+    """A group whose claimed prefix would swallow a member's whole context
+    gets clamped so every member keeps >= 1 suffix token."""
+    cs = make_cascade_schedule(
+        ctx_lens=[33, 64], groups=[[0, 1]], prefix_pages=[4],
+        num_kv_heads=2, tile_size=16, num_workers=4,
+    )
+    assert int(cs.prefix_pages[0]) == 2          # (33-1)//16
+    assert (np.asarray(cs.seq_prefix_len) == 32).all()
+    ids = cs.merge_piece_seg()
+    # every non-garbage merge target is a valid per-seq segment
+    assert ids.max() <= 2 * 2 and ids.min() >= 0
+
+
+def test_cascade_tables_shift_past_prefix():
+    cs = make_cascade_schedule(
+        ctx_lens=[40, 40, 20], groups=[[0, 1], [2]], prefix_pages=[2, 0],
+        num_kv_heads=1, tile_size=8, num_workers=2,
+    )
+    ptbl = np.array([[5, 6, 7, 8, 9], [5, 6, 10, 11, 0],
+                     [12, 13, 14, 0, 0]], np.int32)
+    pt, st = cascade_tables(ptbl, cs)
+    np.testing.assert_array_equal(pt[0, :2], [5, 6])
+    assert pt[1].sum() == 0                       # empty prefix group
+    np.testing.assert_array_equal(st[0, :3], [7, 8, 9])
+    np.testing.assert_array_equal(st[1, :2], [10, 11])
+    np.testing.assert_array_equal(st[2, :3], [12, 13, 14])
+
+
+# ------------------------------------------------------------- engine parity
+@pytest.fixture(scope="module")
+def setup():
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+
+    cfg = get_smoke_config("mistral-nemo-12b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _sched_run(cfg, params, waves, *, prefix_cache, cascade,
+               backend="lean", new=4, **ekw):
+    from repro.serving.engine import DecodeEngine
+    from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+    eng = DecodeEngine(
+        cfg, params, max_batch=4, cache_len=64, attn_backend=backend,
+        num_workers=4, paged=True, page_size=8,
+        prefix_cache=prefix_cache, cascade=cascade, **ekw,
+    )
+    sched = Scheduler(eng, SchedulerConfig(chunk_size=8, prefill_pack=2,
+                                           token_budget=32))
+    out = []
+    for wave in waves:
+        hs = [sched.submit(p, max_new_tokens=new) for p in wave]
+        sched.run_to_completion(max_steps=500)
+        out.extend(tuple(h.generated) for h in hs)
+    eng.pool.check()
+    if eng.prefix_cache is not None:
+        eng.prefix_cache.check()
+    return out, eng
+
+
+def _waves(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, 24)
+    w1 = [np.concatenate([shared, rng.integers(0, cfg.vocab_size, 5 + 3 * i)])
+          for i in range(2)]
+    w2 = [np.concatenate([shared, rng.integers(0, cfg.vocab_size, 4 + 2 * i)])
+          for i in range(4)]
+    return [w1, w2]
+
+
+def test_engine_cascade_tokens_match_unshared_lean(setup):
+    """End-to-end: the cascade engine (radix sharing + grouped decode)
+    generates the exact token streams of the plain paged lean engine on
+    the same request stream — and it actually shared (hits, grouped
+    cascade ticks, pages saved)."""
+    cfg, params = setup
+    waves = _waves(cfg)
+    base, _ = _sched_run(cfg, params, waves, prefix_cache=False,
+                         cascade=False)
+    casc, eng = _sched_run(cfg, params, waves, prefix_cache=True,
+                           cascade=True)
+    assert base == casc
+    assert eng.stats.prefix_attach_count >= 4
+    assert eng.stats.prefix_matched_tokens >= 4 * 24
+    assert eng.stats.cascade_ticks > 0
+    assert eng.stats.cascade_grouped_slots > 0
+
+
+def test_engine_prefix_sharing_tokens_match_ref(setup):
+    """Default (non-cascade) path: page-table aliasing over the unshared
+    schedule — token streams identical with the radix cache on vs off."""
+    cfg, params = setup
+    waves = _waves(cfg, seed=1)
+    base, _ = _sched_run(cfg, params, waves, prefix_cache=False,
+                         cascade=False, backend="ref")
+    on, eng = _sched_run(cfg, params, waves, prefix_cache=True,
+                         cascade=False, backend="ref")
+    assert base == on
+    assert eng.stats.prefix_attach_count >= 4
+
+
+def test_engine_cow_on_partial_page_divergence(setup):
+    """A second request whose prompt exactly extends a cached sequence
+    lands mid-page: its appends must copy-on-write the shared partial
+    page, the original cached KV must stay pristine (a third identical
+    request still matches and decodes identically), and no page is ever
+    aliased between diverged requests."""
+    cfg, params = setup
+    rng = np.random.default_rng(7)
+    # 11 tokens: 1 full page (8) + partial page (3) at page_size 8
+    base_prompt = rng.integers(0, cfg.vocab_size, 11)
+    # learn the greedy continuation so the follow-ups extend the cached
+    # sequence INTO its partial page (conversation-continuation pattern);
+    # KV coverage of the donor is prompt + generated[:-1]
+    first, _ = _sched_run(cfg, params, [[base_prompt]], prefix_cache=False,
+                          cascade=False, backend="ref")
+    cont = np.asarray(first[0][:3], dtype=base_prompt.dtype)
+    div_a = np.concatenate([base_prompt, cont,
+                            rng.integers(0, cfg.vocab_size, 6)])
+    div_b = np.concatenate([base_prompt, cont,
+                            rng.integers(0, cfg.vocab_size, 6)])
+    waves = [[base_prompt], [div_a], [div_b]]
+    off, _ = _sched_run(cfg, params, waves, prefix_cache=False,
+                        cascade=False, backend="ref")
+    on, eng = _sched_run(cfg, params, waves, prefix_cache=True,
+                         cascade=False, backend="ref")
+    assert off == on
+    assert eng.stats.cow_copies >= 1, "partial-page divergence must CoW"
+    assert eng.stats.prefix_matched_tokens > 0
+
+
+@pytest.mark.slow
+def test_engine_cascade_random_prefix_tree_churn(setup):
+    """Slow fuzz: random prefix trees + request churn through an
+    undersized pool with the cascade engine — token-identical to the
+    unshared lean engine; pool and trie invariants hold after drain."""
+    cfg, params = setup
+    rng = np.random.default_rng(11)
+    roots = [rng.integers(0, cfg.vocab_size, 16) for _ in range(2)]
+    waves = []
+    for _ in range(4):
+        wave = []
+        for _ in range(int(rng.integers(2, 5))):
+            root = roots[int(rng.integers(0, 2))]
+            cut = int(rng.integers(4, len(root) + 1))
+            tail = rng.integers(0, cfg.vocab_size, int(rng.integers(1, 12)))
+            wave.append(np.concatenate([root[:cut], tail]))
+        waves.append(wave)
+    base, _ = _sched_run(cfg, params, waves, prefix_cache=False,
+                         cascade=False, new=3)
+    casc, eng = _sched_run(cfg, params, waves, prefix_cache=True,
+                           cascade=True, new=3, num_pages=24)
+    assert base == casc
+    assert eng.pool.num_allocated == len(eng.pool.pages_of(
+        "__radix_prefix_cache__"))
+
+
+def test_get_cascade_keys_on_clamped_prefix():
+    """Regression: two lookups with identical groups/REQUESTED prefix
+    pages but different clamp outcomes must not collide in the cache
+    (the second caller would silently decode with the first's longer
+    prefix — negative suffix lengths, masked tails)."""
+    cache = ScheduleCache()
+    a = cache.get_cascade([33, 33], [[0, 1]], [2], 2, 16, 4)
+    b = cache.get_cascade([17, 17], [[0, 1]], [2], 2, 16, 4)
+    assert a is not b
+    assert a.seq_prefix_len.tolist() == [32, 32]
+    assert b.seq_prefix_len.tolist() == [16, 16]
+    # equal-clamp, same-bucket lookups still share one entry
+    assert cache.get_cascade([34, 34], [[0, 1]], [2], 2, 16, 4) is a

@@ -99,7 +99,13 @@ def test_pool_churn_never_aliases_and_never_leaks(ops, usable):
             pool.alloc(key, n=1 + (step % 3))     # may fail; pool unchanged
         pool.check()  # disjoint live sets, accounting, null page reserved
     for key in set(ops):
-        pool.free_seq(key)
+        if pool.holds(key):
+            pool.free_seq(key)
+        else:
+            # unknown/already-freed sequences must fail LOUDLY now —
+            # the silent 0-page return used to mask double-free bugs
+            with pytest.raises(KeyError):
+                pool.free_seq(key)
     pool.check()
     assert pool.num_allocated == 0
     assert pool.stats.pages_allocated == pool.stats.pages_freed

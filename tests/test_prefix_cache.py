@@ -1,0 +1,300 @@
+"""Radix prefix cache + refcounted pool: unit, property, and churn tests.
+
+Covers the new sharing layer host-side:
+
+  * pool refcounting — alloc/share/release semantics, free-only-at-zero,
+    ``free_seq`` KeyError on unknown sequences (double-free detector), and
+    a hypothesis property interleaving alloc/share/evict churn against the
+    accounting invariants;
+  * radix trie — block-aligned insert/match, divergence mid-page ends the
+    match at the page boundary, partial-tail nodes match-but-are-leaves,
+    LRU leaf eviction respects live references and walks up the trie;
+  * fuzz — random prefix trees + request churn never alias or leak pages
+    (tier-1 bounded run + a larger @slow sweep).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serving.kvpool import NULL_PAGE, KVPagePool
+from repro.serving.prefix_cache import CACHE_SEQ, RadixPrefixCache
+
+
+# ------------------------------------------------------------- pool refcounts
+def test_free_seq_unknown_seq_raises_keyerror():
+    pool = KVPagePool(8, page_size=4)
+    with pytest.raises(KeyError):
+        pool.free_seq("never-allocated")
+    pool.alloc("a", 2)
+    pool.free_seq("a")
+    with pytest.raises(KeyError):
+        pool.free_seq("a")          # double free is now loud
+    pool.check()
+
+
+def test_share_release_refcount_lifecycle():
+    pool = KVPagePool(10, page_size=4)
+    pages = pool.alloc("a", 3)
+    pool.share("b", pages)
+    assert all(pool.refcount(p) == 2 for p in pages)
+    assert pool.num_allocated == 3          # shared pages count once
+    assert pool.pages_saved == 3
+    # releasing one holder keeps the pages alive
+    assert pool.free_seq("a") == 0
+    assert all(pool.refcount(p) == 1 for p in pages)
+    assert pool.num_allocated == 3
+    pool.check()
+    # last holder release frees
+    assert pool.free_seq("b") == 3
+    assert pool.num_allocated == 0
+    pool.check()
+
+
+def test_share_rejects_dead_pages_and_self_alias():
+    pool = KVPagePool(10, page_size=4)
+    pages = pool.alloc("a", 2)
+    with pytest.raises(ValueError):
+        pool.share("a", [pages[0]])         # a seq cannot hold a page twice
+    pool.free_seq("a")
+    with pytest.raises(ValueError):
+        pool.share("b", [pages[0]])         # dead page cannot be shared
+    pool.check()
+
+
+def test_release_pages_partial():
+    pool = KVPagePool(10, page_size=4)
+    pages = pool.alloc("a", 4)
+    pool.share("b", pages[:2])
+    freed = pool.release_pages("a", pages[1:3])
+    # pages[1] still held by b; pages[2] died
+    assert freed == [pages[2]]
+    assert pool.refcount(pages[1]) == 1
+    assert pool.count("a") == 2
+    with pytest.raises(ValueError):
+        pool.release_pages("a", [pages[2]])  # no longer held by a
+    pool.check()
+
+
+@settings(max_examples=30)
+@given(
+    ops=st.lists(st.integers(0, 9), min_size=1, max_size=100),
+    usable=st.integers(3, 24),
+)
+def test_pool_alloc_share_evict_churn_accounting(ops, usable):
+    """Interleaved alloc/share/release churn: the refcount invariants hold
+    at every step, and draining every holder returns the pool to empty."""
+    pool = KVPagePool(usable + 1, page_size=8)
+    keys = [f"s{i}" for i in range(4)] + [CACHE_SEQ]
+    for step, op in enumerate(ops):
+        key = keys[op % len(keys)]
+        kind = (op + step) % 3
+        if kind == 0 and not pool.holds(key):
+            pool.alloc(key, n=1 + (step % 3))          # may fail: unchanged
+        elif kind == 1:
+            # share someone else's pages (only those key doesn't hold yet)
+            donors = [k for k in keys if k != key and pool.holds(k)]
+            if donors:
+                donor = donors[step % len(donors)]
+                held = set(pool.pages_of(key))
+                pages = [p for p in pool.pages_of(donor) if p not in held]
+                if pages:
+                    pool.share(key, pages[: 1 + step % 2])
+        elif pool.holds(key):
+            pool.free_seq(key, eviction=bool(step % 2))
+        pool.check()
+    for key in keys:
+        if pool.holds(key):
+            pool.free_seq(key)
+    pool.check()
+    assert pool.num_allocated == 0
+    assert pool.pages_saved == 0
+
+
+# ----------------------------------------------------------------- radix trie
+def _mk(usable=64, ps=4):
+    pool = KVPagePool(usable + 1, page_size=ps)
+    return pool, RadixPrefixCache(pool, page_bytes=128)
+
+
+def _donate(pool, cache, seq_key, tokens):
+    """Simulate a finishing request: alloc pages, insert, release."""
+    ps = pool.page_size
+    n = -(-len(tokens) // ps)
+    pages = pool.alloc(seq_key, n)
+    assert pages is not None
+    cache.insert(tokens, pages)
+    pool.free_seq(seq_key)
+    cache.check()
+    return pages
+
+
+def test_match_full_blocks_and_miss():
+    pool, cache = _mk()
+    toks = list(range(10))                   # 2 full pages + partial(2)
+    _donate(pool, cache, "a", toks)
+    m = cache.match(toks + [99, 98, 97])
+    # 2 full pages match; the partial node (toks 8,9) also matches
+    assert m.matched_tokens == 10 and len(m.pages) == 3 and m.tail_partial
+    m2 = cache.match([5, 6, 7])              # diverges in block 0
+    assert m2.matched_tokens == 0 and not m2.hit
+    assert cache.stats.hits == 1 and cache.stats.misses == 1
+
+
+def test_divergence_mid_page_ends_match_at_boundary():
+    pool, cache = _mk()
+    _donate(pool, cache, "a", list(range(12)))     # 3 full pages
+    probe = list(range(6)) + [777] + list(range(7, 12))
+    m = cache.match(probe)
+    assert m.matched_tokens == 4                   # page 0 only
+    assert len(m.pages) == 1 and not m.tail_partial
+
+
+def test_partial_node_is_leaf_and_shorter_probe_misses_it():
+    pool, cache = _mk()
+    _donate(pool, cache, "a", list(range(6)))      # 1 full + partial(2)
+    # probe shorter than the partial node's tokens: can't use the page
+    m = cache.match(list(range(5)))
+    assert m.matched_tokens == 4 and not m.tail_partial
+    # exact continuation matches the partial page too
+    m2 = cache.match(list(range(6)))
+    assert m2.matched_tokens == 6 and m2.tail_partial
+    cache.check()
+
+
+def test_insert_dedups_existing_blocks():
+    pool, cache = _mk()
+    _donate(pool, cache, "a", list(range(8)))
+    held_before = pool.count(CACHE_SEQ)
+    # same prefix, new tail: only the tail page should be donated
+    ps = pool.page_size
+    toks = list(range(8)) + [50, 51, 52, 53]
+    pages = pool.alloc("b", 3)
+    taken = cache.insert(toks, pages)
+    assert taken == 1
+    assert cache.stats.dedup_insert_pages >= 2
+    pool.free_seq("b")
+    cache.check()
+    assert pool.count(CACHE_SEQ) == held_before + 1
+
+
+def test_lru_eviction_order_and_live_refs_pinned():
+    pool, cache = _mk(usable=16)
+    a = _donate(pool, cache, "a", list(range(0, 8)))      # 2 pages
+    b = _donate(pool, cache, "b", list(range(100, 108)))  # 2 pages
+    # 'a' chain is older; but pin its pages with a live share
+    m = cache.match(list(range(0, 8)))
+    pool.share("live", m.pages)
+    # touch refreshes 'a' — make 'b' the LRU instead by touching a again
+    cache.match(list(range(0, 8)))
+    freed = cache.evict(1)
+    assert freed == 1
+    # the evicted page must come from 'b' (a's pages are pinned AND hot)
+    assert pool.refcount(a[0]) >= 1 and pool.refcount(a[1]) >= 1
+    cache.check()
+    pool.check()
+    # release the pin; evict everything — parents become leaves and go too
+    pool.free_seq("live")
+    cache.drop_all()
+    assert len(cache) == 0
+    assert pool.num_allocated == 0
+    pool.check()
+
+
+def test_eviction_walks_up_as_parents_become_leaves():
+    pool, cache = _mk(usable=16)
+    _donate(pool, cache, "a", list(range(12)))     # chain of 3 nodes
+    assert len(cache) == 3
+    freed = cache.evict(3)
+    assert freed == 3 and len(cache) == 0
+    assert pool.num_allocated == 0
+    pool.check()
+
+
+# ----------------------------------------------------------------- churn fuzz
+def _prefix_churn(n_steps, usable, seed):
+    """Random radix workload: donate/match/share/release/evict churn with
+    invariant checks at every step; ends fully drained."""
+    rng = np.random.default_rng(seed)
+    ps = 4
+    pool = KVPagePool(usable + 1, page_size=ps)
+    cache = RadixPrefixCache(pool)
+    vocab = 6
+    roots = [rng.integers(0, vocab, 8).tolist() for _ in range(3)]
+    live = {}
+    uid = 0
+    for step in range(n_steps):
+        r = rng.random()
+        if r < 0.45:
+            # new "request": shared root + random tail, match + share + alloc
+            toks = roots[int(rng.integers(0, 3))] + rng.integers(
+                0, vocab, int(rng.integers(0, 9))
+            ).tolist()
+            m = cache.match(toks)
+            matched = min(m.matched_tokens, len(toks) - 1)
+            keep = -(-matched // ps) if matched > 0 else 0
+            key = f"r{uid}"; uid += 1
+            if keep:
+                pool.share(key, m.pages[:keep])
+            need = -(-len(toks) // ps) - keep
+            got = pool.alloc(key, need) if need else []
+            if got is None:
+                # pressure: evict then drop the request
+                cache.evict(need)
+                if pool.holds(key):
+                    pool.free_seq(key)
+            else:
+                live[key] = (toks, pool.pages_of(key))
+        elif r < 0.75 and live:
+            # finish a request: donate then release
+            key = list(live)[int(rng.integers(0, len(live)))]
+            toks, pages = live.pop(key)
+            cache.insert(toks, pages)
+            pool.free_seq(key)
+        elif r < 0.9 and live:
+            # preemption: release without donating
+            key = list(live)[int(rng.integers(0, len(live)))]
+            live.pop(key)
+            pool.free_seq(key, eviction=True)
+        else:
+            cache.evict(int(rng.integers(1, 4)))
+        pool.check()
+        cache.check()
+    for key in list(live):
+        pool.free_seq(key)
+    cache.drop_all()
+    pool.check()
+    assert pool.num_allocated == 0
+
+
+def test_prefix_churn_never_aliases_or_leaks():
+    _prefix_churn(n_steps=60, usable=24, seed=0)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(8))
+def test_prefix_churn_fuzz_slow(seed):
+    _prefix_churn(n_steps=300, usable=16 + 4 * seed, seed=seed)
+
+
+def test_insert_skips_page_already_backing_another_node():
+    """One physical page may back at most one trie node: a donor that
+    extended a matched partial page WITHOUT copy-on-write offers that page
+    again under a different (full) block key — insert must skip it
+    gracefully (and stop the chain there), never crash or double-hold."""
+    pool, cache = _mk(ps=4)
+    _donate(pool, cache, "a", list(range(6)))     # full(0..3) + partial(4,5)
+    m = cache.match(list(range(6)))
+    assert m.tail_partial and len(m.pages) == 2
+    # a no-CoW client: shares the partial page, "extends" it, donates
+    pool.share("b", m.pages)
+    extra = pool.alloc("b", 1)
+    toks = list(range(6)) + [9, 8, 7, 6, 5, 4]    # 3 full blocks
+    before = len(cache)
+    taken = cache.insert(toks, pool.pages_of("b"))
+    assert taken == 0                             # chain stopped at the alias
+    assert cache.stats.aliased_insert_skips == 1
+    assert len(cache) == before
+    pool.free_seq("b")
+    cache.check()
+    pool.check()

@@ -384,3 +384,79 @@ def test_fuzz_arrival_churn(seed, policy, num_pages, n_reqs):
     )
     eng.pool.check()
     assert eng.pool.num_allocated == 0
+
+
+# ------------------------------------------------------------- telemetry
+def test_histogram_empty_is_guarded():
+    """The empty histogram must never leak its ±inf sentinels: percentile
+    and the JSON summary report zeros / a bare count, repr stays printable,
+    and merging empties is a no-op."""
+    from repro.serving.telemetry import Histogram
+
+    h = Histogram()
+    assert h.count == 0
+    assert h.mean == 0.0
+    assert h.percentile(50) == 0.0 and h.percentile(99) == 0.0
+    assert h.as_dict() == {"count": 0}
+    assert "empty" in repr(h)
+    # merge of two empties stays empty (and min/max stay sentinels only
+    # internally — as_dict never exposes them)
+    h.merge(Histogram())
+    assert h.as_dict() == {"count": 0}
+    # empty + populated merge adopts the populated side's extrema
+    other = Histogram()
+    other.observe(0.25)
+    h.merge(other)
+    d = h.as_dict()
+    assert d["count"] == 1 and d["min"] == d["max"] == 0.25
+    assert h.percentile(-5) == 0.25 and h.percentile(200) == 0.25
+
+
+def test_scheduler_telemetry_before_any_traffic(smoke):
+    """telemetry() on a fresh scheduler (all histograms empty) must be
+    JSON-clean — the empty-histogram guard seen from the caller's side."""
+    import json
+
+    cfg, params = smoke
+    eng = _paged_engine(cfg, params, "ref")
+    sch = Scheduler(eng, SchedulerConfig(chunk_size=8, prefill_pack=2,
+                                         token_budget=16))
+    tel = sch.telemetry()
+    assert tel["ttft"] == {"count": 0}
+    assert tel["tpot"] == {"count": 0}
+    json.dumps(tel)                      # no ±inf leaks into the summary
+
+
+# ------------------------------------------------------ prefix admission
+def test_prefix_admission_charges_only_unmatched_tokens(smoke):
+    """A radix-matched admission skips the matched prompt tokens entirely:
+    prefill_done starts at the match, fewer chunks run, and only unmatched
+    tokens are charged to the chunk budget."""
+    cfg, params = smoke
+    rng = np.random.default_rng(5)
+    shared = rng.integers(0, cfg.vocab_size, 32)      # 2 pages of 16
+    p1 = np.concatenate([shared, rng.integers(0, cfg.vocab_size, 6)])
+    p2 = np.concatenate([shared, rng.integers(0, cfg.vocab_size, 9)])
+
+    def run(prefix_cache):
+        eng = _paged_engine(cfg, params, "ref", prefix_cache=prefix_cache)
+        sch = Scheduler(eng, SchedulerConfig(chunk_size=8, prefill_pack=2,
+                                             token_budget=16))
+        h1 = sch.submit(p1, 3)
+        sch.run_to_completion(max_steps=200)
+        h2 = sch.submit(p2, 3)
+        sch.run_to_completion(max_steps=200)
+        return (tuple(h1.generated), tuple(h2.generated)), eng, sch
+
+    toks_off, eng_off, sch_off = run(False)
+    toks_on, eng_on, sch_on = run(True)
+    assert toks_off == toks_on
+    assert eng_on.stats.prefix_attach_count == 1
+    assert eng_on.stats.prefix_matched_tokens == 32
+    # the second request's prompt pushed only its unmatched tail through
+    # chunked prefill
+    assert eng_on.stats.prefill_tokens == eng_off.stats.prefill_tokens - 32
+    assert sch_on.stats.chunks < sch_off.stats.chunks
+    tel = sch_on.telemetry()
+    assert tel["prefix_matched_tokens"] == 32
+    assert tel["prefix_cache"]["hit_rate"] > 0
