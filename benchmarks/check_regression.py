@@ -1,0 +1,127 @@
+"""CI perf-regression gate over ``BENCH_decode_step.json``.
+
+Compares the freshly-produced benchmark artifact against the committed
+``BENCH_baseline.json`` and fails (exit 1) when any gated metric regresses
+by more than ``--threshold`` (default 15%).
+
+Gated metrics are *intra-run ratios and counts* — speedup-vs-legacy,
+paged-vs-dense throughput ratio, cascade-vs-baseline decode speedup,
+tokens-decoded-while-prefilling — rather than absolute wall-clock
+numbers, because shared CI runners make absolute timings jitter far more
+than 15% while the within-run ratios stay stable (both sides of a ratio
+see the same noisy host). A metric *missing* from the current artifact is
+itself a failure: a silently-dropped suite must not pass the gate. A
+metric missing from the baseline is skipped with a note (new suites gate
+once the baseline is refreshed).
+
+``--inject-regression F`` scales every current metric by ``F`` before
+comparison — the self-test knob that demonstrates the gate trips (e.g.
+``--inject-regression 0.8`` must exit 1 against any baseline of itself).
+
+  PYTHONPATH=src python -m benchmarks.check_regression
+  PYTHONPATH=src python -m benchmarks.check_regression --inject-regression 0.8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+# suite -> (json path, higher-is-better metric)
+METRICS = {
+    "decode_fast_path": ("decode_step", "speedup_vs_legacy"),
+    "paged": ("paged", "paged_over_dense_throughput"),
+    "scheduler": (
+        "scheduler", "chunked", "decode_tokens_while_long_prefilling",
+    ),
+    "prefix_aliased": ("prefix", "headline", "decode_speedup_prefix"),
+    "prefix_cascade": ("prefix", "headline", "decode_speedup_cascade"),
+    "prefix_mixed_lcp_passes": (
+        "prefix", "mixed_depth", "headline", "grouped_passes_per_tick_lcp",
+    ),
+    "prefix_mixed_fused": (
+        "prefix", "mixed_depth", "headline", "fused_over_two_call_speedup",
+    ),
+}
+
+
+def _lookup(doc: dict, path):
+    cur = doc
+    for key in path:
+        if not isinstance(cur, dict) or key not in cur:
+            return None
+        cur = cur[key]
+    return float(cur) if isinstance(cur, (int, float)) else None
+
+
+def check(current: dict, baseline: dict, threshold: float = 0.15,
+          scale: float = 1.0):
+    """Returns (rows, failures): one row per gated metric with the
+    comparison verdict. ``scale`` multiplies the current value (the
+    regression-injection knob)."""
+    rows, failures = [], []
+    for suite, path in METRICS.items():
+        base = _lookup(baseline, path)
+        cur = _lookup(current, path)
+        if cur is not None:
+            cur *= scale
+        if base is None:
+            rows.append((suite, base, cur, None, "skip (no baseline)"))
+            continue
+        if cur is None:
+            rows.append((suite, base, cur, None, "FAIL (metric missing)"))
+            failures.append(suite)
+            continue
+        ratio = cur / base if base else float("inf")
+        if base > 0 and ratio < 1.0 - threshold:
+            rows.append((suite, base, cur, ratio, "FAIL (regression)"))
+            failures.append(suite)
+        else:
+            rows.append((suite, base, cur, ratio, "ok"))
+    return rows, failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default="BENCH_decode_step.json")
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--threshold", type=float, default=0.15)
+    ap.add_argument(
+        "--inject-regression", type=float, default=1.0,
+        help="scale current metrics by this factor (gate self-test)",
+    )
+    args = ap.parse_args()
+
+    cur_path, base_path = Path(args.current), Path(args.baseline)
+    if not cur_path.exists():
+        print(f"FAIL: current artifact {cur_path} not found — did the "
+              "benchmarks run?")
+        return 1
+    if not base_path.exists():
+        print(f"FAIL: committed baseline {base_path} not found")
+        return 1
+    current = json.loads(cur_path.read_text())
+    baseline = json.loads(base_path.read_text())
+    rows, failures = check(
+        current, baseline, args.threshold, args.inject_regression
+    )
+
+    w = max(len(s) for s in METRICS)
+    print(f"{'suite':<{w}}  {'baseline':>10}  {'current':>10}  "
+          f"{'ratio':>7}  verdict")
+    for suite, base, cur, ratio, verdict in rows:
+        fb = f"{base:.4g}" if base is not None else "-"
+        fc = f"{cur:.4g}" if cur is not None else "-"
+        fr = f"{ratio:.3f}" if ratio is not None else "-"
+        print(f"{suite:<{w}}  {fb:>10}  {fc:>10}  {fr:>7}  {verdict}")
+    if failures:
+        print(f"\nperf gate FAILED (> {args.threshold:.0%} regression): "
+              + ", ".join(failures))
+        return 1
+    print(f"\nperf gate passed (threshold {args.threshold:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,9 +20,8 @@ compares its outputs against the paper's measured speedups.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence
+from typing import Sequence
 
-import numpy as np
 
 from repro.core.leantile import fixed_split_factor
 

@@ -11,7 +11,15 @@ identical request stream:
                      alias the cached pages (unshared schedule, bit-
                      identical decode);
   * ``cascade``    — radix cache + cascade decode: one grouped stream-K
-                     pass over the shared prefix pages per tick.
+                     pass over the shared prefix pages per tick, fused
+                     with the suffix pass and the merge into a single
+                     kernel.
+
+A second, ``mixed_depth`` scenario stresses cascade v2's LCP grouping:
+requests matching 1, 3, and 5 pages of ONE cached chain. The v1
+identical-run grouping finds nothing to group there; LCP grouping forms
+the trie passes. Reported: grouped-pass count, retrace count, and the
+fused-vs-two-call tick speedup.
 
 Reported per mode: decode ticks/sec and tokens/sec at steady state, mean
 TTFT, KV pages in use, prefill tokens actually computed, and the radix
@@ -32,9 +40,10 @@ PREFIX_PAGES = 8
 PAGE = 16
 TAIL = 16          # private tail length: keeps the whole measured window
                    # inside one suffix bucket (no mid-measurement retraces)
+CHAIN_PAGES = 5    # mixed-depth scenario: one cached chain of 5 pages
 
 
-def _build(cfg, params, *, prefix_cache, cascade):
+def _build(cfg, params, *, prefix_cache, cascade, **ekw):
     from repro.serving.engine import DecodeEngine
     from repro.serving.scheduler import Scheduler, SchedulerConfig
 
@@ -42,6 +51,7 @@ def _build(cfg, params, *, prefix_cache, cascade):
         cfg, params, max_batch=8, cache_len=192, attn_backend="lean",
         num_workers=8, paged=True, page_size=PAGE,
         prefix_cache=prefix_cache, cascade=cascade,
+        **({"cascade_stable_ticks": 1} if cascade else {}), **ekw,
     )
     sched = Scheduler(eng, SchedulerConfig(
         chunk_size=32, prefill_pack=4, token_budget=256,
@@ -49,25 +59,49 @@ def _build(cfg, params, *, prefix_cache, cascade):
     return eng, sched
 
 
-def _bucket_headroom(eng, prefix_len: int) -> int:
+def _bucket_headroom(eng, cascade: bool) -> int:
     """Decode ticks until some active slot's schedule bucket changes.
 
     A bucket crossing re-keys the (cascade) schedule signature and costs
     one XLA retrace — microseconds of schedule work on hardware, ~seconds
     under CPU interpret — so the measured window must stay inside one
     bucket on every slot to report kernel throughput, not compile time.
-    The cascade path buckets the *suffix* (ctx - prefix), the plain paths
-    the whole context (``prefix_len == 0``).
+    The cascade path buckets each slot's *suffix* (ctx minus its shared
+    full pages), the plain paths the whole context.
     """
     from repro.core.leantile import bucket_length
 
+    # the engine buckets each slot's suffix by its *kept-pass* coverage
+    # (seq_prefix_len of the tick's binding), which can be shorter than
+    # the slot's full shared run — e.g. a 5-page match whose deeper trie
+    # level collapsed to a singleton groups (and shifts) at 3 pages
+    bind = eng._casc_binding if cascade else None
     left = []
     for s in range(eng.max_batch):
         if eng.slot_req[s] is None:
             continue
-        n = int(eng.ctx_lens[s]) + 1 - prefix_len
+        plen = int(bind.seq_prefix_len[s]) if bind is not None else 0
+        n = int(eng.ctx_lens[s]) + 1 - plen
         left.append(bucket_length(n, eng.tile) - n)
     return min(left, default=1 << 30)
+
+
+def _measure_decode(eng, n_ticks: int, cascade: bool):
+    """Warm past bucket crossings + trace, then time ``n_ticks`` decode
+    ticks; returns the sorted per-tick wall times."""
+    guard = 0
+    while _bucket_headroom(eng, cascade) < n_ticks + 2 and guard < 64:
+        eng.decode_tick()
+        guard += 1
+    for _ in range(2):
+        eng.decode_tick()
+    ticks = []
+    for _ in range(n_ticks):
+        t0 = time.perf_counter()
+        eng.decode_tick()
+        ticks.append(time.perf_counter() - t0)
+    ticks.sort()
+    return ticks
 
 
 def _run_mode(cfg, params, prompts, shared, *, prefix_cache, cascade,
@@ -79,28 +113,14 @@ def _run_mode(cfg, params, prompts, shared, *, prefix_cache, cascade,
     if prefix_cache:
         # seed the radix cache with one donor request (the "first user" —
         # its prefill is the one copy of the shared prompt anyone pays for)
-        donor = sched.submit(np.concatenate([shared, [1]]), 1)
+        donor = sched.submit(np.concatenate([shared, [1]]), 1)  # noqa: F841
         sched.run_to_completion(max_steps=100)
     handles = [sched.submit(p, max_new_tokens=10_000) for p in prompts]
     while any(h.state.value != "decoding" for h in handles):
         sched.step()
     ttfts = [h.first_token_time - h.arrival_time for h in handles]
     pages_in_use = eng.pool.num_allocated
-    # advance past any imminent bucket crossing, then warm the trace, so
-    # the timed window is retrace-free (steady-state kernel throughput)
-    guard = 0
-    plen = len(shared) if cascade else 0
-    while _bucket_headroom(eng, plen) < n_ticks + 2 and guard < 64:
-        eng.decode_tick()
-        guard += 1
-    for _ in range(2):
-        eng.decode_tick()
-    ticks = []
-    for _ in range(n_ticks):
-        t0 = time.perf_counter()
-        eng.decode_tick()
-        ticks.append(time.perf_counter() - t0)
-    ticks.sort()
+    ticks = _measure_decode(eng, n_ticks, cascade)
     # best-observed per-tick: the classic noise-robust estimator — host
     # load spikes and allocator hiccups only ever ADD time
     dt = ticks[0]
@@ -118,10 +138,105 @@ def _run_mode(cfg, params, prompts, shared, *, prefix_cache, cascade,
         "prefill_tokens_computed": int(eng.stats.prefill_tokens),
         "prefix_matched_tokens": int(eng.stats.prefix_matched_tokens),
         "cascade_ticks": int(eng.stats.cascade_ticks),
+        "cascade_fused_ticks": int(eng.stats.cascade_fused_ticks),
         "cow_copies": int(eng.stats.cow_copies),
         "prefix_cache": dict(eng.stats.prefix_cache),
         "pages_saved": int(eng.pool.pages_saved),
     }
+
+
+def _run_mixed_mode(cfg, params, prompts, chain, *, grouping, fused,
+                    n_ticks):
+    """One mixed-depth engine run: seed the chain, admit the 1/3/5-page
+    matchers, measure steady-state decode + cascade grouping counters."""
+    import numpy as np
+
+    eng, sched = _build(cfg, params, prefix_cache=True, cascade=True,
+                        cascade_grouping=grouping, cascade_fused=fused)
+    donor = sched.submit(np.concatenate([chain, [1]]), 1)  # noqa: F841
+    sched.run_to_completion(max_steps=100)
+    handles = [sched.submit(p, max_new_tokens=10_000) for p in prompts]
+    while any(h.state.value != "decoding" for h in handles):
+        sched.step()
+    ticks = _measure_decode(eng, n_ticks, cascade=True)
+    eng.pool.check()
+    eng.prefix_cache.check()
+    s = eng.stats
+    return {
+        "ticks_per_sec": 1.0 / ticks[0],
+        "tick_ms_min": ticks[0] * 1e3,
+        "tick_ms_median": ticks[len(ticks) // 2] * 1e3,
+        "cascade_ticks": int(s.cascade_ticks),
+        "cascade_fused_ticks": int(s.cascade_fused_ticks),
+        "grouped_passes_total": int(s.cascade_grouped_passes),
+        "grouped_passes_per_tick": (
+            s.cascade_grouped_passes / s.cascade_ticks
+            if s.cascade_ticks else 0.0
+        ),
+        "grouped_slots_per_tick": (
+            s.cascade_grouped_slots / s.cascade_ticks
+            if s.cascade_ticks else 0.0
+        ),
+        "levels_max": int(s.cascade_levels_max),
+        "retraces": int(s.cascade_retraces),
+        "stability_skips": int(s.cascade_stability_skips),
+        "last_grouping": dict(s.cascade_last),
+    }
+
+
+def run_mixed_depth(cfg, params, n_ticks: int) -> dict:
+    """Mixed-depth LCP scenario: requests matching 1, 3, and 5 pages of
+    one cached chain. Compares LCP vs identical-run grouping (grouped
+    passes, retraces) and fused vs two-call cascade execution (tick
+    speedup)."""
+    import numpy as np
+
+    rng = np.random.default_rng(2)
+    chain = rng.integers(0, cfg.vocab_size, CHAIN_PAGES * PAGE)
+    prompts = [
+        np.concatenate([chain[: d * PAGE],
+                        rng.integers(0, cfg.vocab_size, TAIL)])
+        for d in (1, 3, 5)
+    ]
+    section = {
+        "workload": {
+            "chain_pages": CHAIN_PAGES,
+            "match_depths_pages": [1, 3, 5],
+            "private_tail_tokens": TAIL,
+            "page_size": PAGE,
+            "ticks": n_ticks,
+        },
+        "lcp": _run_mixed_mode(
+            cfg, params, prompts, chain, grouping="lcp", fused=True,
+            n_ticks=n_ticks,
+        ),
+        "identical": _run_mixed_mode(
+            cfg, params, prompts, chain, grouping="identical", fused=True,
+            n_ticks=n_ticks,
+        ),
+        "lcp_two_call": _run_mixed_mode(
+            cfg, params, prompts, chain, grouping="lcp", fused=False,
+            n_ticks=n_ticks,
+        ),
+    }
+    lcp, ident, two = (
+        section["lcp"], section["identical"], section["lcp_two_call"]
+    )
+    section["headline"] = {
+        # the acceptance claim: LCP groups mixed-depth matches the
+        # identical-run grouping cannot see at all
+        "grouped_passes_per_tick_lcp": lcp["grouped_passes_per_tick"],
+        "grouped_passes_per_tick_identical":
+            ident["grouped_passes_per_tick"],
+        "lcp_beats_identical_grouping":
+            lcp["grouped_passes_per_tick"]
+            > ident["grouped_passes_per_tick"],
+        "retraces_lcp": lcp["retraces"],
+        "fused_over_two_call_speedup":
+            lcp["ticks_per_sec"] / two["ticks_per_sec"],
+        "multi_level_engaged": lcp["levels_max"] >= 2,
+    }
+    return section
 
 
 def run_prefix(n_ticks: int = 12, out_path: str = "BENCH_decode_step.json",
@@ -178,6 +293,7 @@ def run_prefix(n_ticks: int = 12, out_path: str = "BENCH_decode_step.json",
             base["prefill_tokens_computed"]
             - pref["prefill_tokens_computed"],
     }
+    section["mixed_depth"] = run_mixed_depth(cfg, params, n_ticks)
 
     # merge into the shared benchmark artifact
     out = Path(out_path)
@@ -187,6 +303,7 @@ def run_prefix(n_ticks: int = 12, out_path: str = "BENCH_decode_step.json",
 
     if rows is not None:
         h = section["headline"]
+        hm = section["mixed_depth"]["headline"]
         rows.append(("prefix_decode_speedup_cascade", 0.0,
                      h["decode_speedup_cascade"]))
         rows.append(("prefix_decode_speedup_aliased", 0.0,
@@ -195,6 +312,10 @@ def run_prefix(n_ticks: int = 12, out_path: str = "BENCH_decode_step.json",
         rows.append(("prefix_kv_pages_saved", 0.0,
                      float(base["kv_pages_in_use"]
                            - pref["kv_pages_in_use"])))
+        rows.append(("prefix_mixed_lcp_passes_per_tick", 0.0,
+                     hm["grouped_passes_per_tick_lcp"]))
+        rows.append(("prefix_mixed_fused_speedup", 0.0,
+                     hm["fused_over_two_call_speedup"]))
     return section
 
 
@@ -210,6 +331,7 @@ def main():
     s = run_prefix(args.ticks, args.out)
     print(json.dumps(s, indent=1))
     h = s["headline"]
+    hm = s["mixed_depth"]["headline"]
     print(
         f"\nKV pages {s['prefix']['kv_pages_in_use']} (shared) vs "
         f"{s['baseline']['kv_pages_in_use']} (baseline); TTFT "
@@ -217,6 +339,13 @@ def main():
         f"{h['decode_speedup_cascade']:.2f}x (cascade) / "
         f"{h['decode_speedup_prefix']:.2f}x (aliased) vs no sharing; "
         f"{h['prefill_tokens_skipped']} prefill tokens skipped"
+    )
+    print(
+        f"mixed-depth 1/3/5: LCP {hm['grouped_passes_per_tick_lcp']:.1f} "
+        f"grouped passes/tick vs identical "
+        f"{hm['grouped_passes_per_tick_identical']:.1f}; "
+        f"{hm['retraces_lcp']} retraces; fused vs two-call "
+        f"{hm['fused_over_two_call_speedup']:.2f}x"
     )
 
 

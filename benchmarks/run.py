@@ -9,7 +9,6 @@ Prints ``name,us_per_call,derived`` CSV. "derived" is the figure's metric
 from __future__ import annotations
 
 import argparse
-import sys
 
 
 def main() -> None:

@@ -19,7 +19,6 @@ targets).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax
@@ -30,7 +29,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from .merge import AttnPartial
-from .attention import chunk_partial, NEG_INF
+from .attention import chunk_partial
 
 
 def lean_merge_collective(part: AttnPartial, axis_name: str) -> jax.Array:

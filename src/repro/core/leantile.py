@@ -32,12 +32,14 @@ from typing import Optional, Sequence, Tuple
 import numpy as np
 
 __all__ = [
+    "CascadeBinding",
     "CascadeSchedule",
     "LeanSchedule",
     "ScheduleCache",
     "ScheduleCacheStats",
     "bucket_ctx_lens",
     "bucket_length",
+    "cascade_fused_descriptors",
     "make_schedule",
     "make_cascade_schedule",
     "make_chunk_schedule",
@@ -384,40 +386,41 @@ def make_chunk_schedule(
 # ----------------------------------------------------------------- cascade
 @dataclass(frozen=True, eq=False)
 class CascadeSchedule:
-    """Prefix-grouped (cascade) stream-K schedule for shared-prompt decode.
+    """Prefix-grouped (cascade) stream-K schedule for shared-prefix decode.
 
-    Sequences sharing a page-aligned prompt prefix form a *group*; the
-    cascade splits their attention into two ordinary stream-K phases:
+    Sequences sharing page-aligned prompt-prefix runs form *grouped
+    passes* — one pass per node of the (compressed) radix trie over the
+    slots' shared page paths. A pass covers a contiguous page range
+    ``[page_start, page_start + pages)`` of its members' tables, so nested
+    trie levels simply stack passes (a slot may appear in several). The
+    cascade splits attention into two ordinary stream-K phases:
 
-      * **prefix phase** — one segment per (group, kv_head) whose query
+      * **prefix phase** — one segment per (pass, kv_head) whose query
         block stacks every member's query rows (``group_size * g`` rows,
-        padded to the largest group), walking the group's *shared* prefix
-        pages exactly once per group instead of once per member;
-      * **suffix phase** — the normal per-sequence decode over each
-        member's private tail pages (table shifted past the prefix).
+        padded to the largest pass), walking the pass's shared pages
+        exactly once instead of once per member;
+      * **suffix phase** — the normal per-sequence decode over each slot's
+        private tail pages (table shifted past its deepest coverage).
 
-    Both phases are plain :class:`LeanSchedule` instances, so they reuse
-    the paged kernels untouched; the merge phase (``segment_merge``)
-    reduces each sequence's prefix piece rows and suffix pieces into its
-    final output. Associativity of the softmax re-scaling operator
-    (paper §IV-A) is exactly what licenses this regrouping.
+    Both phases are plain :class:`LeanSchedule` instances; the merge
+    reduces each sequence's expanded prefix piece rows and suffix pieces
+    with the associative softmax re-scaling operator (paper §IV-A).
 
-    Hashes/compares by content (like :class:`LeanSchedule`), so it is a
-    valid ``jax.jit`` static argument.
+    The schedule is **membership-free**: it carries only the phase
+    geometry (bucketed pass/suffix walks in canonical order), and hashes
+    by that content, so it is a valid ``jax.jit`` static argument that is
+    *shared* by every grouping with equivalent geometry. Which slots sit
+    in which pass — and which physical pages they walk — rides alongside
+    as a :class:`CascadeBinding` of runtime arrays.
     """
 
     batch: int                 # B sequences
     num_kv_heads: int          # H_kv
-    num_groups: int            # NG (every sequence is in exactly one group)
-    group_size: int            # nmax: members per group, padded
+    num_groups: int            # NP grouped passes (trie nodes), >= 1
+    group_size: int            # nmax: members per pass, padded
     tile_size: int
-    prefix_sched: LeanSchedule  # NG * H_kv segments, nmax * g query rows
+    prefix_sched: LeanSchedule  # NP * H_kv segments, nmax * g query rows
     suffix_sched: LeanSchedule  # B * H_kv segments, g query rows
-    members: np.ndarray        # (NG, nmax) int32 batch ids, -1 padding
-    seq_group: np.ndarray      # (B,) int32 group of each sequence
-    prefix_pages: np.ndarray   # (NG,) int32 aligned shared pages per group
-    prefix_lens: np.ndarray    # (NG,) int32 == prefix_pages * tile_size
-    seq_prefix_len: np.ndarray  # (B,) int32 prefix tokens of each sequence
 
     @property
     def signature(self) -> tuple:
@@ -427,7 +430,6 @@ class CascadeSchedule:
                 self.batch, self.num_kv_heads, self.num_groups,
                 self.group_size, self.tile_size,
                 self.prefix_sched.signature, self.suffix_sched.signature,
-                self.members.tobytes(), self.prefix_pages.tobytes(),
             )
             object.__setattr__(self, "_sig", sig)
         return sig
@@ -446,33 +448,187 @@ class CascadeSchedule:
             return NotImplemented
         return self.signature == other.signature
 
-    def merge_piece_seg(self) -> np.ndarray:
-        """Per-piece segment ids for the cascade merge, over the combined
-        piece axis ``[expanded prefix pieces (member-major), suffix
-        pieces]``.
+    # ------------------------------------------------- fused-kernel layout
+    @property
+    def num_pieces_total(self) -> int:
+        """Combined piece axis: prefix pieces then suffix pieces (the
+        fused kernel's VMEM partial ring is this + 1 garbage row)."""
+        return self.prefix_sched.num_pieces + self.suffix_sched.num_pieces
 
-        A prefix piece of segment ``(group j, head h)`` carries every
-        member's partial rows; expanded entry ``(i, p)`` (member rank i,
-        prefix piece p) targets sequence segment ``members[j, i] * H_kv +
-        h`` — padding members target the garbage segment ``B * H_kv`` and
-        are dropped by ``segment_merge``. Suffix pieces already target
-        per-sequence segments. Memoized."""
-        ids = self.__dict__.get("_merge_ids")
-        if ids is None:
-            H = self.num_kv_heads
+    @property
+    def fused_merge_iters(self) -> int:
+        """Merge iterations of the fused grid: every prefix piece expands
+        to ``group_size`` member contributions (padding ranks become
+        garbage-target iterations) plus one per suffix piece."""
+        return (
+            self.group_size * self.prefix_sched.num_pieces
+            + self.suffix_sched.num_pieces
+        )
+
+    @property
+    def fused_grid_iters(self) -> int:
+        return (
+            self.prefix_sched.grid_iters
+            + self.suffix_sched.grid_iters
+            + self.fused_merge_iters
+        )
+
+    def fused_partial_descriptors(self) -> np.ndarray:
+        """Static partial-phase section of the fused cascade descriptors:
+        prefix then suffix packed descriptors, renumbered into the
+        combined segment space (prefix segments first) and combined piece
+        space (padding rows point at the combined garbage piece).
+        Memoized."""
+        desc = self.__dict__.get("_fused_static")
+        if desc is None:
+            dp = self.prefix_sched.packed_descriptors().copy()
+            ds = self.suffix_sched.packed_descriptors().copy()
             Pp = self.prefix_sched.num_pieces
-            pseg = self.prefix_sched.piece_seg.astype(np.int64)   # (Pp,)
-            grp = pseg // H
-            head = pseg % H
-            mem = self.members[grp]                               # (Pp, nmax)
-            tgt = np.where(
-                mem >= 0, mem * H + head[:, None], self.batch * H
-            )                                                     # (Pp, nmax)
-            ids = np.concatenate(
-                [tgt.T.reshape(-1), self.suffix_sched.piece_seg]
-            ).astype(np.int32)
-            object.__setattr__(self, "_merge_ids", np.ascontiguousarray(ids))
-        return ids
+            Ptot = self.num_pieces_total
+            nph = self.num_groups * self.num_kv_heads
+            vp = dp[6] == 1
+            dp[0] = np.where(vp, dp[0], 0)
+            dp[2] = np.where(vp, dp[2], Ptot)
+            vs = ds[6] == 1
+            ds[0] = np.where(vs, ds[0] + nph, 0)
+            ds[2] = np.where(vs, ds[2] + Pp, Ptot)
+            desc = np.ascontiguousarray(
+                np.concatenate([dp, ds], axis=1).astype(np.int32)
+            )
+            object.__setattr__(self, "_fused_static", desc)
+        return desc
+
+
+@dataclass(frozen=True, eq=False)
+class CascadeBinding:
+    """Per-tick runtime companion of a :class:`CascadeSchedule`: which
+    slots sit in which grouped pass and how deep each pass/slot's shared
+    coverage runs. Host-side numpy, rebuilt cheaply every lookup — these
+    arrays enter the jitted step as *runtime* operands, never as trace
+    keys, which is what lets equivalent groupings share one trace."""
+
+    members: np.ndarray          # (NP, nmax) int32 slot ids, -1 padding
+    page_start: np.ndarray       # (NP,) int32 first shared page of the pass
+    prefix_pages: np.ndarray     # (NP,) int32 clamped shared pages walked
+    prefix_lens: np.ndarray      # (NP,) int32 == prefix_pages * tile_size
+    seq_prefix_pages: np.ndarray  # (B,) int32 deepest contiguous coverage
+    seq_prefix_len: np.ndarray   # (B,) int32 == seq_prefix_pages * tile
+    num_levels: int              # max passes stacked on any one slot
+
+
+def _resolve_cascade_structure(
+    ctx: Sequence[int],
+    passes: Sequence[Tuple[Sequence[int], int, int]],
+    tile_size: int,
+    max_len: Optional[int],
+    bucket: bool,
+):
+    """Clamp, validate, and canonically order the grouped passes.
+
+    ``passes`` entries are ``(members, page_start, page_count)``. A pass
+    survives only if it has >= 2 members (a collapsed group is vanilla
+    decode), its start matches every member's current coverage (nesting
+    stays contiguous from page 0), and its clamped count — every member
+    must keep >= 1 suffix token past its deepest coverage — stays
+    positive. Survivors are ordered by *geometry* (bucketed walk, size)
+    with membership only as a deterministic tie-break, so two groupings
+    with equal geometry resolve to identical schedule inputs.
+
+    Returns ``(kept, cov_pages, pref_walk, suf_walk)``.
+    """
+    B = len(ctx)
+    norm = []
+    for mem, start, count in passes:
+        m = tuple(sorted({int(b) for b in mem}))
+        if any(b < 0 or b >= B for b in m):
+            raise ValueError(f"pass member out of range(batch={B}): {m}")
+        norm.append((m, int(start), int(count)))
+    # shallow passes first; bigger groups win ties at equal depth
+    norm.sort(key=lambda p: (p[1], -len(p[0]), p[0]))
+    cov = np.zeros(B, dtype=np.int64)
+    kept = []
+    for m, start, count in norm:
+        if len(m) < 2 or count <= 0:
+            continue
+        if any(cov[b] != start for b in m):
+            continue            # broken nesting (e.g. a shallower clamp)
+        cap = min((int(ctx[b]) - 1) // tile_size for b in m) - start
+        c = min(count, cap)
+        if c <= 0:
+            continue
+        kept.append((m, start, c))
+        for b in m:
+            cov[b] = start + c
+    if not kept:
+        # degenerate geometry: one empty dummy pass (a single fully-masked
+        # tile) keeps the phase shapes well-formed
+        kept = [((), 0, 0)]
+
+    def walk(c: int) -> int:
+        n = max(c * tile_size, 1)
+        return bucket_length(n, tile_size) if bucket else n
+
+    kept.sort(key=lambda p: (walk(p[2]), len(p[0]), p[1], p[0]))
+    pref_walk = [walk(c) for _, _, c in kept]
+    suf = [int(ctx[b]) - int(cov[b]) * tile_size for b in range(B)]
+    if bucket:
+        suf_walk = [
+            bucket_length(
+                n, tile_size,
+                None if max_len is None
+                else max_len - int(cov[b]) * tile_size,
+            )
+            for b, n in enumerate(suf)
+        ]
+    else:
+        suf_walk = suf
+    return kept, cov, pref_walk, suf_walk
+
+
+def _binding_from_structure(kept, cov, batch: int, tile_size: int) -> CascadeBinding:
+    NP = len(kept)
+    nmax = max([len(m) for m, _, _ in kept if m] or [1])
+    members = np.full((NP, nmax), -1, dtype=np.int32)
+    page_start = np.zeros(NP, dtype=np.int64)
+    counts = np.zeros(NP, dtype=np.int64)
+    levels = np.zeros(batch, dtype=np.int64)
+    for j, (m, s, c) in enumerate(kept):
+        members[j, : len(m)] = np.asarray(m, dtype=np.int32)
+        page_start[j] = s
+        counts[j] = c
+        for b in m:
+            levels[b] += 1
+    return CascadeBinding(
+        members=members,
+        page_start=page_start.astype(np.int32),
+        prefix_pages=counts.astype(np.int32),
+        prefix_lens=(counts * tile_size).astype(np.int32),
+        seq_prefix_pages=np.asarray(cov, dtype=np.int32),
+        seq_prefix_len=(np.asarray(cov) * tile_size).astype(np.int32),
+        num_levels=int(levels.max(initial=0)),
+    )
+
+
+def _cascade_schedule_from_walks(
+    pref_walk, suf_walk, batch: int, num_passes: int, group_size: int,
+    num_kv_heads: int, tile_size: int, num_workers: int,
+) -> CascadeSchedule:
+    """The one place a CascadeSchedule is assembled from resolved walks —
+    shared by :func:`make_cascade_schedule` and the cache's miss path so
+    cached and uncached schedules can never drift apart."""
+    return CascadeSchedule(
+        batch=batch,
+        num_kv_heads=int(num_kv_heads),
+        num_groups=num_passes,
+        group_size=int(group_size),
+        tile_size=int(tile_size),
+        prefix_sched=make_schedule(
+            pref_walk, num_kv_heads, tile_size, num_workers
+        ),
+        suffix_sched=make_schedule(
+            suf_walk, num_kv_heads, tile_size, num_workers
+        ),
+    )
 
 
 def make_cascade_schedule(
@@ -483,82 +639,117 @@ def make_cascade_schedule(
     tile_size: int,
     num_workers: int,
     *,
+    page_starts: Optional[Sequence[int]] = None,
     max_len: Optional[int] = None,
     bucket: bool = True,
-) -> CascadeSchedule:
-    """Build the cascade (prefix-grouped) schedule.
+) -> Tuple[CascadeSchedule, CascadeBinding]:
+    """Build the cascade (prefix-grouped) schedule and its runtime binding.
 
     Args:
       ctx_lens: full visible context per sequence (prefix + private tail).
-      groups: partition of ``range(len(ctx_lens))`` into shared-prefix
-        groups (singletons allowed — they simply get an empty prefix
-        phase segment).
-      prefix_pages: shared *page-aligned* prefix pages per group; clamped
-        so every member keeps at least one private suffix token (the
-        decode step always writes the current token past the prefix).
+      groups: grouped passes over ``range(len(ctx_lens))``. Unlike the
+        original single-level form this need NOT partition the batch: a
+        slot may appear in several nested passes (one per radix-trie
+        level) or in none (pure-suffix decode). Single-member passes are
+        dropped — a collapsed group IS vanilla decode.
+      prefix_pages: page count of each pass; clamped so every member
+        keeps >= 1 suffix token past its deepest coverage.
+      page_starts: first shared page of each pass (default 0 everywhere —
+        the single-level form). Nested passes must tile each member's
+        coverage contiguously from page 0; passes breaking that (e.g.
+        after a clamp upstream) are dropped.
       max_len: per-slot KV capacity in tokens (caps suffix buckets so the
         shifted suffix table walk never leaves the backing table row).
       bucket: round phase lengths to the canonical bucket lattice
         (:func:`bucket_length`) — runtime masking keeps results exact, and
         schedule signatures stay stable as sequences grow.
     """
-    ctx = np.asarray(list(ctx_lens), dtype=np.int64)
-    B = len(ctx)
-    NG = len(groups)
-    if NG != len(prefix_pages):
+    ctx = [int(n) for n in ctx_lens]
+    if any(n <= 0 for n in ctx):
+        raise ValueError("context lengths must be positive")
+    if len(groups) != len(prefix_pages):
         raise ValueError("one prefix_pages entry per group required")
-    seen = sorted(b for g in groups for b in g)
-    if seen != list(range(B)):
-        raise ValueError("groups must partition range(batch) exactly")
-    nmax = max(len(g) for g in groups)
-    members = np.full((NG, nmax), -1, dtype=np.int32)
-    seq_group = np.zeros(B, dtype=np.int32)
-    pp = np.zeros(NG, dtype=np.int64)
-    for j, g in enumerate(groups):
-        members[j, : len(g)] = np.asarray(sorted(g), dtype=np.int32)
-        for b in g:
-            seq_group[b] = j
-        # every member must keep >= 1 suffix token past the shared prefix
-        cap = (int(ctx[list(g)].min()) - 1) // tile_size
-        pp[j] = min(int(prefix_pages[j]), max(0, cap))
-    prefix_lens = pp * tile_size
-    seq_prefix = prefix_lens[seq_group]
-    suffix_lens = ctx - seq_prefix                       # all >= 1
+    starts = [0] * len(groups) if page_starts is None else list(page_starts)
+    if len(starts) != len(groups):
+        raise ValueError("one page_starts entry per group required")
+    kept, cov, pref_walk, suf_walk = _resolve_cascade_structure(
+        ctx, list(zip(groups, starts, prefix_pages)), tile_size,
+        max_len, bucket,
+    )
+    binding = _binding_from_structure(kept, cov, len(ctx), tile_size)
+    sched = _cascade_schedule_from_walks(
+        pref_walk, suf_walk, len(ctx), len(kept),
+        binding.members.shape[1], num_kv_heads, tile_size, num_workers,
+    )
+    return sched, binding
 
-    # schedule walks: prefix lengths are page multiples already; an empty
-    # prefix still contributes one fully-masked tile (runtime ctx 0) so the
-    # phase geometry stays uniform across groups
-    pref_walk = np.maximum(prefix_lens, 1)
-    suf_walk = suffix_lens
-    if bucket:
-        pref_walk = [bucket_length(int(n), tile_size) for n in pref_walk]
-        suf_cap = None
-        if max_len is not None:
-            # a sequence's suffix table row is its slot row shifted by the
-            # prefix pages, so its usable width shrinks by exactly that much
-            suf_cap = np.asarray(max_len, dtype=np.int64) - seq_prefix
-        suf_walk = [
-            bucket_length(
-                int(n), tile_size,
-                None if suf_cap is None else int(suf_cap[b]),
-            )
-            for b, n in enumerate(suf_walk)
-        ]
-    prefix_sched = make_schedule(pref_walk, num_kv_heads, tile_size, num_workers)
-    suffix_sched = make_schedule(suf_walk, num_kv_heads, tile_size, num_workers)
-    return CascadeSchedule(
-        batch=B,
-        num_kv_heads=int(num_kv_heads),
-        num_groups=NG,
-        group_size=nmax,
-        tile_size=int(tile_size),
-        prefix_sched=prefix_sched,
-        suffix_sched=suffix_sched,
-        members=members,
-        seq_group=seq_group,
-        prefix_pages=pp.astype(np.int32),
-        prefix_lens=prefix_lens.astype(np.int32),
-        seq_prefix_len=seq_prefix.astype(np.int32),
+
+def cascade_fused_descriptors(
+    csched: CascadeSchedule, binding: CascadeBinding
+) -> np.ndarray:
+    """Full ``(7, N)`` descriptor array for the fused cascade kernel.
+
+    ``N = fused_grid_iters``: the static partial-phase section
+    (:meth:`CascadeSchedule.fused_partial_descriptors`) followed by the
+    merge section built from this tick's *binding*. Merge iteration rows:
+    SEG = target output segment (``b * H_kv + h``; the garbage row
+    ``B * H_kv`` for padding ranks), TILE = member rank (the kernel reads
+    partial rows ``[rank * g, (rank + 1) * g)``), PIECE = combined piece
+    row, FIRST/LAST flag each target's contribution run, VALID = 2.
+
+    Per-target order is deterministic — shallow pass first, suffix last —
+    so equal bindings produce identical merge fp sequences (the
+    shared-vs-duplicated-pages bit-identity contract). The array is a
+    *runtime* operand of the kernel: its values change freely tick to
+    tick, only its (schedule-determined) shape is static.
+    """
+    H = csched.num_kv_heads
+    B = csched.batch
+    S = B * H
+    Pp = csched.prefix_sched.num_pieces
+    Ptot = csched.num_pieces_total
+    M = csched.fused_merge_iters
+    pstarts, pcnts = csched.prefix_sched.piece_ranges()
+    sstarts, scnts = csched.suffix_sched.piece_ranges()
+    mem = binding.members
+    NP, nmax = mem.shape
+    # slot -> [(pass j, rank i)] ordered shallow-first
+    slot_passes: dict = {}
+    for j in range(NP):
+        for i in range(nmax):
+            b = int(mem[j, i])
+            if b >= 0:
+                slot_passes.setdefault(b, []).append((int(binding.page_start[j]), j, i))
+    merge = np.zeros((7, M), dtype=np.int32)
+    col = 0
+    for b in range(B):
+        ranks = sorted(slot_passes.get(b, []))
+        for h in range(H):
+            cols = []
+            for _, j, i in ranks:
+                sp = j * H + h
+                for p in range(int(pstarts[sp]), int(pstarts[sp] + pcnts[sp])):
+                    cols.append((p, i))
+            s = b * H + h
+            for p in range(int(sstarts[s]), int(sstarts[s] + scnts[s])):
+                cols.append((Pp + p, 0))
+            for k, (p, rank) in enumerate(cols):
+                merge[0, col] = s
+                merge[1, col] = rank
+                merge[2, col] = p
+                merge[3, col] = 1 if k == 0 else 0
+                merge[4, col] = 1 if k == len(cols) - 1 else 0
+                merge[6, col] = 2
+                col += 1
+    # padding-rank fills: self-contained garbage merges (write the garbage
+    # output row from the garbage partial row; sliced off by the caller)
+    merge[0, col:] = S
+    merge[2, col:] = Ptot
+    merge[3, col:] = 1
+    merge[4, col:] = 1
+    merge[6, col:] = 2
+    return np.ascontiguousarray(
+        np.concatenate([csched.fused_partial_descriptors(), merge], axis=1)
     )
 
 
@@ -696,62 +887,54 @@ class ScheduleCache:
         tile_size: int,
         num_workers: int,
         max_len: Optional[int] = None,
-    ) -> "CascadeSchedule":
-        """Memoized :func:`make_cascade_schedule`.
+        page_starts: Optional[Sequence[int]] = None,
+    ) -> Tuple["CascadeSchedule", "CascadeBinding"]:
+        """Memoized :func:`make_cascade_schedule` (the schedule half — the
+        binding is rebuilt every call, it is cheap host numpy).
 
-        The key buckets the *suffix* lengths (context minus each group's
-        shared prefix) — the components that actually change tick to tick —
-        so steady-state cascade decode hits one entry per grouping, exactly
-        like plain decode hits one entry per bucketed ragged shape.
+        The key is the *canonical geometry*: bucketed suffix lengths plus
+        the clamped passes' (bucketed walk, member count) multiset — NO
+        member ids. Two groupings that differ only in which slots sit
+        where (equivalent geometries) therefore share one schedule entry,
+        and — because every member-dependent value rides in the binding as
+        a runtime operand — one jit trace.
         """
         ctx = [int(n) for n in ctx_lens]
-        gkey = tuple(tuple(sorted(int(b) for b in g)) for g in groups)
-        pkey = tuple(int(p) for p in prefix_pages)
-        # suffix lengths only matter through their buckets; recompute them
-        # the same way make_cascade_schedule will (incl. the per-member
-        # prefix clamp) so equal-bucket ticks share one entry. The key
-        # carries the CLAMPED prefix pages — two calls whose requested
-        # prefixes clamp differently must not collide (and ones that clamp
-        # equal may share)
-        seq_pref = {}
-        pp_clamped = []
-        for g, p in zip(gkey, pkey):
-            cap = (min(ctx[b] for b in g) - 1) // tile_size
-            pp = min(p, max(0, cap))
-            pp_clamped.append(pp)
-            for b in g:
-                seq_pref[b] = pp * tile_size
-        skey = tuple(
-            bucket_length(
-                ctx[b] - seq_pref[b], tile_size,
-                None if max_len is None else max_len - seq_pref[b],
-            )
-            for b in range(len(ctx))
+        starts = [0] * len(groups) if page_starts is None else list(page_starts)
+        kept, cov, pref_walk, suf_walk = _resolve_cascade_structure(
+            ctx, list(zip(groups, starts, prefix_pages)), tile_size,
+            max_len, True,
         )
+        binding = _binding_from_structure(kept, cov, len(ctx), tile_size)
         key = (
-            "cascade", skey, gkey, tuple(pp_clamped), int(num_kv_heads),
-            int(tile_size), int(num_workers), max_len,
+            "cascade2", tuple(suf_walk),
+            tuple((w, len(m)) for w, (m, _, _) in zip(pref_walk, kept)),
+            int(binding.members.shape[1]), int(num_kv_heads),
+            int(tile_size), int(num_workers),
         )
         sched = self._entries.get(key)
         if sched is not None:
             self.stats.hits += 1
             self._entries.move_to_end(key)
-            return sched
+            return sched, binding
         self.stats.misses += 1
-        sched = make_cascade_schedule(
-            ctx, groups, prefix_pages, num_kv_heads, tile_size, num_workers,
-            max_len=max_len, bucket=True,
+        sched = _cascade_schedule_from_walks(
+            pref_walk, suf_walk, len(ctx), len(kept),
+            binding.members.shape[1], num_kv_heads, tile_size, num_workers,
         )
+        # pre-pack everything the kernels read so the miss pays all numpy
         sched.prefix_sched.packed_descriptors()
         sched.suffix_sched.packed_descriptors()
         sched.prefix_sched.iter_kv_meta(fused=False)
         sched.suffix_sched.iter_kv_meta(fused=False)
-        sched.merge_piece_seg()
+        sched.prefix_sched.piece_ranges()
+        sched.suffix_sched.piece_ranges()
+        sched.fused_partial_descriptors()
         self._entries[key] = sched
         if len(self._entries) > self.max_entries:
             self._entries.popitem(last=False)
             self.stats.evictions += 1
-        return sched
+        return sched, binding
 
     def clear(self) -> None:
         self._entries.clear()

@@ -20,15 +20,13 @@ the default dry-run matrix (DESIGN.md explains the DP-across-pods choice).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro import compat
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 def pipeline_forward(

@@ -15,10 +15,9 @@ standard MQA treatment).
 from __future__ import annotations
 
 import re
-from typing import Any, Optional
+from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models import ModelConfig

@@ -494,6 +494,203 @@ def lean_decode_paged_fused(
     )
 
 
+# ---------------------------------------------------------------- cascade
+# Fused cascade decode: prefix pass + suffix pass + segment merge in ONE
+# descriptor-driven flat grid. The combined grid runs the prefix phase's
+# partial iterations (stacked member queries, shared pages walked once per
+# grouped pass), then the suffix phase's (per-sequence private tails), then
+# the merge iterations — partials for BOTH phases stay in one VMEM scratch
+# ring and never round-trip HBM, exactly like ``lean_decode_fused``.
+#
+# Descriptor semantics are op-dependent (the array is built by
+# ``repro.core.leantile.cascade_fused_descriptors`` and arrives as a
+# RUNTIME operand — only its shape is schedule-static, so regroupings with
+# equal geometry replay one trace):
+#   OP_PARTIAL: SEG = combined q-stack segment (prefix segments first,
+#     suffix segments after), TILE = kv tile, PIECE = combined piece row;
+#   OP_MERGE:   SEG = target *output* segment (b * H_kv + h, garbage = S),
+#     TILE = member rank r — the iteration reduces partial rows
+#     [r*g, (r+1)*g) of PIECE into the target's (g, d) accumulator.
+
+
+def _lean_cascade_fused_kernel(
+    desc_ref,      # (7, N) scalar-prefetch descriptors (runtime values)
+    ctx_ref,       # (SEG_tot,) runtime lengths: pass lens ⊗ H_kv, suffix lens
+    route_ref,     # (N,) pool-row routing (consumed by the index maps)
+    q_ref,         # (1, qmax, d)   current segment's stacked query block
+    k_ref,         # (1, tile, d)
+    v_ref,         # (1, tile, d)
+    o_ref,         # (S + 1, g, d)  final outputs (+ garbage row), VMEM-resident
+    lse_ref,       # (S + 1, g)
+    acc_ref,       # VMEM (qmax, d) f32  partial-phase accumulators
+    m_acc_ref,     # VMEM (qmax, 1) f32
+    l_acc_ref,     # VMEM (qmax, 1) f32
+    g_acc_ref,     # VMEM (g, d) f32     merge-phase accumulators
+    g_m_ref,       # VMEM (g, 1) f32
+    g_l_ref,       # VMEM (g, 1) f32
+    po_ref,        # VMEM (P_tot + 1, qmax, d) f32  piece partials
+    pm_ref,        # VMEM (P_tot + 1, qmax) f32
+    pl_ref,        # VMEM (P_tot + 1, qmax) f32
+    *,
+    scale: float,
+    tile_size: int,
+    gq: int,
+):
+    i = pl.program_id(0)
+    op = desc_ref[DESC_VALID, i]
+    seg = desc_ref[DESC_SEG, i]
+    piece = desc_ref[DESC_PIECE, i]
+    first = desc_ref[DESC_FIRST, i]
+    last = desc_ref[DESC_LAST, i]
+
+    @pl.when(op == OP_PARTIAL)
+    def _partial():
+        @pl.when(first == 1)
+        def _reset():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            m_acc_ref[...] = jnp.full_like(m_acc_ref, NEG_INF)
+            l_acc_ref[...] = jnp.zeros_like(l_acc_ref)
+
+        vlen = jnp.clip(
+            ctx_ref[seg] - desc_ref[DESC_TILE, i] * tile_size, 0, tile_size
+        )
+        _online_softmax_tile(
+            q_ref, k_ref, v_ref, acc_ref, m_acc_ref, l_acc_ref, vlen, scale
+        )
+
+        @pl.when(last == 1)
+        def _flush():
+            po_ref[pl.ds(piece, 1)] = acc_ref[...][None]
+            pm_ref[pl.ds(piece, 1)] = m_acc_ref[..., 0][None]
+            pl_ref[pl.ds(piece, 1)] = l_acc_ref[..., 0][None]
+
+    @pl.when(op == OP_MERGE)
+    def _merge():
+        @pl.when(first == 1)
+        def _reset():
+            g_acc_ref[...] = jnp.zeros_like(g_acc_ref)
+            g_m_ref[...] = jnp.full_like(g_m_ref, NEG_INF)
+            g_l_ref[...] = jnp.zeros_like(g_l_ref)
+
+        off = desc_ref[DESC_TILE, i] * gq      # member rank -> row offset
+        o_row = po_ref[pl.ds(piece, 1)][0]     # (qmax, d)
+        m_row = pm_ref[pl.ds(piece, 1)][0]     # (qmax,)
+        l_row = pl_ref[pl.ds(piece, 1)][0]
+        o_piece = jax.lax.dynamic_slice_in_dim(o_row, off, gq, axis=0)
+        m_piece = jax.lax.dynamic_slice_in_dim(m_row, off, gq, axis=0)[:, None]
+        l_piece = jax.lax.dynamic_slice_in_dim(l_row, off, gq, axis=0)[:, None]
+        m_new = jnp.maximum(g_m_ref[...], m_piece)
+        a_old = jnp.exp(g_m_ref[...] - m_new)
+        a_new = jnp.exp(m_piece - m_new)
+        g_l_ref[...] = a_old * g_l_ref[...] + a_new * l_piece
+        g_acc_ref[...] = a_old * g_acc_ref[...] + a_new * o_piece
+        g_m_ref[...] = m_new
+
+        @pl.when(last == 1)
+        def _final():
+            o_ref[pl.ds(seg, 1)] = (g_acc_ref[...] / g_l_ref[...])[None]
+            lse_ref[pl.ds(seg, 1)] = (
+                g_m_ref[...] + jnp.log(g_l_ref[...])
+            )[None, :, 0]
+
+
+def cascade_fused_vmem_bytes(csched, gq: int, d: int) -> int:
+    """Rough f32 VMEM footprint of the fused cascade kernel's resident
+    state: the combined piece-partial ring, the whole-output block, both
+    accumulator sets, and a KV tile. Gates the fused path — schedules
+    above the budget fall back to the two-call cascade."""
+    qmax = csched.group_size * gq
+    Ptot = csched.num_pieces_total
+    S = csched.batch * csched.num_kv_heads
+    return 4 * (
+        (Ptot + 1) * qmax * (d + 2)
+        + (S + 1) * gq * (d + 1)
+        + qmax * (d + 2)
+        + gq * (d + 2)
+        + 2 * csched.tile_size * d
+        + qmax * d
+    )
+
+
+def lean_cascade_fused(
+    q_stack: jax.Array,        # (SEG_tot, qmax, d) prefix then suffix blocks
+    k_rows: jax.Array,         # (num_pages * H_kv, page_size, d) pool rows
+    v_rows: jax.Array,
+    ctx_all: jax.Array,        # (SEG_tot,) int32 runtime per-segment lengths
+    route: jax.Array,          # (N,) int32 pool row per grid iteration
+    desc: jax.Array,           # (7, N) int32 fused cascade descriptors
+    csched,
+    scale: float,
+    gq: int,
+    interpret: bool = False,
+):
+    """Fused cascade decode: ONE ``pallas_call`` for the grouped prefix
+    pass, the per-sequence suffix pass, AND the merge. Returns
+    ``(o (S, g, d) f32, lse (S, g) f32)`` with the garbage row sliced off.
+
+    All operands — including the descriptors — are runtime arrays; the
+    only static inputs are the schedule-derived shapes, so every grouping
+    with the same :class:`~repro.core.leantile.CascadeSchedule` geometry
+    replays this trace."""
+    SEG_tot, qmax, d = q_stack.shape
+    tile = csched.tile_size
+    N = csched.fused_grid_iters
+    Ptot = csched.num_pieces_total
+    S = csched.batch * csched.num_kv_heads
+
+    def q_map(i, desc, *_):
+        ok = desc[DESC_VALID, i] == OP_PARTIAL
+        return (jnp.where(ok, desc[DESC_SEG, i], 0), 0, 0)
+
+    def kv_map(i, desc, ctx, route):
+        return (route[i], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1, qmax, d), q_map),
+            pl.BlockSpec((1, tile, d), kv_map),
+            pl.BlockSpec((1, tile, d), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((S + 1, gq, d), lambda i, *_: (0, 0, 0)),
+            pl.BlockSpec((S + 1, gq), lambda i, *_: (0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((qmax, d), jnp.float32),
+            pltpu.VMEM((qmax, 1), jnp.float32),
+            pltpu.VMEM((qmax, 1), jnp.float32),
+            pltpu.VMEM((gq, d), jnp.float32),
+            pltpu.VMEM((gq, 1), jnp.float32),
+            pltpu.VMEM((gq, 1), jnp.float32),
+            pltpu.VMEM((Ptot + 1, qmax, d), jnp.float32),
+            pltpu.VMEM((Ptot + 1, qmax), jnp.float32),
+            pltpu.VMEM((Ptot + 1, qmax), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _lean_cascade_fused_kernel, scale=scale, tile_size=tile, gq=gq
+    )
+    out_shapes = [
+        jax.ShapeDtypeStruct((S + 1, gq, d), jnp.float32),
+        jax.ShapeDtypeStruct((S + 1, gq), jnp.float32),
+    ]
+    o, lse = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(
+        desc.astype(jnp.int32), ctx_all.astype(jnp.int32),
+        route.astype(jnp.int32), q_stack, k_rows, v_rows,
+    )
+    return o[:S], lse[:S]
+
+
 def _lean_merge_kernel(
     meta_ref,      # (2, S) scalar prefetch: piece start / piece count
     o_p_ref,       # (1, gq, d)  one piece's partial o (revisited per j)

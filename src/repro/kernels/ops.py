@@ -25,25 +25,28 @@ for schedules whose VMEM footprint exceeds the fused budget.
 """
 from __future__ import annotations
 
-import functools
 import warnings
-from typing import Optional, Sequence, Tuple, Union
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.leantile import (
+    CascadeBinding,
     CascadeSchedule,
     LeanSchedule,
     ScheduleCache,
+    cascade_fused_descriptors,
     make_cascade_schedule,
     make_schedule,
     default_tile_size,
 )
 from repro.core.merge import AttnPartial, finalize, merge_n, segment_merge
 from .lean_decode import (
+    cascade_fused_vmem_bytes,
     fused_vmem_bytes,
+    lean_cascade_fused,
     lean_decode_fused,
     lean_decode_paged_fused,
     lean_decode_paged_partials,
@@ -62,6 +65,7 @@ __all__ = [
     "lean_decode_cascade",
     "lean_decode_cascade_from_schedule",
     "cascade_tables",
+    "cascade_uses_fused",
     "lean_prefill_chunks",
     "flash_decode",
     "flash_prefill",
@@ -377,38 +381,47 @@ def lean_decode_paged(
     )
 
 
+def cascade_uses_fused(csched: CascadeSchedule, gq: int, d: int) -> bool:
+    """Whether the fused single-kernel cascade fits the VMEM budget (the
+    static fallback decision callers can query for stats/bench)."""
+    return cascade_fused_vmem_bytes(csched, gq, d) <= FUSED_VMEM_BUDGET
+
+
 def lean_decode_cascade_from_schedule(
     q: jax.Array,                  # (B, Hq, d)
     k_pool: jax.Array,             # (num_pages, Hkv, page_size, d)
     v_pool: jax.Array,
     seg_ctx_suffix: jax.Array,     # (B*Hkv,) int32 true suffix lengths
-    prefix_tbl: jax.Array,         # (NG, Wp) int32 shared prefix pages
+    prefix_lens: jax.Array,        # (NP,) int32 true pass lengths (tokens)
+    members: jax.Array,            # (NP, nmax) int32 slot ids, -1 padding
+    prefix_tbl: jax.Array,         # (NP, Wp) int32 shared pass pages
     suffix_tbl: jax.Array,         # (B, Ws) int32 private tails (shifted)
+    fused_desc: jax.Array,         # (7, N) int32 fused descriptors
     csched: CascadeSchedule,
     *,
     scale: Optional[float] = None,
+    fused: bool = True,
     interpret: bool = False,
     return_lse: bool = False,
 ):
     """Jit-stable cascade (prefix-grouped) paged LeanAttention decode.
 
-    Two ordinary stream-K phases + one merge:
+    The grouped prefix pass(es), the per-sequence suffix pass, and the
+    segment merge — executed as ONE descriptor-driven flat-grid
+    ``pallas_call`` (:func:`~repro.kernels.lean_decode.lean_cascade_fused`,
+    partials never leave VMEM) when the schedule fits the fused VMEM
+    budget, else as the two-``pallas_call`` + XLA ``segment_merge``
+    fallback.
 
-      * prefix phase: segment = (group, kv_head), query block = every
-        member's rows stacked (``group_size * g``, padded groups carry
-        member-0 copies whose partials are dropped at merge) — the shared
-        prefix pages are walked ONCE per group, which is where the KV
-        traffic/grid-iteration savings come from;
-      * suffix phase: the normal per-sequence walk over the private tail
-        through ``suffix_tbl`` (the slot row shifted past the prefix);
-      * merge: prefix piece rows are re-sliced per member and reduced
-        together with the suffix pieces by the standard ``segment_merge``
-        — the same associative operator the unshared path uses.
-
-    Pure in the array arguments; ``csched`` is the only static key. The
-    prefix phase's runtime lengths are ``csched.prefix_lens`` (static
-    content of the schedule — an empty prefix masks to identity), the
-    suffix phase masks with ``seg_ctx_suffix``.
+    Pure in the array arguments; ``csched`` is the only static key — and
+    it is *membership-free*, so every value that depends on which slots
+    group where arrives as a runtime array: ``members`` drives the stacked
+    prefix query gather and the merge targets, ``prefix_lens`` masks the
+    (bucketed) pass walks, the tables route pages, and ``fused_desc``
+    (built host-side by
+    :func:`repro.core.leantile.cascade_fused_descriptors`; ignored on the
+    two-call path) carries the merge plan. Equivalent grouping geometries
+    therefore replay one trace.
 
     Numerics: sharing physical pages is bit-neutral (asserted in tests
     against the same cascade over duplicated pages); the *regrouping*
@@ -428,33 +441,62 @@ def lean_decode_cascade_from_schedule(
     scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
     g = Hq // Hkv
     nmax = csched.group_size
-    NG = csched.num_groups
+    NP = csched.num_groups
     k_rows = k_pool.reshape(num_pages * Hkv, page_size, d)
     v_rows = v_pool.reshape(num_pages * Hkv, page_size, d)
 
-    # ---- prefix phase: stacked member queries, shared pages walked once
-    mem = np.clip(csched.members, 0, None)               # (NG, nmax)
+    # stacked member queries: padding ranks carry member-0 copies whose
+    # partial rows are dropped (or garbage-targeted) at merge
+    mem = jnp.clip(jnp.asarray(members, jnp.int32), 0, None)  # (NP, nmax)
     q_r = q.reshape(B, Hkv, g, d)
-    q_pref = q_r[jnp.asarray(mem)]                       # (NG, nmax, Hkv, g, d)
-    q_pref = jnp.moveaxis(q_pref, 2, 1).reshape(NG * Hkv, nmax * g, d)
+    q_pref = q_r[mem]                                    # (NP, nmax, Hkv, g, d)
+    q_pref = jnp.moveaxis(q_pref, 2, 1).reshape(NP * Hkv, nmax * g, d)
     seg_ctx_prefix = jnp.repeat(
-        jnp.asarray(csched.prefix_lens, jnp.int32), Hkv
+        jnp.asarray(prefix_lens, jnp.int32), Hkv
     )
     route_p = _paged_route(csched.prefix_sched, prefix_tbl, Hkv, fused=False)
+    route_s = _paged_route(csched.suffix_sched, suffix_tbl, Hkv, fused=False)
+    seg_ctx_suffix = seg_ctx_suffix.astype(jnp.int32)
+
+    if fused and not cascade_uses_fused(csched, g, d):
+        fused = False
+    if fused:
+        # ---- single flat grid: prefix partials + suffix partials + merge
+        qmax = nmax * g
+        q_suf = q.reshape(B * Hkv, g, d)
+        if qmax > g:
+            q_suf = jnp.pad(q_suf, ((0, 0), (0, qmax - g), (0, 0)))
+        q_stack = jnp.concatenate([q_pref, q_suf], axis=0)
+        ctx_all = jnp.concatenate([seg_ctx_prefix, seg_ctx_suffix])
+        route = jnp.concatenate([
+            route_p, route_s,
+            jnp.zeros(csched.fused_merge_iters, jnp.int32),
+        ])
+        o_seg, lse = lean_cascade_fused(
+            q_stack, k_rows, v_rows, ctx_all, route,
+            jnp.asarray(fused_desc, jnp.int32), csched, scale, g,
+            interpret=interpret,
+        )
+        out = o_seg.reshape(B, Hq, d).astype(q.dtype)
+        if return_lse:
+            return out, lse.reshape(B, Hq)
+        return out
+
+    # ---- two-call fallback: prefix pass, suffix pass, XLA segment merge
     o_p, m_p, l_p = lean_decode_paged_partials(
         q_pref, k_rows, v_rows, seg_ctx_prefix, route_p,
         csched.prefix_sched, scale, interpret=interpret,
     )
-
-    # ---- suffix phase: ordinary per-sequence walk of the private tail
     q_suf = q.reshape(B * Hkv, g, d)
-    route_s = _paged_route(csched.suffix_sched, suffix_tbl, Hkv, fused=False)
     o_s, m_s, l_s = lean_decode_paged_partials(
-        q_suf, k_rows, v_rows, seg_ctx_suffix.astype(jnp.int32), route_s,
+        q_suf, k_rows, v_rows, seg_ctx_suffix, route_s,
         csched.suffix_sched, scale, interpret=interpret,
     )
-
-    # ---- merge: slice prefix pieces per member, reduce with suffix pieces
+    # merge: slice prefix pieces per member, reduce with suffix pieces.
+    # Targets derive from the RUNTIME members array — a prefix piece of
+    # segment (pass j, head h) expands to one row per member rank, aimed
+    # at sequence segment members[j, i] * Hkv + h (padding ranks aim at
+    # the garbage segment B * Hkv and are dropped by segment_merge).
     Pp = csched.prefix_sched.num_pieces
     o_pe = jnp.swapaxes(o_p.reshape(Pp, nmax, g, d), 0, 1).reshape(
         nmax * Pp, g, d
@@ -466,7 +508,15 @@ def lean_decode_cascade_from_schedule(
         m=jnp.concatenate([m_pe, m_s]),
         l=jnp.concatenate([l_pe, l_s]),
     )
-    ids = jnp.asarray(csched.merge_piece_seg())
+    pseg = csched.prefix_sched.piece_seg.astype(np.int64)    # (Pp,) static
+    grp, head = pseg // Hkv, pseg % Hkv
+    mem_p = jnp.asarray(members, jnp.int32)[grp]             # (Pp, nmax)
+    tgt = jnp.where(
+        mem_p >= 0, mem_p * Hkv + jnp.asarray(head)[:, None], B * Hkv
+    )
+    ids = jnp.concatenate(
+        [tgt.T.reshape(-1), jnp.asarray(csched.suffix_sched.piece_seg)]
+    )
     seg = segment_merge(part, ids, B * Hkv)
     out = finalize(seg).reshape(B, Hq, d).astype(q.dtype)
     if return_lse:
@@ -475,27 +525,31 @@ def lean_decode_cascade_from_schedule(
 
 
 def cascade_tables(
-    page_tbl: np.ndarray, csched: CascadeSchedule
+    page_tbl: np.ndarray, binding: CascadeBinding
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Host-side (prefix_tbl, suffix_tbl) for a cascade call.
 
-    ``prefix_tbl[j]`` is the shared prefix run of group ``j`` (taken from
-    its first member's table row — all members alias the same physical
-    pages there); ``suffix_tbl[b]`` is sequence ``b``'s row shifted left
-    past its group's prefix pages. Widths stay at the slot table width so
+    ``prefix_tbl[j]`` is grouped pass ``j``'s shared page run — pages
+    ``[page_start, page_start + prefix_pages)`` of its first member's
+    table row (all members alias the same physical pages there);
+    ``suffix_tbl[b]`` is sequence ``b``'s row shifted left past its
+    deepest shared coverage. Widths stay at the slot table width so
     bucketed schedule walks never index out of range.
     """
     ptbl = np.asarray(page_tbl)
     B, W = ptbl.shape
-    NG = csched.num_groups
-    prefix_tbl = np.zeros((NG, W), dtype=np.int32)
+    NP = binding.members.shape[0]
+    prefix_tbl = np.zeros((NP, W), dtype=np.int32)
     suffix_tbl = np.zeros((B, W), dtype=np.int32)
-    for j in range(NG):
-        lead = int(csched.members[j, 0])
-        n = int(csched.prefix_pages[j])
-        prefix_tbl[j, :n] = ptbl[lead, :n]
+    for j in range(NP):
+        lead = int(binding.members[j, 0])
+        if lead < 0:
+            continue
+        s = int(binding.page_start[j])
+        n = int(binding.prefix_pages[j])
+        prefix_tbl[j, :n] = ptbl[lead, s : s + n]
     for b in range(B):
-        n = int(csched.prefix_pages[csched.seq_group[b]])
+        n = int(binding.seq_prefix_pages[b])
         suffix_tbl[b, : W - n] = ptbl[b, n:]
     return prefix_tbl, suffix_tbl
 
@@ -509,21 +563,25 @@ def lean_decode_cascade(
     groups: Sequence[Sequence[int]],
     prefix_pages: Sequence[int],
     *,
+    page_starts: Optional[Sequence[int]] = None,
     num_workers: Optional[int] = None,
     scale: Optional[float] = None,
+    fused: bool = True,
     schedule_cache: Optional[ScheduleCache] = None,
     interpret: bool = False,
     return_lse: bool = False,
 ):
     """Convenience cascade decode: builds (or cache-fetches) the cascade
-    schedule from host lengths/grouping, derives the phase tables, and runs
+    schedule + binding from host lengths/grouping, derives the phase
+    tables and fused descriptors, and runs
     :func:`lean_decode_cascade_from_schedule`.
 
-    ``groups`` partitions the batch into shared-prefix groups and
-    ``prefix_pages`` gives each group's page-aligned shared prefix — the
-    exact outputs of a radix-cache admission
-    (:mod:`repro.serving.prefix_cache`). Lengths clamp to allocated
-    capacity like :func:`lean_decode_paged`.
+    ``groups``/``prefix_pages``/``page_starts`` are grouped passes over
+    the batch — nested (multi-level) passes allowed, singletons dropped —
+    exactly the output of
+    :func:`repro.serving.prefix_cache.lcp_group_passes` over a radix-cache
+    admission. Lengths clamp to allocated capacity like
+    :func:`lean_decode_paged`.
     """
     B, Hq, d = q.shape
     num_pages, Hkv, page_size, _ = k_pool.shape
@@ -538,26 +596,31 @@ def lean_decode_cascade(
     num_workers = num_workers or default_num_workers()
     max_len = ptbl_np.shape[1] * page_size
     if schedule_cache is not None:
-        csched = schedule_cache.get_cascade(
+        csched, binding = schedule_cache.get_cascade(
             ctx_lens, groups, prefix_pages, Hkv, page_size, num_workers,
-            max_len=max_len,
+            max_len=max_len, page_starts=page_starts,
         )
     else:
-        csched = make_cascade_schedule(
+        csched, binding = make_cascade_schedule(
             ctx_lens, groups, prefix_pages, Hkv, page_size, num_workers,
-            max_len=max_len,
+            page_starts=page_starts, max_len=max_len,
         )
-    prefix_tbl, suffix_tbl = cascade_tables(ptbl_np, csched)
+    prefix_tbl, suffix_tbl = cascade_tables(ptbl_np, binding)
+    fused_desc = cascade_fused_descriptors(csched, binding)
     seg_ctx_suffix = jnp.asarray(
         np.repeat(
-            np.asarray(ctx_lens) - np.asarray(csched.seq_prefix_len), Hkv
+            np.asarray(ctx_lens) - np.asarray(binding.seq_prefix_len), Hkv
         ),
         jnp.int32,
     )
     return lean_decode_cascade_from_schedule(
         q, k_pool, v_pool, seg_ctx_suffix,
+        jnp.asarray(binding.prefix_lens, jnp.int32),
+        jnp.asarray(binding.members, jnp.int32),
         jnp.asarray(prefix_tbl, jnp.int32), jnp.asarray(suffix_tbl, jnp.int32),
-        csched, scale=scale, interpret=interpret, return_lse=return_lse,
+        jnp.asarray(fused_desc, jnp.int32),
+        csched, scale=scale, fused=fused, interpret=interpret,
+        return_lse=return_lse,
     )
 
 

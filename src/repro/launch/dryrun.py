@@ -53,7 +53,7 @@ from repro.distributed.sharding import (
 )
 from repro.launch.mesh import make_production_mesh
 from repro.launch.serve_step import make_prefill_step, make_serve_step
-from repro.models import count_active_params, count_params, init_params
+from repro.models import count_active_params, init_params
 from repro.roofline.analysis import analyze, model_flops_for
 from repro.roofline.measure import corrected_cost, cost_of
 from repro.training.optimizer import OptConfig, adamw_init

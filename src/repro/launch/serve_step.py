@@ -7,11 +7,9 @@ context dimension can fill the mesh (the paper's core scenario, §III-D).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.distributed import sp_decode_attention
 from repro.models import ModelConfig, decode_step

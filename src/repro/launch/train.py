@@ -11,12 +11,10 @@ gradient compression, grad accumulation.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.data.pipeline import DataConfig, batch_at

@@ -14,7 +14,6 @@ routed output) and router auxiliary load-balancing loss.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

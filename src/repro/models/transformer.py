@@ -20,10 +20,8 @@ jnp, Pallas lean kernel, or the mesh-level sequence-parallel lean path.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Callable, Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

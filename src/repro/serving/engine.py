@@ -61,6 +61,7 @@ from repro.core.leantile import (
     LeanSchedule,
     ScheduleCache,
     bucket_length,
+    cascade_fused_descriptors,
     default_tile_size,
     fixed_split_factor,
     make_chunk_schedule,
@@ -70,6 +71,7 @@ from repro.core.attention import paged_gather_kv
 from repro.kernels import flash_decode, lean_decode
 from repro.kernels.ops import (
     cascade_tables,
+    cascade_uses_fused,
     flash_decode_from_lens,
     flash_prefill_paged,
     lean_decode_cascade_from_schedule,
@@ -87,7 +89,7 @@ from repro.models import (
 )
 from repro.models import supports_chunked_prefill as _cfg_supports_chunked
 from repro.serving.kvpool import KVPagePool
-from repro.serving.prefix_cache import RadixPrefixCache
+from repro.serving.prefix_cache import RadixPrefixCache, lcp_group_passes
 from repro.serving.telemetry import Histogram
 
 import contextlib
@@ -133,6 +135,12 @@ class EngineStats:
     cow_copies: int = 0               # copy-on-write page copies
     cascade_ticks: int = 0            # decode ticks run on the cascade path
     cascade_grouped_slots: int = 0    # cumulative slots decoded via a group
+    cascade_grouped_passes: int = 0   # cumulative grouped passes executed
+    cascade_fused_ticks: int = 0      # cascade ticks on the fused kernel
+    cascade_retraces: int = 0         # distinct cascade schedule geometries
+    cascade_stability_skips: int = 0  # groupings held back by the N-tick guard
+    cascade_levels_max: int = 0       # deepest pass nesting seen on any tick
+    cascade_last: dict = field(default_factory=dict)  # last tick's grouping
     schedules: List[dict] = field(default_factory=list)
     schedule_cache: dict = field(default_factory=dict)
     kv_pool: dict = field(default_factory=dict)
@@ -257,24 +265,33 @@ def _kernel_decode_step_cascade(
     page_tbl,
     prefix_tbl,
     suffix_tbl,
+    members,
+    prefix_lens,
+    seq_prefix_len,
+    fused_desc,
     *,
     cfg: ModelConfig,
     csched: CascadeSchedule,
+    fused: bool,
     interpret: bool,
 ):
     """Cascade (prefix-grouped) twin of ``_kernel_decode_step_paged``: the
     KV write still goes through the full per-slot ``page_tbl``; attention
-    runs the grouped prefix pass + per-slot suffix pass and merges. The
-    grouping/schedule is the only static key — tables are runtime arrays."""
+    runs the grouped prefix pass(es) + per-slot suffix pass and merges —
+    fused into one kernel when the VMEM budget allows. The membership-free
+    schedule is the only static key; everything grouping-dependent
+    (members, pass lengths, per-slot coverage, tables, merge descriptors)
+    rides as runtime arrays, so equivalent geometries share this trace."""
 
     def attn_fn(q, k_pool, v_pool, ctx):
         suffix = jnp.maximum(
-            ctx.astype(jnp.int32) - jnp.asarray(csched.seq_prefix_len), 0
+            ctx.astype(jnp.int32) - seq_prefix_len.astype(jnp.int32), 0
         )
         seg_suffix = jnp.repeat(suffix, cfg.n_kv_heads)
         return lean_decode_cascade_from_schedule(
-            q, k_pool, v_pool, seg_suffix, prefix_tbl, suffix_tbl, csched,
-            interpret=interpret,
+            q, k_pool, v_pool, seg_suffix, prefix_lens, members,
+            prefix_tbl, suffix_tbl, fused_desc, csched,
+            fused=fused, interpret=interpret,
         )
 
     cur = jnp.max(ctx_lens)
@@ -410,6 +427,10 @@ class DecodeEngine:
         num_pages: Optional[int] = None,
         prefix_cache: bool = False,
         cascade: bool = False,
+        cascade_fused: bool = True,
+        cascade_grouping: str = "lcp",
+        cascade_multi_level: bool = True,
+        cascade_stable_ticks: int = 2,
     ):
         self.cfg = cfg
         self.params = params
@@ -421,6 +442,24 @@ class DecodeEngine:
         self.fused = fused
         self.paged = paged
         self.cascade = cascade
+        # cascade v2 policy knobs: fused single-kernel execution (VMEM
+        # budget still gates per schedule), trie-path grouping mode
+        # ('lcp' groups at longest common prefixes, optionally stacking
+        # one pass per trie level; 'identical' reproduces the v1
+        # equal-page-run grouping for comparison), and the stability
+        # guard — the cascade path only engages once the grouping has
+        # held unchanged for N consecutive ticks, so admission/finish
+        # churn stops forcing a retrace per tick
+        self.cascade_fused = cascade_fused
+        if cascade_grouping not in ("lcp", "identical"):
+            raise ValueError("cascade_grouping must be 'lcp' or 'identical'")
+        self.cascade_grouping = cascade_grouping
+        self.cascade_multi_level = cascade_multi_level
+        self.cascade_stable_ticks = max(1, int(cascade_stable_ticks))
+        self._casc_key = None           # last tick's grouping structure
+        self._casc_stable = 0           # consecutive ticks it has held
+        self._casc_signatures: set = set()  # schedule geometries seen
+        self._casc_binding = None       # last cascade tick's binding
         # Pallas interpret mode: default on for CPU hosts (tests/bench),
         # off on real accelerators where Mosaic compiles the kernels
         self.interpret = (
@@ -539,7 +578,7 @@ class DecodeEngine:
         )
         self._jit_kernel_step_cascade = jax.jit(
             functools.partial(_kernel_decode_step_cascade, cfg=cfg),
-            static_argnames=("csched", "interpret"),
+            static_argnames=("csched", "fused", "interpret"),
             donate_argnames=("cache",),
         )
         self._jit_copy_page = jax.jit(
@@ -1004,33 +1043,87 @@ class DecodeEngine:
             self._slot_prefix_full[slot] = 0
 
     def _cascade_grouping(self, active: List[int]):
-        """Partition ALL slots into shared-prefix groups for this tick's
-        cascade schedule. Active slots with identical leading runs of full
-        shared (radix-matched) pages group together; everything else —
-        idle, excluded, or unshared slots — rides as singletons with an
-        empty prefix. Returns (groups, prefix_pages) in
-        :func:`make_cascade_schedule` form."""
-        by_prefix: Dict[tuple, List[int]] = {}
-        singles: List[int] = []
-        active_set = set(active)
-        for s in range(self.max_batch):
-            npref = self._slot_prefix_full[s] if s in active_set else 0
+        """Grouped cascade passes for this tick: the radix page *paths*
+        of the active slots (their leading runs of full shared pages) are
+        grouped at their longest common prefixes —
+        :func:`~repro.serving.prefix_cache.lcp_group_passes` walks the
+        compressed trie the paths induce, so slots matching 3 and 5 pages
+        of one chain group at 3, and (multi-level) nested subsets stack
+        one extra pass per trie level. ``cascade_grouping='identical'``
+        keeps the v1 behavior (group only equal page runs) as the bench
+        comparison baseline. Slots sharing with nobody are simply absent:
+        they decode through their suffix walk alone."""
+        paths = {}
+        for s in active:
+            npref = self._slot_prefix_full[s]
             if npref > 0:
-                key = tuple(int(p) for p in self.page_tbl[s, :npref])
-                by_prefix.setdefault(key, []).append(s)
-            else:
-                singles.append(s)
-        groups, pps = [], []
-        for key, mem in by_prefix.items():
-            if len(mem) >= 2:
-                groups.append(mem)
-                pps.append(len(key))
-            else:
-                singles.extend(mem)
-        for s in singles:
-            groups.append([s])
-            pps.append(0)
-        return groups, pps
+                paths[s] = tuple(int(p) for p in self.page_tbl[s, :npref])
+        if self.cascade_grouping == "identical":
+            by_prefix: Dict[tuple, List[int]] = {}
+            for s, p in paths.items():
+                by_prefix.setdefault(p, []).append(s)
+            return sorted(
+                (tuple(sorted(m)), 0, len(p))
+                for p, m in by_prefix.items() if len(m) >= 2
+            )
+        return lcp_group_passes(
+            paths, multi_level=self.cascade_multi_level
+        )
+
+    def _cascade_fused_desc(self, csched, binding, fused: bool):
+        """The fused merge descriptors for this tick, memoized on the
+        (schedule geometry, binding content) pair — the guard keeps both
+        stable across steady-state ticks, so the O(pieces x batch) host
+        build runs once per regrouping, not once per tick. When the
+        two-call path was selected the array is ignored by the kernel, so
+        a cached zeros block of the right (static) shape rides along."""
+        key = (
+            fused, csched.signature, binding.members.tobytes(),
+            binding.page_start.tobytes(), binding.prefix_pages.tobytes(),
+        )
+        cached = self.__dict__.get("_casc_desc")
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        if fused:
+            desc = cascade_fused_descriptors(csched, binding)
+        else:
+            desc = np.zeros((7, csched.fused_grid_iters), dtype=np.int32)
+        self._casc_desc = (key, desc)
+        return desc
+
+    def _cascade_schedule_for_tick(self, active: List[int], ctx_np):
+        """The (schedule, binding) for this tick's cascade decode — or
+        ``(None, None)`` when no grouped pass exists or the stability
+        guard is still holding the path back. The guard keys on the
+        grouping *structure* (membership + page ranges), not on lengths:
+        a grouping must survive ``cascade_stable_ticks`` consecutive
+        ticks of admission/finish churn before the engine pays the
+        (possible) retrace of entering the cascade path."""
+        passes = self._cascade_grouping(active)
+        if not passes:
+            self._casc_key = None
+            self._casc_stable = 0
+            return None, None
+        key = tuple(passes)
+        if key == self._casc_key:
+            self._casc_stable += 1
+        else:
+            self._casc_key = key
+            self._casc_stable = 1
+        if self._casc_stable < self.cascade_stable_ticks:
+            self.stats.cascade_stability_skips += 1
+            return None, None
+        s_pad = self.cache_len + ((-self.cache_len) % self.tile)
+        lens = np.minimum(ctx_np + 1, self.cache_len)
+        csched, binding = self.sched_cache.get_cascade(
+            lens.tolist(),
+            [m for m, _, _ in passes],
+            [c for _, _, c in passes],
+            self.cfg.n_kv_heads, self.tile, self.num_workers,
+            max_len=s_pad,
+            page_starts=[s for _, s, _ in passes],
+        )
+        return csched, binding
 
     def tick(self) -> Dict[int, int]:
         """Admit + one decode step for all active slots. Returns
@@ -1071,20 +1164,24 @@ class DecodeEngine:
                 for s in exclude:
                     ptbl_np[s, :] = 0
 
-        csched = None
+        csched = binding = None
         if self.use_fast_path and self.cascade and self.attn_backend == "lean":
-            groups, pps = self._cascade_grouping(active)
-            if any(len(g) >= 2 for g in groups):
-                s_pad = self.cache_len + ((-self.cache_len) % self.tile)
-                lens = np.minimum(ctx_np + 1, self.cache_len)
-                csched = self.sched_cache.get_cascade(
-                    lens.tolist(), groups, pps, self.cfg.n_kv_heads,
-                    self.tile, self.num_workers, max_len=s_pad,
-                )
+            csched, binding = self._cascade_schedule_for_tick(active, ctx_np)
+        # benches/diagnostics read the live per-slot suffix coverage here
+        self._casc_binding = binding
         if csched is not None:
-            # cascade decode: shared prefixes walked once per group
+            # cascade decode: shared prefix runs walked once per grouped
+            # pass; the membership-free schedule is the only static key
             self._record_schedule(csched.suffix_sched)
-            prefix_tbl, suffix_tbl = cascade_tables(ptbl_np, csched)
+            prefix_tbl, suffix_tbl = cascade_tables(ptbl_np, binding)
+            fused = self.cascade_fused and cascade_uses_fused(
+                csched, self.cfg.n_heads // self.cfg.n_kv_heads,
+                self.cfg.head_dim,
+            )
+            fused_desc = self._cascade_fused_desc(csched, binding, fused)
+            if csched.signature not in self._casc_signatures:
+                self._casc_signatures.add(csched.signature)
+                self.stats.cascade_retraces += 1
             with _quiet_donation():
                 logits, self.cache = self._jit_kernel_step_cascade(
                     self.params, self.cache,
@@ -1092,12 +1189,28 @@ class DecodeEngine:
                     jnp.asarray(ctx_np, jnp.int32),
                     jnp.asarray(ptbl_np),
                     jnp.asarray(prefix_tbl), jnp.asarray(suffix_tbl),
-                    csched=csched, interpret=self.interpret,
+                    jnp.asarray(binding.members),
+                    jnp.asarray(binding.prefix_lens),
+                    jnp.asarray(binding.seq_prefix_len),
+                    jnp.asarray(fused_desc),
+                    csched=csched, fused=fused, interpret=self.interpret,
                 )
+            grouped = np.unique(binding.members[binding.members >= 0])
             self.stats.cascade_ticks += 1
-            self.stats.cascade_grouped_slots += sum(
-                len(g) for g in groups if len(g) >= 2
+            self.stats.cascade_fused_ticks += int(fused)
+            self.stats.cascade_grouped_slots += len(grouped)
+            self.stats.cascade_grouped_passes += int(
+                (binding.members[:, 0] >= 0).sum()
             )
+            self.stats.cascade_levels_max = max(
+                self.stats.cascade_levels_max, binding.num_levels
+            )
+            self.stats.cascade_last = {
+                "passes": int((binding.members[:, 0] >= 0).sum()),
+                "grouped_slots": int(len(grouped)),
+                "levels": int(binding.num_levels),
+                "fused": bool(fused),
+            }
         elif self.use_fast_path:
             # ONE schedule build (cached) serves both the stats record and
             # the kernel step — nothing is derived twice per tick

@@ -40,7 +40,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.serving.kvpool import KVPagePool
 
-__all__ = ["RadixPrefixCache", "PrefixMatch", "PrefixCacheStats", "CACHE_SEQ"]
+__all__ = [
+    "RadixPrefixCache",
+    "PrefixMatch",
+    "PrefixCacheStats",
+    "CACHE_SEQ",
+    "lcp_group_passes",
+]
 
 # reserved KVPagePool holder key for pages the cache keeps alive
 CACHE_SEQ = "__radix_prefix_cache__"
@@ -356,3 +362,66 @@ class RadixPrefixCache:
             d["bytes_cached"] = self.cached_pages * self.page_bytes
             d["bytes_saved"] = self.pool.pages_saved * self.page_bytes
         return d
+
+
+# -------------------------------------------------------------- grouping
+def lcp_group_passes(
+    paths: Dict[int, Sequence[int]],
+    *,
+    multi_level: bool = True,
+    min_group: int = 2,
+) -> List[Tuple[Tuple[int, ...], int, int]]:
+    """Grouped cascade passes from per-slot radix page paths.
+
+    ``paths[slot]`` is the slot's run of shared (radix-matched) physical
+    pages, in logical order — exactly the leading entries of its page
+    table. The function walks the compressed trie those paths induce and
+    emits one pass per trie node where at least ``min_group`` slots still
+    travel together: ``(members, page_start, page_count)`` meaning the
+    members share pages ``[page_start, page_start + page_count)`` of
+    their tables.
+
+    This is longest-common-prefix grouping: slots matching 3 and 5 pages
+    of the same chain group at 3 (the LCP), the deeper slot keeping its
+    extra shared pages in its private suffix walk. With ``multi_level``
+    (the default) the recursion continues below each divergence point, so
+    nested subsets that share deeper emit additional stacked passes — one
+    grouped pass per trie level, merged by the same associative operator.
+    With ``multi_level=False`` only the top-level LCP pass per root chain
+    is emitted (each slot appears in at most one pass).
+
+    Output is deterministic (sorted members, chain-page order) and
+    contains no singleton passes — a slot sharing with nobody decodes on
+    the vanilla paged path.
+    """
+    def rec(slots: List[int], depth: int):
+        # extend the run while every slot still shares the next page
+        d = depth
+        while (
+            all(len(paths[s]) > d for s in slots)
+            and len({paths[s][d] for s in slots}) == 1
+        ):
+            d += 1
+        out = []
+        if d > depth:
+            out.append((tuple(sorted(slots)), depth, d - depth))
+            if not multi_level:
+                return out    # single-level: stop below the LCP pass
+        kids: Dict[int, List[int]] = {}
+        for s in slots:
+            if len(paths[s]) > d:
+                kids.setdefault(int(paths[s][d]), []).append(s)
+        for _, sub in sorted(kids.items()):
+            if len(sub) >= min_group:
+                out.extend(rec(sub, d))
+        return out
+
+    roots: Dict[int, List[int]] = {}
+    for s, p in paths.items():
+        if len(p) > 0:
+            roots.setdefault(int(p[0]), []).append(s)
+    passes: List[Tuple[Tuple[int, ...], int, int]] = []
+    for _, slots in sorted(roots.items()):
+        if len(slots) >= min_group:
+            passes.extend(rec(slots, 0))
+    return passes

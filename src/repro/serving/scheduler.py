@@ -478,6 +478,11 @@ class Scheduler:
             "prefix_attach_count": es.prefix_attach_count,
             "cow_copies": es.cow_copies,
             "cascade_ticks": es.cascade_ticks,
+            "cascade_fused_ticks": es.cascade_fused_ticks,
+            "cascade_grouped_passes": es.cascade_grouped_passes,
+            "cascade_retraces": es.cascade_retraces,
+            "cascade_stability_skips": es.cascade_stability_skips,
+            "cascade_levels_max": es.cascade_levels_max,
             "prefix_cache": dict(es.prefix_cache),
             **es.latency_dict(),
         }

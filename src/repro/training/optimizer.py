@@ -6,7 +6,6 @@ Pure functions over pytrees — no optax dependency.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,6 @@ gradient compression with error feedback, donated buffers.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax

@@ -1,0 +1,94 @@
+"""The CI perf gate itself must be trustworthy: it passes on equal
+artifacts, trips on an injected >15% regression in any suite, trips on a
+silently-missing suite, and tolerates metrics the baseline predates."""
+import copy
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+from benchmarks.check_regression import METRICS, check
+
+DOC = {
+    "decode_step": {"speedup_vs_legacy": 500.0},
+    "paged": {"paged_over_dense_throughput": 0.9},
+    "scheduler": {"chunked": {"decode_tokens_while_long_prefilling": 15}},
+    "prefix": {
+        "headline": {
+            "decode_speedup_prefix": 1.0,
+            "decode_speedup_cascade": 1.4,
+        },
+        "mixed_depth": {
+            "headline": {
+                "grouped_passes_per_tick_lcp": 2.0,
+                "fused_over_two_call_speedup": 1.2,
+            }
+        },
+    },
+}
+
+
+def test_equal_artifacts_pass():
+    rows, failures = check(DOC, DOC)
+    assert failures == []
+    assert len(rows) == len(METRICS)
+
+
+def test_injected_regression_fails_every_suite():
+    rows, failures = check(DOC, DOC, scale=0.8)
+    assert set(failures) == set(METRICS)
+
+
+def test_single_suite_regression_fails_only_that_suite():
+    cur = copy.deepcopy(DOC)
+    cur["paged"]["paged_over_dense_throughput"] = 0.9 * 0.8
+    rows, failures = check(cur, DOC)
+    assert failures == ["paged"]
+
+
+def test_within_threshold_drift_passes():
+    cur = copy.deepcopy(DOC)
+    cur["decode_step"]["speedup_vs_legacy"] = 500.0 * 0.9   # -10% < 15%
+    _rows, failures = check(cur, DOC)
+    assert failures == []
+
+
+def test_missing_suite_in_current_fails():
+    cur = copy.deepcopy(DOC)
+    del cur["prefix"]["mixed_depth"]
+    _rows, failures = check(cur, DOC)
+    assert "prefix_mixed_lcp_passes" in failures
+    assert "prefix_mixed_fused" in failures
+
+
+def test_metric_missing_from_baseline_is_skipped():
+    base = copy.deepcopy(DOC)
+    del base["prefix"]["mixed_depth"]
+    rows, failures = check(DOC, base)
+    assert failures == []
+    verdicts = {r[0]: r[4] for r in rows}
+    assert verdicts["prefix_mixed_fused"].startswith("skip")
+
+
+def test_cli_inject_regression_exits_nonzero(tmp_path: Path):
+    """End-to-end gate self-test: the exact CI invocation with
+    --inject-regression 0.8 must exit 1 against a baseline of itself."""
+    cur = tmp_path / "cur.json"
+    base = tmp_path / "base.json"
+    cur.write_text(json.dumps(DOC))
+    base.write_text(json.dumps(DOC))
+    repo = Path(__file__).resolve().parent.parent
+    ok = subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_regression",
+         "--current", str(cur), "--baseline", str(base)],
+        cwd=repo, capture_output=True, text=True,
+    )
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    bad = subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_regression",
+         "--current", str(cur), "--baseline", str(base),
+         "--inject-regression", "0.8"],
+        cwd=repo, capture_output=True, text=True,
+    )
+    assert bad.returncode == 1, bad.stdout + bad.stderr
+    assert "FAIL" in bad.stdout

@@ -2,11 +2,10 @@
 no-ops without an installed mesh; spec logic is pure)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
-from repro.distributed.hints import activation_mesh, hint
+from repro.distributed.hints import hint
 from repro.distributed.sharding import (
     best_dp_spec,
     choose_layout,

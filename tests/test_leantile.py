@@ -3,7 +3,6 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core.leantile import (
-    LeanSchedule,
     default_tile_size,
     fixed_split_factor,
     make_schedule,

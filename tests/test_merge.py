@@ -3,7 +3,6 @@ re-scaling is an associative, exact reduction operator."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.attention import chunk_partial, mha_decode_ref

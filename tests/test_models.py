@@ -13,9 +13,7 @@ from repro.models import (
     count_params,
     decode_step,
     forward,
-    init_cache,
     init_params,
-    loss_fn,
     prefill,
 )
 from repro.training.optimizer import OptConfig, adamw_init

@@ -17,7 +17,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.serving.kvpool import NULL_PAGE, KVPagePool
+from repro.serving.kvpool import KVPagePool
 from repro.serving.prefix_cache import CACHE_SEQ, RadixPrefixCache
 
 

@@ -2,12 +2,10 @@
 that motivates the corrected measurement, CostVec algebra, model flops."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import SHAPES, get_config
 from repro.models import count_active_params
 from repro.roofline.analysis import (
-    Roofline,
     analyze,
     collective_bytes,
     model_flops_for,

@@ -7,7 +7,6 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.leantile import (
-    LeanSchedule,
     ScheduleCache,
     bucket_ctx_lens,
     bucket_length,

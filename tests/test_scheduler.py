@@ -16,7 +16,6 @@ from repro.models import init_params
 from repro.serving.engine import DecodeEngine, Request
 from repro.serving.scheduler import (
     RequestState,
-    ScheduledRequest,
     Scheduler,
     SchedulerConfig,
 )

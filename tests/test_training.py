@@ -7,7 +7,6 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.data.pipeline import DataConfig, batch_at
 from repro.models import ModelConfig, init_params
