@@ -10,9 +10,18 @@ tokens-decoded-while-prefilling — rather than absolute wall-clock
 numbers, because shared CI runners make absolute timings jitter far more
 than 15% while the within-run ratios stay stable (both sides of a ratio
 see the same noisy host). A metric *missing* from the current artifact is
-itself a failure: a silently-dropped suite must not pass the gate. A
+itself a failure, and the gate distinguishes the two ways that happens:
+``FAIL (missing suite)`` when the suite's whole top-level section is
+absent (the bench section didn't run — e.g. a crashed or silently-skipped
+suite), vs ``FAIL (metric missing)`` when the section ran but no longer
+reports the gated metric (a rename/refactor broke the contract). A
 metric missing from the baseline is skipped with a note (new suites gate
 once the baseline is refreshed).
+
+Per-metric thresholds: ``THRESHOLDS`` overrides the CLI threshold for
+metrics with a tighter contract — the hardening-overhead ratio (hardened
+engine vs plain, both fault-free) is gated at 3%, the "zero overhead when
+disabled" acceptance bar, not the 15% noise bar.
 
 ``--inject-regression F`` scales every current metric by ``F`` before
 comparison — the self-test knob that demonstrates the gate trips (e.g.
@@ -43,6 +52,14 @@ METRICS = {
     "prefix_mixed_fused": (
         "prefix", "mixed_depth", "headline", "fused_over_two_call_speedup",
     ),
+    "hardening": ("hardening", "hardened_over_plain_throughput"),
+}
+
+# per-metric regression thresholds overriding the CLI default: the
+# fault-flags-disabled overhead of the hardened engine is an acceptance
+# contract (< 3%), not a noise bar
+THRESHOLDS = {
+    "hardening": 0.03,
 }
 
 
@@ -70,11 +87,18 @@ def check(current: dict, baseline: dict, threshold: float = 0.15,
             rows.append((suite, base, cur, None, "skip (no baseline)"))
             continue
         if cur is None:
-            rows.append((suite, base, cur, None, "FAIL (metric missing)"))
+            # distinguish "the whole bench section never ran" from "the
+            # section ran but the gated metric is gone"
+            if path[0] not in current:
+                verdict = "FAIL (missing suite)"
+            else:
+                verdict = "FAIL (metric missing)"
+            rows.append((suite, base, cur, None, verdict))
             failures.append(suite)
             continue
+        thr = THRESHOLDS.get(suite, threshold)
         ratio = cur / base if base else float("inf")
-        if base > 0 and ratio < 1.0 - threshold:
+        if base > 0 and ratio < 1.0 - thr:
             rows.append((suite, base, cur, ratio, "FAIL (regression)"))
             failures.append(suite)
         else:

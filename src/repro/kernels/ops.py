@@ -75,7 +75,7 @@ __all__ = [
 ]
 
 
-def _clamp_ctx_lens(ctx_lens: Sequence[int], caps, what: str):
+def _clamp_ctx_lens(ctx_lens: Sequence[int], caps, what: str, note=None):
     """Clamp per-sequence context lengths to their capacity, *loudly*.
 
     ``caps`` is a scalar (dense KV capacity) or a per-sequence sequence
@@ -83,6 +83,14 @@ def _clamp_ctx_lens(ctx_lens: Sequence[int], caps, what: str):
     only attend to what the backing store holds — but silently truncating
     hides bugs upstream (a scheduler admitting contexts the cache cannot
     hold), so overflow warns instead of passing unnoticed.
+
+    ``note(i) -> bool`` (optional) is consulted once per overflowing
+    sequence index: it records the occurrence wherever the caller keeps
+    stats and returns whether this sequence should still be *warned*
+    about. :meth:`repro.serving.kvpool.KVPagePool.note_ctx_overflow` uses
+    it to dedupe a stuck sequence's warning to once per admission while
+    counting every occurrence — without it a sequence pinned at its
+    capacity re-warns every tick.
     """
     n = len(ctx_lens)
     caps = [int(caps)] * n if np.ndim(caps) == 0 else [int(c) for c in caps]
@@ -92,6 +100,8 @@ def _clamp_ctx_lens(ctx_lens: Sequence[int], caps, what: str):
         for i, (c, cap) in enumerate(zip(ctx_lens, caps))
         if int(c) > cap
     ]
+    if note is not None:
+        over = [item for item in over if note(item[0])]
     if over:
         warnings.warn(
             f"{what}: context length exceeds KV capacity for sequences "
@@ -342,6 +352,7 @@ def lean_decode_paged(
     schedule_cache: Optional[ScheduleCache] = None,
     interpret: bool = False,
     return_lse: bool = False,
+    pool=None,
 ):
     """Convenience paged decode: builds (or cache-fetches) the schedule from
     host context lengths, then runs :func:`lean_decode_paged_from_schedule`.
@@ -353,6 +364,11 @@ def lean_decode_paged(
     When ``page_counts`` is omitted it is inferred from the table under the
     null-page convention (page 0 is never allocated, so non-null entries
     count allocated pages).
+
+    ``pool`` (optional :class:`~repro.serving.kvpool.KVPagePool`) dedupes
+    the overflow warning to once per (batch-row) sequence and counts every
+    occurrence in ``pool.stats.ctx_overflows`` — a stuck sequence stops
+    re-warning every tick.
     """
     B, Hq, d = q.shape
     num_pages, Hkv, page_size, _ = k_pool.shape
@@ -362,7 +378,8 @@ def lean_decode_paged(
     if page_counts is None:
         page_counts = (ptbl_np != 0).sum(axis=1)
     ctx_lens = _clamp_ctx_lens(
-        ctx_lens, np.asarray(page_counts) * page_size, "lean_decode_paged"
+        ctx_lens, np.asarray(page_counts) * page_size, "lean_decode_paged",
+        note=None if pool is None else pool.note_ctx_overflow,
     )
     ctx_lens = [max(1, c) for c in ctx_lens]        # schedule needs >= 1
     num_workers = num_workers or default_num_workers()
@@ -570,6 +587,7 @@ def lean_decode_cascade(
     schedule_cache: Optional[ScheduleCache] = None,
     interpret: bool = False,
     return_lse: bool = False,
+    pool=None,
 ):
     """Convenience cascade decode: builds (or cache-fetches) the cascade
     schedule + binding from host lengths/grouping, derives the phase
@@ -581,7 +599,8 @@ def lean_decode_cascade(
     exactly the output of
     :func:`repro.serving.prefix_cache.lcp_group_passes` over a radix-cache
     admission. Lengths clamp to allocated capacity like
-    :func:`lean_decode_paged`.
+    :func:`lean_decode_paged` (``pool`` dedupes the warning per sequence
+    and counts occurrences in the pool stats, same as there).
     """
     B, Hq, d = q.shape
     num_pages, Hkv, page_size, _ = k_pool.shape
@@ -590,7 +609,8 @@ def lean_decode_cascade(
         raise ValueError("page table rows must match the batch")
     page_counts = (ptbl_np != 0).sum(axis=1)
     ctx_lens = _clamp_ctx_lens(
-        ctx_lens, np.asarray(page_counts) * page_size, "lean_decode_cascade"
+        ctx_lens, np.asarray(page_counts) * page_size, "lean_decode_cascade",
+        note=None if pool is None else pool.note_ctx_overflow,
     )
     ctx_lens = [max(1, c) for c in ctx_lens]
     num_workers = num_workers or default_num_workers()

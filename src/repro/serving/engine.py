@@ -48,6 +48,7 @@ fetches KV tiles *through the page table* natively (tile == page);
 from __future__ import annotations
 
 import functools
+import time
 import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -88,9 +89,16 @@ from repro.models import (
     prefill_chunks,
 )
 from repro.models import supports_chunked_prefill as _cfg_supports_chunked
+from repro.serving.faults import FaultInjector, corrupt_trie_node
+from repro.serving.guards import (
+    DEGRADE_LEVELS,
+    FatalInvariantError,
+    GuardConfig,
+    PoisonError,
+)
 from repro.serving.kvpool import KVPagePool
 from repro.serving.prefix_cache import RadixPrefixCache, lcp_group_passes
-from repro.serving.telemetry import Histogram
+from repro.serving.telemetry import Gauge, Histogram
 
 import contextlib
 
@@ -145,6 +153,17 @@ class EngineStats:
     schedule_cache: dict = field(default_factory=dict)
     kv_pool: dict = field(default_factory=dict)
     prefix_cache: dict = field(default_factory=dict)
+    # self-healing / fault-injection telemetry (guards + FaultInjector)
+    nan_ticks: int = 0                # slot-ticks quarantined (non-finite)
+    degrade_escalations: int = 0      # slot moves DOWN the fallback chain
+    degrade_heals: int = 0            # slot moves back UP toward fast path
+    poisoned_slots: int = 0           # slots preempted after exhausting it
+    donation_aborts: int = 0          # prefix-cache donations unwound
+    audits_run: int = 0               # periodic invariant audit sweeps
+    audit_failures: int = 0           # audits that caught a violation
+    audit_repairs: int = 0            # violations fixed by repair()
+    degraded: dict = field(default_factory=dict)   # degraded-mode gauge
+    faults: dict = field(default_factory=dict)     # injector fire counts
     # per-tick prefill-vs-decode token split (capped like the schedule log)
     tick_prefill_tokens: List[int] = field(default_factory=list)
     tick_decode_tokens: List[int] = field(default_factory=list)
@@ -324,6 +343,45 @@ def _copy_page(cache, src, dst, *, cfg: ModelConfig):
     return out
 
 
+def _fill_page(cache, page, value, *, cfg: ModelConfig):
+    """Overwrite page ``page`` of every pooled ('attn') layer with a
+    constant. Two guard duties share this one trace (``page`` and ``value``
+    are traced scalars): NaN-poisoning a victim page under fault injection,
+    and zero-scrubbing a quarantined slot's private pages before they
+    return to the free list — recycled pages may be read through masked
+    tiles, where any *finite* garbage is harmless but NaN is not."""
+    out = []
+    for (pattern, reps), st_c in zip(cfg.stages, cache):
+        unit = []
+        for kind, lc in zip(pattern, st_c):
+            if kind == "attn":
+                nc = dict(lc)
+                for key in ("k", "v"):
+                    pool = lc[key]
+                    row = jnp.full(
+                        pool.shape[:1] + (1,) + pool.shape[2:],
+                        value, pool.dtype,
+                    )
+                    nc[key] = jax.lax.dynamic_update_slice_in_dim(
+                        pool, row, page, axis=1
+                    )
+                unit.append(nc)
+            else:
+                unit.append(lc)
+        out.append(tuple(unit))
+    return out
+
+
+def _screen_logits(logits):
+    """Guarded sampling: the greedy token AND a per-slot finiteness verdict
+    in one device round-trip — the NaN/Inf output guard costs one extra
+    ``all(isfinite)`` reduction fused into the argmax sync, nothing more."""
+    return (
+        jnp.argmax(logits, axis=-1).astype(jnp.int32),
+        jnp.all(jnp.isfinite(logits), axis=-1),
+    )
+
+
 def _kernel_decode_step(
     params,
     cache,
@@ -431,6 +489,8 @@ class DecodeEngine:
         cascade_grouping: str = "lcp",
         cascade_multi_level: bool = True,
         cascade_stable_ticks: int = 2,
+        faults: Optional[FaultInjector] = None,
+        guards: Optional[GuardConfig] = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -466,6 +526,27 @@ class DecodeEngine:
             jax.default_backend() == "cpu" if interpret is None else interpret
         )
         self.stats = EngineStats()
+
+        # fault injection + self-healing guards. Both default OFF; with
+        # neither configured every hot-path hook below is a single `is None`
+        # attribute test, keeping the hardened engine's fault-free tick
+        # byte-for-byte the old code path (the perf gate enforces <3%).
+        self.faults = faults
+        if guards is not None and not paged:
+            raise ValueError(
+                "guards (self-healing) require paged=True: quarantining a "
+                "slot masks it via null page-table rows, and poison "
+                "recovery is recompute-resume preemption — both are paged "
+                "mechanisms"
+            )
+        self.guard_cfg = guards
+        # per-slot position on the degraded-mode fallback chain
+        # (see guards.DEGRADE_LEVELS) + consecutive bad/good tick runs
+        self._slot_degrade = [0] * max_batch
+        self._slot_bad = [0] * max_batch
+        self._slot_good = [0] * max_batch
+        self.degraded_gauge = Gauge()
+        self._audit_clock = 0
 
         # tile is fixed per engine (schedule/jit key stability); the cache
         # capacity bounds every slot's visible context. Paged mode: lean
@@ -584,6 +665,10 @@ class DecodeEngine:
         self._jit_copy_page = jax.jit(
             functools.partial(_copy_page, cfg=cfg), donate_argnums=(0,)
         )
+        self._jit_fill_page = jax.jit(
+            functools.partial(_fill_page, cfg=cfg), donate_argnums=(0,)
+        )
+        self._jit_screen = jax.jit(_screen_logits)
 
     # ------------------------------------------------------------- schedule
     def _tick_schedule(self, ctx_lens=None) -> LeanSchedule:
@@ -689,14 +774,16 @@ class DecodeEngine:
         earlier KV, so it is rejected outright."""
         plen = len(req.prompt)
         if plen > self.pages_per_slot * self.tile:
-            raise RuntimeError(
+            # PoisonError (a RuntimeError): the request itself can never
+            # succeed — no amount of retry/backoff changes its size
+            raise PoisonError(
                 f"request uid={req.uid}: {plen}-token prompt exceeds the "
                 f"per-slot KV capacity ({self.pages_per_slot} pages x "
                 f"{self.tile} tokens) — raise cache_len or truncate"
             )
         min_pages = min(self.pages_per_slot, plen // self.tile + 1)
         if min_pages > self.pool.usable_pages:
-            raise RuntimeError(
+            raise PoisonError(
                 f"request uid={req.uid} needs {min_pages} KV "
                 f"pages ({plen}-token prompt @ page_size "
                 f"{self.tile}) but the pool holds only "
@@ -707,7 +794,13 @@ class DecodeEngine:
     def _pool_alloc(self, seq, n: int):
         """Pool allocation with radix-cache backpressure: on exhaustion,
         evict LRU unreferenced prefix-cache leaves and retry once. Cached
-        pages are *elastic* capacity — live requests always win."""
+        pages are *elastic* capacity — live requests always win.
+
+        Fault point 'page_alloc': an injected failure looks exactly like
+        pool exhaustion (returns None), so every caller exercises its real
+        retry/preempt/backoff path, not a test-only branch."""
+        if self.faults is not None and self.faults.fire("page_alloc"):
+            return None
         got = self.pool.alloc(seq, n)
         if got is None and self.prefix_cache is not None:
             need = n - self.pool.num_free
@@ -750,7 +843,13 @@ class DecodeEngine:
         """Copy-on-write logical tile ``t`` of ``slot`` before a KV write
         lands in a shared page: clone the page device-side onto a fresh one,
         swap the table entry, release the share. Returns False (state
-        unchanged) when no page can be allocated right now."""
+        unchanged) when no page can be allocated right now.
+
+        Fault point 'cow_clone': an injected failure mimics the
+        alloc-failed outcome (False, nothing mutated) — the caller's
+        preempt/retry handling is what gets exercised."""
+        if self.faults is not None and self.faults.fire("cow_clone"):
+            return False
         old = int(self.page_tbl[slot, t])
         got = self._pool_alloc(slot, 1)
         if got is None:
@@ -981,6 +1080,7 @@ class DecodeEngine:
         self.ctx_lens[slot] = 0
         self._slot_shared_tiles[slot] = set()
         self._slot_prefix_full[slot] = 0
+        self._reset_guard(slot)
         fresh = req.generated[req.folded :]
         req.prompt = np.concatenate(
             [np.asarray(req.prompt),
@@ -1023,7 +1123,14 @@ class DecodeEngine:
         if len(toks) == 0:
             return
         pages = self.page_tbl[slot, : -(-len(toks) // self.tile)].tolist()
-        self.prefix_cache.insert(toks.tolist(), pages)
+        # crash-consistent donation: insert() is all-or-nothing (it unwinds
+        # its own partial trie growth on failure), so a mid-donation fault
+        # costs only the cache entry — the finishing request still releases
+        # cleanly and the trie/pool invariants hold
+        try:
+            self.prefix_cache.insert(toks.tolist(), pages)
+        except Exception:
+            self.stats.donation_aborts += 1
 
     def release_slot(self, slot: int):
         """Finish a slot: donate its prefix to the radix cache (when one is
@@ -1033,6 +1140,7 @@ class DecodeEngine:
         self.slot_req[slot] = None
         self.ctx_lens[slot] = 0
         self._free_slot_pages(slot)
+        self._reset_guard(slot)
 
     def _free_slot_pages(self, slot: int):
         if self.paged:
@@ -1143,27 +1251,66 @@ class DecodeEngine:
         progress are untouched.
         """
         exclude = set(exclude) if exclude else set()
+        if self.faults is not None and self.faults.enabled:
+            self._fault_tick_hooks(exclude)
         active = [
             s for s in range(self.max_batch)
             if self.slot_req[s] and s not in exclude
         ]
         if self.paged:
             active = self._ensure_decode_pages(active)
+        if self.guard_cfg is not None:
+            self._run_audits()
         if not active:
+            if self.guard_cfg is not None:
+                self._update_degraded_gauge()
             return {}
 
-        ctx_np = self.ctx_lens.copy()
-        ptbl_np = self.page_tbl
-        if exclude:
-            if not self.use_fast_path:
-                raise RuntimeError("slot masking requires the fast path")
-            for s in exclude:
-                ctx_np[s] = 0
-            if self.paged:
-                ptbl_np = self.page_tbl.copy()
-                for s in exclude:
-                    ptbl_np[s, :] = 0
+        # partition the batch by degraded-mode level: healthy slots stay
+        # on the configured fast path (one pass, the common case is the
+        # whole batch), quarantined slots re-decode in separate passes
+        # down the fallback chain with everyone else masked out
+        guard_on = self.guard_cfg is not None and self.guard_cfg.nan_guard
+        if self.guard_cfg is None or not any(
+            self._slot_degrade[s] for s in active
+        ):
+            passes = [(0, active)]
+        else:
+            by_lvl: Dict[int, List[int]] = {}
+            for s in active:
+                by_lvl.setdefault(self._effective_level(s), []).append(s)
+            passes = sorted(by_lvl.items())
 
+        results = []
+        for lvl, slots in passes:
+            logits = self._decode_pass(lvl, slots, active, exclude)
+            if guard_on:
+                nxt, fin = self._jit_screen(logits)
+                results.append((slots, np.asarray(nxt), np.array(fin)))
+            else:
+                results.append(
+                    (slots, np.asarray(jnp.argmax(logits, axis=-1)), None)
+                )
+
+        # fault point 'nan_output': flip one victim's finiteness verdict —
+        # the guard reacts exactly as to a real non-finite logit row, with
+        # no device-side corruption left behind
+        if (
+            guard_on
+            and self.faults is not None
+            and self.faults.fire("nan_output")
+        ):
+            for v in self.faults.choose(active):
+                for slots, _, fin in results:
+                    if v in slots:
+                        fin[v] = False
+
+        return self._emit_tokens(results, guard_on)
+
+    def _decode_pass_main(self, active: List[int], ctx_np, ptbl_np):
+        """The engine's configured (level-0) decode path: cascade grouping
+        when eligible, else the fast-path kernel step, else the legacy
+        per-tick step. Updates ``self.cache`` and returns the logits."""
         csched = binding = None
         if self.use_fast_path and self.cascade and self.attn_backend == "lean":
             csched, binding = self._cascade_schedule_for_tick(active, ctx_np)
@@ -1250,9 +1397,67 @@ class DecodeEngine:
                         )
         else:
             logits = self._tick_legacy_step(active)
+        return logits
 
-        # one host sync for the whole batch
-        next_all = np.asarray(jnp.argmax(logits, axis=-1))
+    def _decode_pass(self, level, slots, active, exclude):
+        """One decode pass over ``slots`` at fallback-chain position
+        ``level`` (see :data:`guards.DEGRADE_LEVELS`). Slots outside the
+        pass are masked exactly like ``exclude`` slots — context forced to
+        0, page-table rows nulled — so the kernel neither reads their KV
+        nor writes anywhere real; a level-0 slot's token KV written by an
+        earlier pass this tick is never re-touched by a later pass.
+        Level 0 is the configured path (cascade grouping included);
+        levels 1/2 are the vanilla paged lean kernel fused / two-call;
+        level 3 the pure-jnp paged oracle."""
+        masked = exclude | (set(active) - set(slots))
+        ctx_np = self.ctx_lens.copy()
+        ptbl_np = self.page_tbl
+        if masked:
+            if not self.use_fast_path:
+                raise RuntimeError("slot masking requires the fast path")
+            for s in masked:
+                ctx_np[s] = 0
+            if self.paged:
+                ptbl_np = self.page_tbl.copy()
+                for s in masked:
+                    ptbl_np[s, :] = 0
+        if level == 0:
+            return self._decode_pass_main(slots, ctx_np, ptbl_np)
+        tokens = jnp.asarray(self.next_tokens)
+        ctx = jnp.asarray(ctx_np, jnp.int32)
+        ptbl = jnp.asarray(ptbl_np)
+        if level >= 3 or self.attn_backend != "lean":
+            logits, self.cache = self._jit_decode_paged(
+                self.params, self.cache, tokens, ctx, ptbl
+            )
+            return logits
+        sched = self._tick_schedule(ctx_np)
+        num_splits = fixed_split_factor(
+            int(sched.seg_len.max(initial=1)),
+            sched.num_segments, self.tile, self.num_workers,
+        )
+        with _quiet_donation():
+            logits, self.cache = self._jit_kernel_step_paged(
+                self.params, self.cache, tokens, ctx, ptbl,
+                backend="lean", sched=sched, num_splits=num_splits,
+                fused=(level == 1), interpret=self.interpret,
+            )
+        return logits
+
+    def _effective_level(self, s: int) -> int:
+        """A slot's fallback rung for this tick. Non-lean backends have no
+        intermediate lean rungs — any degradation goes straight to the
+        jnp oracle."""
+        lvl = self._slot_degrade[s]
+        if lvl == 0:
+            return 0
+        if self.attn_backend != "lean":
+            return 3
+        return lvl
+
+    def _emit_tokens(self, results, guard_on: bool) -> Dict[int, int]:
+        """Token emission + guard bookkeeping over this tick's pass
+        results (``[(slots, next_tokens, finite_or_None), ...]``)."""
         # context cap: the cache row, and in paged mode also the whole
         # pool — a context allowed past usable_pages * tile could never be
         # re-admitted after a recompute-resume preemption (its regrown
@@ -1262,28 +1467,201 @@ class DecodeEngine:
         if self.paged:
             cap = min(cap, self.pool.usable_pages * self.tile)
         out = {}
-        for s in active:
-            req = self.slot_req[s]
-            nxt = int(next_all[s])
-            req.generated.append(nxt)
-            self.next_tokens[s, 0] = nxt
-            self.ctx_lens[s] += 1
-            out[req.uid] = nxt
-            self.stats.tokens_generated += 1
-            if req.done or self.ctx_lens[s] >= cap - 1:
-                # finished sequences release their pages immediately (after
-                # offering their prefix to the radix cache) — this is what
-                # lets the pool admit more in-flight work than a dense
-                # worst-case cache could hold
-                self.release_slot(s)
+        n_emitted = 0
+        for slots, next_all, finite in results:
+            for s in slots:
+                req = self.slot_req[s]
+                if finite is not None and not bool(finite[s]):
+                    # quarantine: no token, context does not advance — the
+                    # slot re-executes this same step next tick, one level
+                    # further down the fallback chain
+                    self._on_bad_slot(s)
+                    continue
+                if guard_on and self._slot_degrade[s]:
+                    self._on_good_slot(s)
+                nxt = int(next_all[s])
+                req.generated.append(nxt)
+                self.next_tokens[s, 0] = nxt
+                self.ctx_lens[s] += 1
+                out[req.uid] = nxt
+                n_emitted += 1
+                self.stats.tokens_generated += 1
+                if req.done or self.ctx_lens[s] >= cap - 1:
+                    # finished sequences release their pages immediately
+                    # (after offering their prefix to the radix cache) —
+                    # this is what lets the pool admit more in-flight work
+                    # than a dense worst-case cache could hold
+                    self.release_slot(s)
         self.stats.ticks += 1
-        self._log_tick_tokens(self.stats.tick_decode_tokens, len(active))
+        self._log_tick_tokens(self.stats.tick_decode_tokens, n_emitted)
         self.stats.schedule_cache = self.sched_cache.stats.as_dict()
         if self.paged:
             self.stats.kv_pool = self.pool.as_dict()
         if self.prefix_cache is not None:
             self.stats.prefix_cache = self.prefix_cache.as_dict()
+        if self.guard_cfg is not None:
+            self._update_degraded_gauge()
+        if self.faults is not None:
+            self.stats.faults = self.faults.as_dict()
         return out
+
+    # --------------------------------------------------------- self-healing
+    def _on_bad_slot(self, s: int):
+        """A tick produced non-finite logits for slot ``s``: escalate one
+        level down the fallback chain, or — once the chain is exhausted for
+        ``poison_after`` consecutive ticks — poison the slot."""
+        gc = self.guard_cfg
+        self.stats.nan_ticks += 1
+        self._slot_good[s] = 0
+        if self._slot_degrade[s] < gc.max_degrade:
+            self._slot_degrade[s] += 1
+            self._slot_bad[s] = 0
+            self.stats.degrade_escalations += 1
+            return
+        self._slot_bad[s] += 1
+        if self._slot_bad[s] >= gc.poison_after:
+            self._poison_slot(s)
+
+    def _on_good_slot(self, s: int):
+        """A degraded slot produced a finite token: after ``heal_after``
+        consecutive clean ticks, step one level back toward the fast
+        path."""
+        self._slot_bad[s] = 0
+        self._slot_good[s] += 1
+        if self._slot_good[s] >= self.guard_cfg.heal_after:
+            self._slot_degrade[s] -= 1
+            self._slot_good[s] = 0
+            self.stats.degrade_heals += 1
+
+    def _poison_slot(self, s: int):
+        """Bottom-of-chain recovery: the slot's KV is presumed corrupt.
+        Scrub its private pages (zero-fill — recycled NaN pages could
+        poison an innocent slot through masked-tile reads), withdraw its
+        shared prefix pages from the radix cache (they are upstream of the
+        corruption), and preempt: recompute-resume rebuilds clean KV from
+        the prompt, which is the recovery that works when no alternate
+        kernel can."""
+        shared = self._slot_shared_tiles[s]
+        for t in range(self.pool.count(s)):
+            if t in shared:
+                continue
+            page = int(self.page_tbl[s, t])
+            if page:
+                with _quiet_donation():
+                    self.cache = self._jit_fill_page(
+                        self.cache, jnp.asarray(page, jnp.int32),
+                        jnp.asarray(0.0, jnp.float32),
+                    )
+        if self.prefix_cache is not None and shared:
+            self.prefix_cache.invalidate_pages(
+                {int(self.page_tbl[s, t]) for t in shared}
+            )
+        self.stats.poisoned_slots += 1
+        self._preempt(s)
+
+    def _reset_guard(self, s: int):
+        self._slot_degrade[s] = 0
+        self._slot_bad[s] = 0
+        self._slot_good[s] = 0
+
+    def _update_degraded_gauge(self):
+        n = sum(
+            1 for s in range(self.max_batch)
+            if self.slot_req[s] is not None and self._slot_degrade[s]
+        )
+        self.degraded_gauge.set(n)
+        self.stats.degraded = self.degraded_gauge.as_dict()
+
+    def _run_audits(self):
+        """Periodic invariant audits: every ``audit_interval`` decode calls
+        run ``pool.check()`` then ``prefix_cache.check()``; a violation
+        raises :class:`FatalInvariantError`, repairs in place, or logs,
+        per ``audit_action``. The pool audits first — trie repair frees
+        the cache's pages through the pool, so the pool must be sane."""
+        gc = self.guard_cfg
+        if gc.audit_interval <= 0:
+            return
+        self._audit_clock += 1
+        if self._audit_clock % gc.audit_interval:
+            return
+        self.stats.audits_run += 1
+        targets = []
+        if self.pool is not None:
+            targets.append(("kv_pool", self.pool))
+        if self.prefix_cache is not None:
+            targets.append(("prefix_cache", self.prefix_cache))
+        for name, obj in targets:
+            try:
+                obj.check()
+            except AssertionError as e:
+                self.stats.audit_failures += 1
+                if gc.audit_action == "raise":
+                    raise FatalInvariantError(
+                        f"{name} invariant audit failed: {e}"
+                    ) from e
+                if gc.audit_action == "repair":
+                    obj.repair()
+                    self.stats.audit_repairs += 1
+                    obj.check()     # repair must restore the invariants
+                else:
+                    warnings.warn(
+                        f"{name} invariant audit failed (action=log): {e}",
+                        RuntimeWarning,
+                    )
+
+    # ---------------------------------------------------------- fault hooks
+    def _fault_tick_hooks(self, exclude):
+        """Per-tick fault points (see :mod:`repro.serving.faults`):
+        wall-clock latency spikes, preemption storms, radix-trie node
+        corruption, and NaN writes into live KV pages. Runs before the
+        tick's active set is computed — where real faults would land."""
+        inj = self.faults
+        inj.advance()
+        if inj.fire("tick_latency"):
+            spec = inj.spec("tick_latency")
+            time.sleep(spec.magnitude if spec.magnitude > 0 else 0.002)
+        if self.paged and inj.fire("preempt_storm"):
+            spec = inj.spec("preempt_storm")
+            victims = [
+                s for s in range(self.max_batch)
+                if self.slot_req[s] is not None
+            ]
+            n = max(1, int(spec.magnitude))
+            for s in inj.choose(victims, n):
+                self._preempt(s)
+        if self.prefix_cache is not None and inj.fire("trie_corrupt"):
+            corrupt_trie_node(self.prefix_cache, inj.rng("trie_corrupt"))
+        if self.paged and inj.fire("nan_kv"):
+            self._inject_nan_kv(exclude)
+
+    def _inject_nan_kv(self, exclude):
+        """Real device-side corruption: overwrite one victim slot's
+        *private*, already-written KV page with NaN. Shared (radix) pages
+        are skipped here — the poison path invalidates those separately —
+        and so are slots with nothing written yet."""
+        cands = []
+        for s in range(self.max_batch):
+            if self.slot_req[s] is None or s in exclude:
+                continue
+            ctx = int(self.ctx_lens[s])
+            if ctx <= 0:
+                continue
+            n_read = min(-(-ctx // self.tile), self.pages_per_slot)
+            for t in range(n_read):
+                if (
+                    t not in self._slot_shared_tiles[s]
+                    and int(self.page_tbl[s, t]) != 0
+                ):
+                    cands.append((s, t))
+        if not cands:
+            return
+        s, t = self.faults.choose(cands)[0]
+        page = int(self.page_tbl[s, t])
+        with _quiet_donation():
+            self.cache = self._jit_fill_page(
+                self.cache, jnp.asarray(page, jnp.int32),
+                jnp.asarray(jnp.nan, jnp.float32),
+            )
 
     def _log_tick_tokens(self, log: List[int], n: int):
         log.append(n)

@@ -64,6 +64,8 @@ class PoolStats:
     share_calls: int = 0
     pages_shared: int = 0         # cumulative refcount increments via share
     pages_released: int = 0       # cumulative holder releases (any refcount)
+    ctx_overflows: int = 0        # ctx-length clamp events (every occurrence)
+    repairs: int = 0              # repair() invocations (audit self-healing)
 
     def as_dict(self) -> dict:
         return {
@@ -77,6 +79,8 @@ class PoolStats:
             "share_calls": self.share_calls,
             "pages_shared": self.pages_shared,
             "pages_released": self.pages_released,
+            "ctx_overflows": self.ctx_overflows,
+            "repairs": self.repairs,
         }
 
 
@@ -107,6 +111,9 @@ class KVPagePool:
         self._free: List[int] = list(range(self.num_pages - 1, 0, -1))
         self._seq_pages: Dict[Hashable, List[int]] = {}
         self._refcount: Dict[int, int] = {}
+        # sequences that already warned about a ctx-overflow clamp — the
+        # kernel wrappers warn once per stuck sequence, not once per tick
+        self._overflow_warned: set = set()
         self.stats = PoolStats()
         self.on_admit: List[Callable[[Hashable, List[int]], None]] = []
         self.on_evict: List[Callable[[Hashable, List[int]], None]] = []
@@ -152,6 +159,18 @@ class KVPagePool:
         """Tokens the sequence's held pages can hold — the clamp bound
         used by :func:`repro.kernels.ops.lean_decode_paged`."""
         return self.count(seq) * self.page_size
+
+    def note_ctx_overflow(self, seq: Hashable) -> bool:
+        """Record one ctx-length clamp event for ``seq``. Every occurrence
+        counts in ``stats.ctx_overflows``; the return value is True only
+        the *first* time for this sequence — the kernel wrappers use it to
+        dedupe the per-tick ``RuntimeWarning`` of a stuck sequence to a
+        single warning (the counter keeps the full occurrence tally)."""
+        self.stats.ctx_overflows += 1
+        if seq in self._overflow_warned:
+            return False
+        self._overflow_warned.add(seq)
+        return True
 
     # ------------------------------------------------------------- alloc/free
     def alloc(self, seq: Hashable, n: int = 1) -> Optional[List[int]]:
@@ -246,6 +265,7 @@ class KVPagePool:
         if seq not in self._seq_pages:
             raise KeyError(f"unknown sequence {seq!r}")
         pages = self._seq_pages.pop(seq)
+        self._overflow_warned.discard(seq)   # a re-admitted seq warns afresh
         self.stats.free_calls += 1
         if eviction:
             self.stats.evictions += 1
@@ -272,6 +292,56 @@ class KVPagePool:
         return np.stack([self.table_row(s, width) for s in seqs])
 
     # ------------------------------------------------------------- invariants
+    def repair(self) -> dict:
+        """Rebuild the derived allocator state from the holder lists.
+
+        The per-sequence page lists are the ground truth (they are what
+        the engine's page tables were built from); refcounts and the free
+        list are derived views that corruption (or a bug) can desynchronize.
+        Repair: dedupe each sequence's holdings (a sequence must never
+        hold a page twice), drop null/out-of-range entries, recompute
+        every refcount from the holder lists, and rebuild the free list
+        as exactly the non-held usable pages — which also recovers leaked
+        pages (neither held nor free). Returns a summary of what was
+        fixed; a consistent pool is a no-op (summary of zeros) and
+        ``check()`` passes by construction afterwards.
+        """
+        fixed = {"dropped_holdings": 0, "refcount_fixes": 0,
+                 "leaked_pages": 0, "freelist_fixes": 0}
+        for seq in list(self._seq_pages):
+            seen: set = set()
+            clean: List[int] = []
+            for p in self._seq_pages[seq]:
+                p = int(p)
+                if p in seen or not 1 <= p < self.num_pages:
+                    fixed["dropped_holdings"] += 1
+                    continue
+                seen.add(p)
+                clean.append(p)
+            if clean:
+                self._seq_pages[seq] = clean
+            else:
+                del self._seq_pages[seq]
+        holders: Dict[int, int] = {}
+        for pages in self._seq_pages.values():
+            for p in pages:
+                holders[p] = holders.get(p, 0) + 1
+        fixed["refcount_fixes"] = sum(
+            1 for p in set(holders) | set(self._refcount)
+            if holders.get(p) != self._refcount.get(p)
+        )
+        self._refcount = holders
+        prev_free = set(self._free)
+        free = [p for p in range(self.num_pages - 1, 0, -1)
+                if p not in holders]
+        fixed["leaked_pages"] = sum(
+            1 for p in free if p not in prev_free
+        )
+        fixed["freelist_fixes"] = len(prev_free.symmetric_difference(free))
+        self._free = free
+        self.stats.repairs += 1
+        return fixed
+
     def check(self) -> None:
         """Assert the pool accounting invariants (tests / debug ticks)."""
         holders: Dict[int, int] = {}

@@ -94,6 +94,9 @@ class PrefixCacheStats:
     evicted_pages: int = 0
     partial_matches: int = 0      # lookups whose match ended on a partial node
     aliased_insert_skips: int = 0  # donations refused: page backs another node
+    aborted_inserts: int = 0      # donations rolled back mid-way (all-or-nothing)
+    invalidated_pages: int = 0    # nodes dropped by invalidate_pages()
+    repairs: int = 0              # repair() invocations (audit self-healing)
 
     @property
     def hit_rate(self) -> float:
@@ -112,6 +115,9 @@ class PrefixCacheStats:
             "evicted_pages": self.evicted_pages,
             "partial_matches": self.partial_matches,
             "aliased_insert_skips": self.aliased_insert_skips,
+            "aborted_inserts": self.aborted_inserts,
+            "invalidated_pages": self.invalidated_pages,
+            "repairs": self.repairs,
         }
 
 
@@ -216,6 +222,12 @@ class RadixPrefixCache:
 
         Descent stops at the first skipped block boundary mismatch — a
         child chain must stay contiguous from the root.
+
+        Donation is **all-or-nothing**: a failure partway through (a
+        ``pool.share`` that raises — e.g. under fault injection or after
+        state corruption) unwinds every node this call created before
+        re-raising, so a crashed finish can never leave a half-donated
+        chain in the trie.
         """
         toks = [int(t) for t in tokens]
         ps = self.page_size
@@ -225,6 +237,8 @@ class RadixPrefixCache:
                 f"{len(toks)} tokens need {nfull + (1 if j else 0)} pages, "
                 f"got {len(pages)}"
             )
+        created: List[_Node] = []
+
         def take_block(node: _Node, block: Tuple[int, ...],
                        page: int, n_tokens: int) -> Optional[_Node]:
             """Donate one page as a child of ``node``; None = alias stop.
@@ -243,37 +257,46 @@ class RadixPrefixCache:
             self._num_nodes += 1
             self._pages.add(page)
             self.stats.inserted_pages += 1
+            created.append(child)
             return child
 
         node = self.root
-        taken = 0
         last = None
-        for b in range(nfull):
-            block = tuple(toks[b * ps : (b + 1) * ps])
-            child = node.children.get(block)
-            if child is not None and child.n_tokens == ps:
-                self.stats.dedup_insert_pages += 1
-            else:
-                child = take_block(node, block, int(pages[b]), ps)
-                if child is None:
-                    break
-                taken += 1
-            node = last = child
-        else:
-            if j:
-                block = tuple(toks[nfull * ps :])
+        try:
+            for b in range(nfull):
+                block = tuple(toks[b * ps : (b + 1) * ps])
                 child = node.children.get(block)
-                if child is not None:
+                if child is not None and child.n_tokens == ps:
                     self.stats.dedup_insert_pages += 1
-                    last = child
                 else:
-                    child = take_block(node, block, int(pages[nfull]), j)
+                    child = take_block(node, block, int(pages[b]), ps)
+                    if child is None:
+                        break
+                node = last = child
+            else:
+                if j:
+                    block = tuple(toks[nfull * ps :])
+                    child = node.children.get(block)
                     if child is not None:
-                        taken += 1
+                        self.stats.dedup_insert_pages += 1
                         last = child
+                    else:
+                        child = take_block(node, block, int(pages[nfull]), j)
+                        if child is not None:
+                            last = child
+        except Exception:
+            # crash-consistent finish: roll the whole donation back
+            for child in reversed(created):
+                del child.parent.children[child.block]
+                self.pool.release_pages(CACHE_SEQ, [child.page])
+                self._pages.discard(child.page)
+                self._num_nodes -= 1
+                self.stats.inserted_pages -= 1
+            self.stats.aborted_inserts += 1
+            raise
         if last is not None:
             self._touch(last)
-        return taken
+        return len(created)
 
     # ----------------------------------------------------------------- evict
     def evictable_leaves(self) -> List[_Node]:
@@ -326,6 +349,59 @@ class RadixPrefixCache:
             if freed == 0:
                 break
         return n
+
+    def invalidate_pages(self, pages) -> int:
+        """Drop every trie node backed by one of ``pages`` — together with
+        its whole subtree (a child's KV is only valid below its ancestors'
+        tokens, so a removed ancestor invalidates the chain). Used by the
+        engine's poison path: a slot presumed KV-corrupt withdraws its
+        shared prefix pages from the cache so no future request maps them.
+        Live requests already sharing those pages keep their refs; the
+        cache just stops handing the pages out. Returns nodes removed."""
+        bad = {int(p) for p in pages}
+        if not bad:
+            return 0
+        removed = 0
+
+        def drop_subtree(node: _Node) -> int:
+            n = 1
+            for child in list(node.children.values()):
+                n += drop_subtree(child)
+            self.pool.release_pages(CACHE_SEQ, [node.page])
+            self._pages.discard(node.page)
+            self._num_nodes -= 1
+            return n
+
+        def walk(node: _Node):
+            nonlocal removed
+            for block, child in list(node.children.items()):
+                if child.page in bad:
+                    del node.children[block]
+                    removed += drop_subtree(child)
+                else:
+                    walk(child)
+
+        walk(self.root)
+        self.stats.invalidated_pages += removed
+        return removed
+
+    def repair(self) -> int:
+        """Reset the trie to empty and release every page the pool records
+        under the cache's holder key — the recovery action for a failed
+        ``check()`` (the trie's host structures are presumed corrupt, so
+        nothing in them can be trusted enough for a surgical fix; future
+        donations repopulate the cache). Safe against arbitrary internal
+        inconsistency because it only consults the *pool's* records.
+        Returns the number of page references released."""
+        released = 0
+        if self.pool.holds(CACHE_SEQ):
+            released = len(self.pool.pages_of(CACHE_SEQ))
+            self.pool.free_seq(CACHE_SEQ)
+        self.root = _Node((), -1, 0, None)
+        self._pages = set()
+        self._num_nodes = 0
+        self.stats.repairs += 1
+        return released
 
     # ------------------------------------------------------------ invariants
     def check(self) -> None:

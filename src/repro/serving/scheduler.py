@@ -50,6 +50,8 @@ class RequestState(Enum):
     PREFILLING = "prefilling"
     DECODING = "decoding"
     FINISHED = "finished"
+    FAILED = "failed"          # poisoned: deadline/preemption budget spent
+    CANCELLED = "cancelled"    # caller withdrew the request
 
 
 @dataclass
@@ -70,6 +72,21 @@ class SchedulerConfig:
     chunked: Optional[bool] = None        # None -> auto-detect from engine
     policy: str = "fcfs"                  # 'fcfs' | 'priority'
     starvation_bound: int = 64            # scheduler steps
+    # --- robustness knobs (all default-off / unbounded = old behavior) ---
+    # TTFT deadline in scheduler steps: a request still first-token-less
+    # this many steps after (re-)queueing expires — it is requeued with
+    # backoff, and after ``max_deadline_misses`` expiries poison-failed
+    deadline_steps: Optional[int] = None
+    max_deadline_misses: int = 3
+    # bounded exponential backoff for failed admissions (pool pressure):
+    # 0 disables (head-of-line blocks exactly as before); > 0 delays the
+    # failed request ``min(cap, base << (failures-1))`` steps and lets
+    # younger requests admit past it meanwhile
+    retry_backoff: int = 0
+    retry_backoff_cap: int = 64
+    # a request preempted more than this many times is poison-failed
+    # (None = never — the old unbounded recompute-resume behavior)
+    max_preemptions: Optional[int] = None
 
     def __post_init__(self):
         if self.policy not in ("fcfs", "priority"):
@@ -78,6 +95,14 @@ class SchedulerConfig:
             raise ValueError("chunk_size and prefill_pack must be positive")
         if self.starvation_bound <= 0:
             raise ValueError("starvation_bound must be positive")
+        if self.deadline_steps is not None and self.deadline_steps <= 0:
+            raise ValueError("deadline_steps must be positive (or None)")
+        if self.max_deadline_misses < 1:
+            raise ValueError("max_deadline_misses must be >= 1")
+        if self.retry_backoff < 0 or self.retry_backoff_cap < 1:
+            raise ValueError("retry_backoff >= 0, retry_backoff_cap >= 1")
+        if self.max_preemptions is not None and self.max_preemptions < 1:
+            raise ValueError("max_preemptions must be >= 1 (or None)")
 
 
 @dataclass
@@ -99,6 +124,12 @@ class ScheduledRequest:
     first_token_time: float = -1.0
     last_token_time: float = -1.0
     preemptions: int = 0
+    deadline_at: int = -1                 # step the TTFT deadline expires
+    deadline_window: int = -1             # the deadline's length in steps
+    deadline_misses: int = 0
+    not_before: int = 0                   # admission backoff: skip until
+    admit_failures: int = 0               # consecutive failed admissions
+    error: Optional[str] = None           # set when state is FAILED
 
     @property
     def uid(self) -> int:
@@ -124,6 +155,10 @@ class SchedulerStats:
     chunks: int = 0
     stalled_chunk_ticks: int = 0          # ticks where page pressure held
     deadlock_preemptions: int = 0         # chunks back entirely
+    deadline_expirations: int = 0         # TTFT deadline misses (each one)
+    cancellations: int = 0                # caller-cancelled requests
+    poisoned: int = 0                     # requests poison-failed
+    admit_backoffs: int = 0               # failed admissions that backed off
     queue_depth: List[int] = field(default_factory=list)
     # admission audit trail for the starvation-bound invariant: one record
     # per admission (step, uid, age, #starving requests passed over)
@@ -172,10 +207,12 @@ class Scheduler:
         priority: int = 0,
         on_token: Optional[Callable[[int, int, bool], None]] = None,
         uid: Optional[int] = None,
+        deadline_steps: Optional[int] = None,
     ) -> ScheduledRequest:
         """Enqueue a request; returns its handle immediately. Tokens stream
         through ``on_token(uid, token, done)`` as :meth:`step` produces
-        them and accumulate in ``handle.generated``."""
+        them and accumulate in ``handle.generated``. ``deadline_steps``
+        overrides the config-level TTFT deadline for this request."""
         prompt = np.asarray(prompt, dtype=np.int32)
         if prompt.size == 0:
             raise ValueError("empty prompt (nothing to prefill)")
@@ -199,6 +236,13 @@ class Scheduler:
             enqueue_time=now,
         )
         self._arrival_seq += 1
+        ttft_deadline = (
+            deadline_steps if deadline_steps is not None
+            else self.config.deadline_steps
+        )
+        if ttft_deadline is not None:
+            sr.deadline_window = int(ttft_deadline)
+            sr.deadline_at = sr.arrival_step + sr.deadline_window
         self.requests[uid] = sr
         self.queue.append(sr)
         return sr
@@ -217,6 +261,17 @@ class Scheduler:
         sr.slot = -1
         sr.prefill_done = 0           # recompute-resume restarts the prompt
         sr.preemptions += 1
+        cfg = self.config
+        if (
+            cfg.max_preemptions is not None
+            and sr.preemptions > cfg.max_preemptions
+        ):
+            # a request thrashed off its slot this many times is poison:
+            # under sustained pressure its recompute-resume work would
+            # starve everyone else forever
+            self._fail(sr, f"preempted {sr.preemptions}x "
+                           f"(max_preemptions={cfg.max_preemptions})")
+            return
         sr.enqueue_time = time.perf_counter()
         self.queue.insert(0, sr)
 
@@ -267,15 +322,36 @@ class Scheduler:
             time.perf_counter() - sr.enqueue_time
         )
 
+    def _admit_backoff(self, sr: ScheduledRequest):
+        """A failed admission (pool pressure): with ``retry_backoff``
+        configured, delay this request's next attempt exponentially (so
+        younger requests can admit past the blocked head meanwhile);
+        without it, the old head-of-line semantics apply unchanged."""
+        cfg = self.config
+        if cfg.retry_backoff <= 0:
+            return
+        sr.admit_failures += 1
+        delay = min(
+            cfg.retry_backoff_cap,
+            cfg.retry_backoff << (sr.admit_failures - 1),
+        )
+        sr.not_before = self.stats.steps + delay
+        self.stats.admit_backoffs += 1
+
     def _admit(self):
         if not self.queue:
             return
         self._order_queue()
-        while self.queue and self.engine.free_slots():
-            sr = self.queue[0]
+        i = 0
+        while i < len(self.queue) and self.engine.free_slots():
+            sr = self.queue[i]
+            if sr.not_before > self.stats.steps:
+                i += 1                    # backing off; try the next request
+                continue
             if self.chunked:
                 slot = self.engine.claim_slot(sr.req)
                 if slot is None:
+                    self._admit_backoff(sr)
                     break
                 sr.state = RequestState.PREFILLING
                 # radix prefix cache: matched prompt tokens map their cached
@@ -288,9 +364,14 @@ class Scheduler:
             else:
                 slot = self.engine.free_slots()[0]
                 if not self.engine.admit_blocking(sr.req, slot):
-                    break                 # pool exhausted; retry next step
-                sr.state = RequestState.DECODING
-            self.queue.pop(0)
+                    # pool exhausted; retry next step (with backoff when
+                    # configured — capacity pressure is global, so stop
+                    # scanning either way)
+                    self._admit_backoff(sr)
+                    break
+            self.queue.pop(i)
+            sr.not_before = 0
+            sr.admit_failures = 0
             sr.slot = slot
             self._slot_sr[slot] = sr
             self._record_admission(sr)
@@ -405,6 +486,78 @@ class Scheduler:
         if sr.on_token:
             sr.on_token(sr.uid, tok, done)
 
+    def _fail(self, sr: ScheduledRequest, msg: str):
+        """Poison-fail a request: terminal FAILED state, never retried.
+        The caller is responsible for having detached it from the queue
+        and any slot first."""
+        if sr.slot >= 0:
+            self._slot_sr.pop(sr.slot, None)
+            sr.slot = -1
+        sr.state = RequestState.FAILED
+        sr.error = msg
+        self.stats.poisoned += 1
+        self.requests.pop(sr.uid, None)
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a request wherever it is in the lifecycle: QUEUED leaves
+        the queue; PREFILLING/DECODING frees the slot (pages released, a
+        finished-enough prefix still donated to the radix cache). Returns
+        False for unknown / already-terminal uids."""
+        sr = self.requests.get(uid)
+        if sr is None:
+            return False
+        if sr in self.queue:
+            self.queue.remove(sr)
+        if sr.slot >= 0:
+            slot = sr.slot
+            self._slot_sr.pop(slot, None)
+            sr.slot = -1
+            self.engine.release_slot(slot)
+        sr.state = RequestState.CANCELLED
+        self.stats.cancellations += 1
+        self.requests.pop(uid, None)
+        return True
+
+    def _check_deadlines(self):
+        """TTFT deadline sweep (runs before admission each step): a request
+        past its deadline with no first token yet is pulled back — a
+        PREFILLING occupant frees its slot and pool pages — and requeued
+        with exponential backoff and a fresh deadline window; a repeat
+        offender (``max_deadline_misses``) is poison-failed instead of
+        wedging a slot forever."""
+        cfg = self.config
+        now = self.stats.steps
+        expired = [
+            sr for sr in list(self.requests.values())
+            if sr.deadline_at >= 0
+            and now > sr.deadline_at
+            and sr.first_token_time < 0
+            and sr.state in (RequestState.QUEUED, RequestState.PREFILLING)
+        ]
+        for sr in expired:
+            sr.deadline_misses += 1
+            self.stats.deadline_expirations += 1
+            if sr.state is RequestState.PREFILLING:
+                # routes through _on_preempt: state -> QUEUED, queue front
+                # (and the preemption budget check, which may fail it)
+                self.engine.preempt_slot(sr.slot)
+                if sr.state is RequestState.FAILED:
+                    continue
+            if sr.deadline_misses >= cfg.max_deadline_misses:
+                if sr in self.queue:
+                    self.queue.remove(sr)
+                self._fail(
+                    sr, f"TTFT deadline ({sr.deadline_window} steps) "
+                        f"missed {sr.deadline_misses}x"
+                )
+                continue
+            base = max(1, cfg.retry_backoff)
+            delay = min(
+                cfg.retry_backoff_cap, base << (sr.deadline_misses - 1)
+            )
+            sr.not_before = now + delay
+            sr.deadline_at = sr.not_before + max(1, sr.deadline_window)
+
     def _finish(self, sr: ScheduledRequest, free_engine_slot: bool = False):
         slot = sr.slot
         if free_engine_slot and slot >= 0:
@@ -429,6 +582,7 @@ class Scheduler:
         stream via callbacks and ``handle.generated``)."""
         self.stats.steps += 1
         self.stats.log_depth(len(self.queue))
+        self._check_deadlines()
         self._admit()
         if self.chunked:
             self._run_prefill()
@@ -471,6 +625,10 @@ class Scheduler:
             "policy": self.config.policy,
             "stalled_chunk_ticks": self.stats.stalled_chunk_ticks,
             "deadlock_preemptions": self.stats.deadlock_preemptions,
+            "deadline_expirations": self.stats.deadline_expirations,
+            "cancellations": self.stats.cancellations,
+            "poisoned": self.stats.poisoned,
+            "admit_backoffs": self.stats.admit_backoffs,
             "queue_depth_max": max(self.stats.queue_depth, default=0),
             "prefill_tokens": es.prefill_tokens,
             "tokens_generated": es.tokens_generated,
@@ -484,5 +642,16 @@ class Scheduler:
             "cascade_stability_skips": es.cascade_stability_skips,
             "cascade_levels_max": es.cascade_levels_max,
             "prefix_cache": dict(es.prefix_cache),
+            # self-healing / fault telemetry (engine-side)
+            "nan_ticks": es.nan_ticks,
+            "degrade_escalations": es.degrade_escalations,
+            "degrade_heals": es.degrade_heals,
+            "poisoned_slots": es.poisoned_slots,
+            "donation_aborts": es.donation_aborts,
+            "audits_run": es.audits_run,
+            "audit_failures": es.audit_failures,
+            "audit_repairs": es.audit_repairs,
+            "degraded": dict(es.degraded),
+            "faults": dict(es.faults),
             **es.latency_dict(),
         }

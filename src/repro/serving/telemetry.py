@@ -14,7 +14,44 @@ import bisect
 import math
 from typing import List, Optional, Sequence
 
-__all__ = ["Histogram"]
+__all__ = ["Histogram", "Gauge"]
+
+
+class Gauge:
+    """A current-value gauge with peak and time-above-zero tracking.
+
+    Used for the engine's degraded-mode gauge: ``value`` is the number of
+    slots currently off the fast path, ``peak`` the worst simultaneous
+    degradation seen, and ``ticks_nonzero`` how many updates observed a
+    non-zero value — the chaos suite asserts the gauge returns to 0
+    within a bounded number of fault-free ticks."""
+
+    def __init__(self):
+        self.value = 0
+        self.peak = 0
+        self.updates = 0
+        self.ticks_nonzero = 0
+
+    def set(self, value: int) -> None:
+        self.value = int(value)
+        self.peak = max(self.peak, self.value)
+        self.updates += 1
+        if self.value:
+            self.ticks_nonzero += 1
+
+    def as_dict(self) -> dict:
+        return {
+            "value": self.value,
+            "peak": self.peak,
+            "updates": self.updates,
+            "ticks_nonzero": self.ticks_nonzero,
+        }
+
+    def __repr__(self):
+        return (
+            f"Gauge(value={self.value}, peak={self.peak}, "
+            f"nonzero={self.ticks_nonzero}/{self.updates})"
+        )
 
 
 def default_bounds(

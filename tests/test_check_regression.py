@@ -25,6 +25,7 @@ DOC = {
             }
         },
     },
+    "hardening": {"hardened_over_plain_throughput": 1.0},
 }
 
 
@@ -59,6 +60,38 @@ def test_missing_suite_in_current_fails():
     _rows, failures = check(cur, DOC)
     assert "prefix_mixed_lcp_passes" in failures
     assert "prefix_mixed_fused" in failures
+
+
+def test_missing_suite_verdict_is_distinct_from_missing_metric():
+    """A whole top-level section absent (the bench never ran / silently
+    skipped) must read differently from a section that ran but dropped
+    the gated metric (a rename broke the contract)."""
+    no_suite = copy.deepcopy(DOC)
+    del no_suite["hardening"]
+    rows, failures = check(no_suite, DOC)
+    verdicts = {r[0]: r[4] for r in rows}
+    assert "hardening" in failures
+    assert verdicts["hardening"] == "FAIL (missing suite)"
+
+    no_metric = copy.deepcopy(DOC)
+    del no_metric["hardening"]["hardened_over_plain_throughput"]
+    rows, failures = check(no_metric, DOC)
+    verdicts = {r[0]: r[4] for r in rows}
+    assert "hardening" in failures
+    assert verdicts["hardening"] == "FAIL (metric missing)"
+
+
+def test_hardening_gated_at_tight_threshold():
+    """The hardened-vs-plain ratio has its own 3% contract: a 5% overhead
+    must trip the gate even though it is far inside the default 15% noise
+    bar (and a 1% wobble must not)."""
+    cur = copy.deepcopy(DOC)
+    cur["hardening"]["hardened_over_plain_throughput"] = 0.95
+    _rows, failures = check(cur, DOC)
+    assert failures == ["hardening"]
+    cur["hardening"]["hardened_over_plain_throughput"] = 0.99
+    _rows, failures = check(cur, DOC)
+    assert failures == []
 
 
 def test_metric_missing_from_baseline_is_skipped():
