@@ -53,6 +53,8 @@ METRICS = {
         "prefix", "mixed_depth", "headline", "fused_over_two_call_speedup",
     ),
     "hardening": ("hardening", "hardened_over_plain_throughput"),
+    "quant_capacity": ("quant", "capacity_ratio_vs_bf16"),
+    "quant_agreement": ("quant", "token_agreement"),
 }
 
 # per-metric regression thresholds overriding the CLI default: the
@@ -60,6 +62,12 @@ METRICS = {
 # contract (< 3%), not a noise bar
 THRESHOLDS = {
     "hardening": 0.03,
+    # layout math, not wall-clock: any drop means the dtype accounting
+    # (page_bytes / scale sidecar) regressed, so gate it tight
+    "quant_capacity": 0.01,
+    # greedy decode on fixed seeds is deterministic on the CI host; a
+    # real numerics regression moves agreement far more than 5%
+    "quant_agreement": 0.05,
 }
 
 

@@ -91,12 +91,16 @@ def _device_ms_per_tick(eng, n_reps=8):
 
 def _attn_kv_bytes(eng) -> int:
     """Bytes held by global-attention KV state (dense slot rows, or the
-    page pools in paged mode)."""
+    page pools in paged mode), including any quantization scale sidecars
+    — they are real device footprint."""
     total = 0
     for (pattern, reps), st_c in zip(eng.cfg.stages, eng.cache):
         for kind, lc in zip(pattern, st_c):
             if kind == "attn":
                 total += lc["k"].nbytes + lc["v"].nbytes
+                for key in ("k_scale", "v_scale"):
+                    if key in lc:
+                        total += lc[key].nbytes
     return total
 
 
@@ -301,6 +305,67 @@ def _run_hardening_section(cfg, params, n_ticks: int) -> dict:
     }
 
 
+def _run_quant_section(cfg, params, n_ticks: int) -> dict:
+    """int8 page quantization: effective pool capacity per byte vs bf16
+    (the headline — page_bytes straight from the pool's layout
+    descriptor, scale sidecar included), device KV footprint, decode
+    throughput, and a greedy-token agreement probe (quantization may
+    legitimately flip a near-tie argmax, so agreement is a fraction, not
+    an identity)."""
+    import numpy as np
+
+    from repro.serving.engine import DecodeEngine, Request
+
+    def mk(**kw):
+        return _mk_engine(
+            cfg, params, "lean", use_fast_path=True, fused=True,
+            paged=True, page_size=16, **kw,
+        )
+
+    eng_bf16 = mk()
+    tps_bf16, _ = _ticks_per_sec(eng_bf16, cfg, n_ticks)
+    eng_int8 = mk(kv_dtype="int8")
+    tps_int8, _ = _ticks_per_sec(eng_int8, cfg, n_ticks)
+
+    lay16, lay8 = eng_bf16.pool.layout, eng_int8.pool.layout
+    capacity = lay16.page_bytes / lay8.page_bytes
+
+    # token-agreement probe on fresh engines (finite requests, greedy)
+    def streams(**kw):
+        eng = mk(**kw)
+        rng = np.random.default_rng(3)
+        reqs = [
+            Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, 6 + 3 * i),
+                    max_new_tokens=12)
+            for i in range(3)
+        ]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_to_completion(max_ticks=200)
+        return [r.generated for r in reqs]
+
+    base, quant = streams(), streams(kv_dtype="int8")
+    agree = sum(
+        x == y for a, b in zip(base, quant) for x, y in zip(a, b)
+    )
+    total = sum(len(a) for a in base)
+
+    return {
+        "layout_bf16": lay16.as_dict(),
+        "layout_int8": lay8.as_dict(),
+        "capacity_ratio_vs_bf16": capacity,
+        "kv_bytes_per_token_bf16": lay16.page_bytes / lay16.page_size,
+        "kv_bytes_per_token_int8": lay8.page_bytes / lay8.page_size,
+        "attn_kv_bytes_bf16": _attn_kv_bytes(eng_bf16),
+        "attn_kv_bytes_int8": _attn_kv_bytes(eng_int8),
+        "ticks_per_sec_bf16": tps_bf16,
+        "ticks_per_sec_int8": tps_int8,
+        "int8_over_bf16_throughput": tps_int8 / tps_bf16,
+        "token_agreement": agree / total,
+        "tokens_compared": total,
+    }
+
+
 def run_decode_step(n_ticks: int = 24, out_path: str = "BENCH_decode_step.json",
                     rows: list | None = None) -> dict:
     import jax
@@ -346,6 +411,7 @@ def run_decode_step(n_ticks: int = 24, out_path: str = "BENCH_decode_step.json",
     result["paged"] = _run_paged_section(cfg, params, n_ticks)
     result["scheduler"] = _run_scheduler_section(cfg, params)
     result["hardening"] = _run_hardening_section(cfg, params, n_ticks)
+    result["quant"] = _run_quant_section(cfg, params, n_ticks)
     Path(out_path).write_text(json.dumps(result, indent=1))
     if rows is not None:
         d = result["decode_step"]
@@ -367,6 +433,11 @@ def run_decode_step(n_ticks: int = 24, out_path: str = "BENCH_decode_step.json",
                      s["blocking"]["ttft_long_s"]))
         rows.append(("decode_step_hardened_over_plain", 0.0,
                      result["hardening"]["hardened_over_plain_throughput"]))
+        qn = result["quant"]
+        rows.append(("decode_step_quant_capacity_ratio", 0.0,
+                     qn["capacity_ratio_vs_bf16"]))
+        rows.append(("decode_step_quant_token_agreement", 0.0,
+                     qn["token_agreement"]))
     return result
 
 
@@ -412,6 +483,15 @@ def main():
         f"hardening: {h['ticks_per_sec_hardened']:.2f} ticks/s hardened vs "
         f"{h['ticks_per_sec_plain']:.2f} plain "
         f"({h['hardened_over_plain_throughput']:.3f}x, gate >= 0.97)"
+    )
+    qn = result["quant"]
+    print(
+        f"quant: {qn['capacity_ratio_vs_bf16']:.2f}x effective pool "
+        f"capacity ({qn['kv_bytes_per_token_int8']:.0f} vs "
+        f"{qn['kv_bytes_per_token_bf16']:.0f} KV bytes/token); "
+        f"{qn['ticks_per_sec_int8']:.2f} ticks/s int8 vs "
+        f"{qn['ticks_per_sec_bf16']:.2f} bf16; token agreement "
+        f"{qn['token_agreement']:.2f}"
     )
 
 

@@ -93,6 +93,116 @@ def paged_scatter_tokens(
     )
 
 
+# ------------------------------------------------------------ quantized KV
+# Symmetric int8 page storage: pool values are round(x / scale) with one
+# f32 scale per (page, kv_head) (or per page, stored broadcast across the
+# head axis so the kernel-side layout never changes). Scales only ever
+# GROW while a page is live — writes compute the candidate scale of the
+# incoming tokens, scatter-max it into the sidecar, requantize the touched
+# pages' existing int8 content by round(q * old/new), then quantize the new
+# tokens at the final scale. A scale of 0 (fresh or scrubbed page)
+# dequantizes to exact zeros.
+
+INT8_QMAX = 127.0
+
+
+def quantize_kv_blocks(vals: jax.Array, per_head: bool = True):
+    """Quantize whole KV blocks ``(..., H, P, d)`` to int8 + f32 scales.
+
+    Returns ``(q, scales)`` with ``q`` int8 of ``vals.shape`` and
+    ``scales (..., H)`` — per (block, head) at ``per_head=True``, else one
+    scale per block broadcast across the head axis (identical downstream
+    layout, coarser rounding)."""
+    amax = jnp.abs(vals.astype(jnp.float32)).max(axis=(-2, -1))   # (..., H)
+    if not per_head:
+        amax = jnp.broadcast_to(
+            amax.max(axis=-1, keepdims=True), amax.shape
+        )
+    scales = amax / INT8_QMAX
+    inv = jnp.where(scales > 0, 1.0 / jnp.maximum(scales, 1e-30), 0.0)
+    q = jnp.round(vals.astype(jnp.float32) * inv[..., None, None])
+    q = jnp.clip(q, -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+    return q, scales.astype(jnp.float32)
+
+
+def paged_gather_kv_dequant(
+    pool: jax.Array,        # (num_pages, H, page_size, d) int8
+    scales: jax.Array,      # (num_pages, H) f32
+    page_tbl: jax.Array,    # (B, T) int32
+    dtype=jnp.float32,
+) -> jax.Array:
+    """:func:`paged_gather_kv` for quantized pools: gather, widen, apply
+    each page's per-head scale. Returns ``(B, H, T * page_size, d)``."""
+    g = pool[page_tbl].astype(jnp.float32)       # (B, T, H, page, d)
+    s = scales[page_tbl]                         # (B, T, H)
+    g = g * s[..., None, None]
+    B, T, H, ps, d = g.shape
+    return jnp.moveaxis(g, 2, 1).reshape(B, H, T * ps, d).astype(dtype)
+
+
+def paged_scatter_tokens_quant(
+    pool: jax.Array,        # (num_pages, H, page_size, d) int8
+    scales: jax.Array,      # (num_pages, H) f32 per-(page, head) scales
+    page_tbls: jax.Array,   # (N, W) int32 page table rows
+    offs: jax.Array,        # (N,) int32 first logical position of each chunk
+    lens: jax.Array,        # (N,) int32 valid tokens per chunk
+    vals: jax.Array,        # (N, C, H, d) new K or V rows (fp)
+    per_head: bool = True,
+):
+    """Quantizing counterpart of :func:`paged_scatter_tokens`.
+
+    The single write chokepoint for int8 pools: (1) scatter-max the
+    incoming tokens' candidate scales (amax/127 per (token, head)) into
+    the touched pages' scale rows — scales only grow while a page is
+    live; (2) requantize the touched pages' *existing* int8 content by
+    ``round(q * old/new)`` (untouched pages keep old == new and are never
+    read); (3) quantize the new tokens at the final scale and scatter.
+    Invalid positions route to the null page exactly like the fp path.
+    Returns ``(pool, scales)``.
+    """
+    N, C, H, d = vals.shape
+    ps = pool.shape[2]
+    W = page_tbls.shape[1]
+    pos = offs[:, None] + jnp.arange(C)[None, :]              # (N, C)
+    valid = jnp.arange(C)[None, :] < lens[:, None]
+    tile_idx = jnp.clip(pos // ps, 0, W - 1)
+    pages = jnp.where(
+        valid, jnp.take_along_axis(page_tbls, tile_idx, axis=1), 0
+    )
+    offsets = jnp.where(valid, pos % ps, 0)
+    flat_pages = pages.reshape(-1)                            # (N*C,)
+
+    vals_f = vals.astype(jnp.float32)
+    cand = jnp.abs(vals_f).max(axis=-1) / INT8_QMAX           # (N, C, H)
+    if not per_head:
+        cand = jnp.broadcast_to(
+            cand.max(axis=-1, keepdims=True), cand.shape
+        )
+    cand = jnp.where(valid[..., None], cand, 0.0)
+    new_scales = scales.at[flat_pages].max(cand.reshape(N * C, H))
+
+    # requantize what the touched pages already hold (duplicate page ids
+    # write identical requantized blocks — benign)
+    old_s = scales[flat_pages]                                # (N*C, H)
+    new_s = new_scales[flat_pages]
+    factor = jnp.where(new_s > 0, old_s / jnp.maximum(new_s, 1e-30), 0.0)
+    requant = jnp.round(
+        pool[flat_pages].astype(jnp.float32) * factor[..., None, None]
+    )
+    requant = jnp.clip(requant, -INT8_QMAX, INT8_QMAX).astype(pool.dtype)
+    pool = pool.at[flat_pages].set(requant)
+
+    # quantize the incoming tokens at the final (grown) scales
+    tok_s = new_scales[pages]                                 # (N, C, H)
+    inv = jnp.where(tok_s > 0, 1.0 / jnp.maximum(tok_s, 1e-30), 0.0)
+    q = jnp.round(vals_f * inv[..., None])
+    q = jnp.clip(q, -INT8_QMAX, INT8_QMAX).astype(pool.dtype)
+    pool = pool.at[flat_pages, :, offsets.reshape(-1)].set(
+        q.reshape(N * C, H, d)
+    )
+    return pool, new_scales
+
+
 def mha_chunk_prefill_paged_ref(
     q: jax.Array,           # (N, Hq, C, d) one prompt chunk per row
     k_pool: jax.Array,      # (num_pages, Hkv, page_size, d)

@@ -72,14 +72,25 @@ def pack_descriptors(sched: LeanSchedule) -> np.ndarray:
 
 
 def _online_softmax_tile(
-    q_ref, k_ref, v_ref, acc_ref, m_acc_ref, l_acc_ref, vlen, scale
+    q_ref, k_ref, v_ref, acc_ref, m_acc_ref, l_acc_ref, vlen, scale,
+    k_scale=None, v_scale=None,
 ):
     """One LeanTile online-softmax update (Algorithm 1 lines 20-25) against
     the VMEM accumulators; ``vlen`` masks the tile's invalid tail (and the
-    whole tile when the runtime length ends before it)."""
+    whole tile when the runtime length ends before it).
+
+    ``k_scale``/``v_scale`` are optional f32 dequant scalars for quantized
+    (int8) KV tiles: the tile is widened to f32 and multiplied *before*
+    entering the dot products, so the online-softmax accumulation — and
+    therefore the merge numerics — is identical to the fp path. A scale of
+    0 dequantizes to exact zeros (empty or scrubbed pages)."""
     q = q_ref[0].astype(jnp.float32)                       # (gq, d)
     k = k_ref[0].astype(jnp.float32)                       # (tile, d)
     v = v_ref[0].astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale
+    if v_scale is not None:
+        v = v * v_scale
 
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())),
@@ -109,17 +120,23 @@ def _lean_decode_kernel(
     q_ref,         # (1, gq, d)     current segment's query group
     k_ref,         # (1, tile, d)   current LeanTile of K
     v_ref,         # (1, tile, d)   current LeanTile of V
-    o_ref,         # (1, gq, d)     partial un-scaled output (piece slot)
-    m_ref,         # (1, gq)        partial row-max
-    l_ref,         # (1, gq)        partial exp-sum
-    acc_ref,       # VMEM (gq, d) f32
-    m_acc_ref,     # VMEM (gq, 1) f32
-    l_acc_ref,     # VMEM (gq, 1) f32
-    *,
+    *refs,         # [ks_ref (1,1), vs_ref (1,1)] when quantized, then:
+                   # o_ref (1, gq, d)  partial un-scaled output (piece slot)
+                   # m_ref (1, gq)     partial row-max
+                   # l_ref (1, gq)     partial exp-sum
+                   # acc_ref   VMEM (gq, d) f32
+                   # m_acc_ref VMEM (gq, 1) f32
+                   # l_acc_ref VMEM (gq, 1) f32
     scale: float,
     tile_size: int,
     tiles_per_worker: int,
+    quantized: bool = False,
 ):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref, m_acc_ref, l_acc_ref = refs
+    else:
+        o_ref, m_ref, l_ref, acc_ref, m_acc_ref, l_acc_ref = refs
+        ks_ref = vs_ref = None
     g = pl.program_id(0)
     t = pl.program_id(1)
     i = g * tiles_per_worker + t
@@ -145,7 +162,9 @@ def _lean_decode_kernel(
             tile_size,
         )
         _online_softmax_tile(
-            q_ref, k_ref, v_ref, acc_ref, m_acc_ref, l_acc_ref, vlen, scale
+            q_ref, k_ref, v_ref, acc_ref, m_acc_ref, l_acc_ref, vlen, scale,
+            k_scale=None if ks_ref is None else ks_ref[0, 0],
+            v_scale=None if vs_ref is None else vs_ref[0, 0],
         )
 
         @pl.when(last == 1)
@@ -164,6 +183,8 @@ def lean_decode_partials(
     scale: float,
     interpret: bool = False,
     route: Optional[jax.Array] = None,   # paged: (G*T,) int32 pool rows
+    k_scales: Optional[jax.Array] = None,  # quant: (rows, 1) f32 per-row scales
+    v_scales: Optional[jax.Array] = None,
 ):
     """Phase 1: run the stream-K grid, return per-piece partials.
 
@@ -175,6 +196,10 @@ def lean_decode_partials(
     flattened pool rows addressed by the routing operand instead of
     contiguous (segment, tile) slices. The kernel body — and therefore the
     fp op sequence — is identical either way.
+
+    ``k_scales``/``v_scales`` (paged only) enable quantized KV: the pool
+    rows hold int8 and each tile is dequantized in-kernel with its routed
+    per-(page, head) f32 scale before the fp32 online softmax.
     """
     S_seg, gq, d = q_seg.shape
     tile = sched.tile_size
@@ -182,6 +207,9 @@ def lean_decode_partials(
     P = sched.num_pieces
     desc = jnp.asarray(pack_descriptors(sched))
     paged = route is not None
+    quant = k_scales is not None
+    if quant and not paged:
+        raise ValueError("quantized KV requires the paged (route) layout")
 
     # index maps take (*grid, *prefetch_refs); trailing *_ absorbs the
     # extra routing operand in paged mode
@@ -208,20 +236,29 @@ def lean_decode_partials(
 
     kv_map = kv_map_paged if paged else kv_map_dense
 
+    def scale_map(g, t, desc, ctx, route):
+        return (route[g * T + t], 0)
+
     def out_map(g, t, desc, *_):
         return (desc[DESC_PIECE, g * T + t], 0, 0)
 
     def stat_map(g, t, desc, *_):
         return (desc[DESC_PIECE, g * T + t], 0)
 
+    in_specs = [
+        pl.BlockSpec((1, gq, d), q_map),
+        pl.BlockSpec((1, tile, d), kv_map),
+        pl.BlockSpec((1, tile, d), kv_map),
+    ]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, 1), scale_map),
+            pl.BlockSpec((1, 1), scale_map),
+        ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3 if paged else 2,
         grid=(G, T),
-        in_specs=[
-            pl.BlockSpec((1, gq, d), q_map),
-            pl.BlockSpec((1, tile, d), kv_map),
-            pl.BlockSpec((1, tile, d), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, gq, d), out_map),
             pl.BlockSpec((1, gq), stat_map),
@@ -235,7 +272,7 @@ def lean_decode_partials(
     )
     kernel = functools.partial(
         _paged_partial_kernel if paged else _lean_decode_kernel,
-        scale=scale, tile_size=tile, tiles_per_worker=T,
+        scale=scale, tile_size=tile, tiles_per_worker=T, quantized=quant,
     )
     out_shapes = [
         jax.ShapeDtypeStruct((P + 1, gq, d), jnp.float32),
@@ -245,6 +282,11 @@ def lean_decode_partials(
     operands = (desc, seg_ctx.astype(jnp.int32))
     if paged:
         operands += (route.astype(jnp.int32),)
+    inputs = (q_seg, k_seg, v_seg)
+    if quant:
+        inputs += (
+            k_scales.astype(jnp.float32), v_scales.astype(jnp.float32),
+        )
     o_p, m_p, l_p = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -253,7 +295,7 @@ def lean_decode_partials(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(*operands, q_seg, k_seg, v_seg)
+    )(*operands, *inputs)
     return o_p[:P], m_p[:P], l_p[:P]
 
 
@@ -263,18 +305,26 @@ def _lean_decode_fused_kernel(
     q_ref,         # (1, gq, d)
     k_ref,         # (1, tile, d)
     v_ref,         # (1, tile, d)
-    o_ref,         # (S, gq, d)  final outputs — whole array resident in VMEM
-    lse_ref,       # (S, gq)     final logsumexp
-    acc_ref,       # VMEM (gq, d) f32   shared partial/merge accumulator
-    m_acc_ref,     # VMEM (gq, 1) f32
-    l_acc_ref,     # VMEM (gq, 1) f32
-    po_ref,        # VMEM (P+1, gq, d) f32  piece partials (never leave VMEM)
-    pm_ref,        # VMEM (P+1, gq) f32
-    pl_ref,        # VMEM (P+1, gq) f32
-    *,
+    *refs,         # [ks_ref (1,1), vs_ref (1,1)] when quantized, then:
+                   # o_ref (S, gq, d)  final outputs — VMEM-resident
+                   # lse_ref (S, gq)   final logsumexp
+                   # acc_ref   VMEM (gq, d) f32  shared partial/merge acc
+                   # m_acc_ref VMEM (gq, 1) f32
+                   # l_acc_ref VMEM (gq, 1) f32
+                   # po_ref VMEM (P+1, gq, d) f32  piece partials (VMEM only)
+                   # pm_ref VMEM (P+1, gq) f32
+                   # pl_ref VMEM (P+1, gq) f32
     scale: float,
     tile_size: int,
+    quantized: bool = False,
 ):
+    if quantized:
+        (ks_ref, vs_ref, o_ref, lse_ref, acc_ref, m_acc_ref, l_acc_ref,
+         po_ref, pm_ref, pl_ref) = refs
+    else:
+        (o_ref, lse_ref, acc_ref, m_acc_ref, l_acc_ref,
+         po_ref, pm_ref, pl_ref) = refs
+        ks_ref = vs_ref = None
     i = pl.program_id(0)
     op = desc_ref[DESC_VALID, i]
     seg = desc_ref[DESC_SEG, i]
@@ -294,7 +344,9 @@ def _lean_decode_fused_kernel(
             ctx_ref[seg] - desc_ref[DESC_TILE, i] * tile_size, 0, tile_size
         )
         _online_softmax_tile(
-            q_ref, k_ref, v_ref, acc_ref, m_acc_ref, l_acc_ref, vlen, scale
+            q_ref, k_ref, v_ref, acc_ref, m_acc_ref, l_acc_ref, vlen, scale,
+            k_scale=None if ks_ref is None else ks_ref[0, 0],
+            v_scale=None if vs_ref is None else vs_ref[0, 0],
         )
 
         @pl.when(last == 1)
@@ -329,13 +381,21 @@ def _lean_decode_fused_kernel(
             )[None, :, 0]
 
 
-def fused_vmem_bytes(sched: LeanSchedule, gq: int, d: int) -> int:
-    """Rough f32 VMEM footprint of the fused kernel's resident state: piece
-    partials + whole-output block + a KV tile. Used to gate the fused path
-    (fall back to two-phase when a schedule would blow the budget)."""
+def fused_vmem_bytes(
+    sched: LeanSchedule, gq: int, d: int, kv_elem_bytes: int = 4
+) -> int:
+    """Rough VMEM footprint of the fused kernel's resident state: f32 piece
+    partials + whole-output block + a K and a V tile at the *cache dtype*
+    width (``kv_elem_bytes``: 4 f32, 2 bf16, 1 int8/fp8 — a hardcoded 4
+    here over-triggered the two-phase fallback for narrow KV). Used to
+    gate the fused path (fall back to two-phase when a schedule would blow
+    the budget)."""
     P, S = sched.num_pieces, sched.num_segments
     per_row = gq * (d + 2)
-    return 4 * ((P + 1) * per_row + S * gq * (d + 1)) + 4 * sched.tile_size * d * 2
+    return (
+        4 * ((P + 1) * per_row + S * gq * (d + 1))
+        + kv_elem_bytes * sched.tile_size * d * 2
+    )
 
 
 def lean_decode_fused(
@@ -347,6 +407,8 @@ def lean_decode_fused(
     scale: float,
     interpret: bool = False,
     route: Optional[jax.Array] = None,   # paged: (G*T + P,) int32 pool rows
+    k_scales: Optional[jax.Array] = None,  # quant: (rows, 1) f32 per-row scales
+    v_scales: Optional[jax.Array] = None,
 ):
     """Fused stream-K decode: ONE ``pallas_call`` for partials AND merge.
 
@@ -362,6 +424,9 @@ def lean_decode_fused(
 
     ``route`` switches K/V fetching to the paged pool-row layout (see
     :func:`lean_decode_partials`); merge iterations carry null routes.
+    ``k_scales``/``v_scales`` (paged only) enable int8 KV with in-kernel
+    per-(page, head) dequant — merge iterations route the scales to row 0
+    along with the tiles, where they are never read.
     """
     S_seg, gq, d = q_seg.shape
     tile = sched.tile_size
@@ -370,6 +435,9 @@ def lean_decode_fused(
     desc = jnp.asarray(sched.fused_descriptors())
     N = G * T + P
     paged = route is not None
+    quant = k_scales is not None
+    if quant and not paged:
+        raise ValueError("quantized KV requires the paged (route) layout")
 
     def q_map(i, desc, *_):
         return (
@@ -391,14 +459,23 @@ def lean_decode_fused(
 
     kv_map = kv_map_paged if paged else kv_map_dense
 
+    def scale_map(i, desc, ctx, route):
+        return (route[i], 0)
+
+    in_specs = [
+        pl.BlockSpec((1, gq, d), q_map),
+        pl.BlockSpec((1, tile, d), kv_map),
+        pl.BlockSpec((1, tile, d), kv_map),
+    ]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, 1), scale_map),
+            pl.BlockSpec((1, 1), scale_map),
+        ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3 if paged else 2,
         grid=(N,),
-        in_specs=[
-            pl.BlockSpec((1, gq, d), q_map),
-            pl.BlockSpec((1, tile, d), kv_map),
-            pl.BlockSpec((1, tile, d), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=[
             # whole-output blocks: the index maps are constant, so the
             # buffers stay VMEM-resident across the grid and flush to HBM
@@ -417,7 +494,7 @@ def lean_decode_fused(
     )
     kernel = functools.partial(
         _paged_fused_kernel if paged else _lean_decode_fused_kernel,
-        scale=scale, tile_size=tile,
+        scale=scale, tile_size=tile, quantized=quant,
     )
     out_shapes = [
         jax.ShapeDtypeStruct((S_seg, gq, d), jnp.float32),
@@ -426,6 +503,11 @@ def lean_decode_fused(
     operands = (desc, seg_ctx.astype(jnp.int32))
     if paged:
         operands += (route.astype(jnp.int32),)
+    inputs = (q_seg, k_seg, v_seg)
+    if quant:
+        inputs += (
+            k_scales.astype(jnp.float32), v_scales.astype(jnp.float32),
+        )
     o, lse = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -434,7 +516,7 @@ def lean_decode_fused(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,
-    )(*operands, q_seg, k_seg, v_seg)
+    )(*operands, *inputs)
     return o, lse
 
 
@@ -467,12 +549,15 @@ def lean_decode_paged_partials(
     sched: LeanSchedule,
     scale: float,
     interpret: bool = False,
+    k_scales: Optional[jax.Array] = None,
+    v_scales: Optional[jax.Array] = None,
 ):
     """Phase 1 of the paged path: :func:`lean_decode_partials` with the
     routing operand. ``sched.tile_size`` must equal the pool's page size."""
     return lean_decode_partials(
         q_seg, k_rows, v_rows, seg_ctx, sched, scale,
         interpret=interpret, route=route,
+        k_scales=k_scales, v_scales=v_scales,
     )
 
 
@@ -485,12 +570,15 @@ def lean_decode_paged_fused(
     sched: LeanSchedule,
     scale: float,
     interpret: bool = False,
+    k_scales: Optional[jax.Array] = None,
+    v_scales: Optional[jax.Array] = None,
 ):
     """Fused paged stream-K decode: :func:`lean_decode_fused` with the
     routing operand."""
     return lean_decode_fused(
         q_seg, k_rows, v_rows, seg_ctx, sched, scale,
         interpret=interpret, route=route,
+        k_scales=k_scales, v_scales=v_scales,
     )
 
 
@@ -520,22 +608,30 @@ def _lean_cascade_fused_kernel(
     q_ref,         # (1, qmax, d)   current segment's stacked query block
     k_ref,         # (1, tile, d)
     v_ref,         # (1, tile, d)
-    o_ref,         # (S + 1, g, d)  final outputs (+ garbage row), VMEM-resident
-    lse_ref,       # (S + 1, g)
-    acc_ref,       # VMEM (qmax, d) f32  partial-phase accumulators
-    m_acc_ref,     # VMEM (qmax, 1) f32
-    l_acc_ref,     # VMEM (qmax, 1) f32
-    g_acc_ref,     # VMEM (g, d) f32     merge-phase accumulators
-    g_m_ref,       # VMEM (g, 1) f32
-    g_l_ref,       # VMEM (g, 1) f32
-    po_ref,        # VMEM (P_tot + 1, qmax, d) f32  piece partials
-    pm_ref,        # VMEM (P_tot + 1, qmax) f32
-    pl_ref,        # VMEM (P_tot + 1, qmax) f32
-    *,
+    *refs,         # [ks_ref (1,1), vs_ref (1,1)] when quantized, then:
+                   # o_ref (S + 1, g, d)  final outputs (+ garbage row), VMEM
+                   # lse_ref (S + 1, g)
+                   # acc_ref   VMEM (qmax, d) f32  partial-phase accumulators
+                   # m_acc_ref VMEM (qmax, 1) f32
+                   # l_acc_ref VMEM (qmax, 1) f32
+                   # g_acc_ref VMEM (g, d) f32     merge-phase accumulators
+                   # g_m_ref   VMEM (g, 1) f32
+                   # g_l_ref   VMEM (g, 1) f32
+                   # po_ref VMEM (P_tot + 1, qmax, d) f32  piece partials
+                   # pm_ref VMEM (P_tot + 1, qmax) f32
+                   # pl_ref VMEM (P_tot + 1, qmax) f32
     scale: float,
     tile_size: int,
     gq: int,
+    quantized: bool = False,
 ):
+    if quantized:
+        (ks_ref, vs_ref, o_ref, lse_ref, acc_ref, m_acc_ref, l_acc_ref,
+         g_acc_ref, g_m_ref, g_l_ref, po_ref, pm_ref, pl_ref) = refs
+    else:
+        (o_ref, lse_ref, acc_ref, m_acc_ref, l_acc_ref,
+         g_acc_ref, g_m_ref, g_l_ref, po_ref, pm_ref, pl_ref) = refs
+        ks_ref = vs_ref = None
     i = pl.program_id(0)
     op = desc_ref[DESC_VALID, i]
     seg = desc_ref[DESC_SEG, i]
@@ -555,7 +651,9 @@ def _lean_cascade_fused_kernel(
             ctx_ref[seg] - desc_ref[DESC_TILE, i] * tile_size, 0, tile_size
         )
         _online_softmax_tile(
-            q_ref, k_ref, v_ref, acc_ref, m_acc_ref, l_acc_ref, vlen, scale
+            q_ref, k_ref, v_ref, acc_ref, m_acc_ref, l_acc_ref, vlen, scale,
+            k_scale=None if ks_ref is None else ks_ref[0, 0],
+            v_scale=None if vs_ref is None else vs_ref[0, 0],
         )
 
         @pl.when(last == 1)
@@ -594,11 +692,14 @@ def _lean_cascade_fused_kernel(
             )[None, :, 0]
 
 
-def cascade_fused_vmem_bytes(csched, gq: int, d: int) -> int:
-    """Rough f32 VMEM footprint of the fused cascade kernel's resident
-    state: the combined piece-partial ring, the whole-output block, both
-    accumulator sets, and a KV tile. Gates the fused path — schedules
-    above the budget fall back to the two-call cascade."""
+def cascade_fused_vmem_bytes(
+    csched, gq: int, d: int, kv_elem_bytes: int = 4
+) -> int:
+    """Rough VMEM footprint of the fused cascade kernel's resident state:
+    the f32 combined piece-partial ring, the whole-output block, both
+    accumulator sets, and a K + V tile at the cache dtype width
+    (``kv_elem_bytes`` — see :func:`fused_vmem_bytes`). Gates the fused
+    path — schedules above the budget fall back to the two-call cascade."""
     qmax = csched.group_size * gq
     Ptot = csched.num_pieces_total
     S = csched.batch * csched.num_kv_heads
@@ -607,9 +708,8 @@ def cascade_fused_vmem_bytes(csched, gq: int, d: int) -> int:
         + (S + 1) * gq * (d + 1)
         + qmax * (d + 2)
         + gq * (d + 2)
-        + 2 * csched.tile_size * d
         + qmax * d
-    )
+    ) + kv_elem_bytes * 2 * csched.tile_size * d
 
 
 def lean_cascade_fused(
@@ -623,6 +723,8 @@ def lean_cascade_fused(
     scale: float,
     gq: int,
     interpret: bool = False,
+    k_scales: Optional[jax.Array] = None,
+    v_scales: Optional[jax.Array] = None,
 ):
     """Fused cascade decode: ONE ``pallas_call`` for the grouped prefix
     pass, the per-sequence suffix pass, AND the merge. Returns
@@ -631,12 +733,14 @@ def lean_cascade_fused(
     All operands — including the descriptors — are runtime arrays; the
     only static inputs are the schedule-derived shapes, so every grouping
     with the same :class:`~repro.core.leantile.CascadeSchedule` geometry
-    replays this trace."""
+    replays this trace. ``k_scales``/``v_scales`` enable int8 pool rows
+    with in-kernel per-(page, head) dequant."""
     SEG_tot, qmax, d = q_stack.shape
     tile = csched.tile_size
     N = csched.fused_grid_iters
     Ptot = csched.num_pieces_total
     S = csched.batch * csched.num_kv_heads
+    quant = k_scales is not None
 
     def q_map(i, desc, *_):
         ok = desc[DESC_VALID, i] == OP_PARTIAL
@@ -645,14 +749,23 @@ def lean_cascade_fused(
     def kv_map(i, desc, ctx, route):
         return (route[i], 0, 0)
 
+    def scale_map(i, desc, ctx, route):
+        return (route[i], 0)
+
+    in_specs = [
+        pl.BlockSpec((1, qmax, d), q_map),
+        pl.BlockSpec((1, tile, d), kv_map),
+        pl.BlockSpec((1, tile, d), kv_map),
+    ]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, 1), scale_map),
+            pl.BlockSpec((1, 1), scale_map),
+        ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(N,),
-        in_specs=[
-            pl.BlockSpec((1, qmax, d), q_map),
-            pl.BlockSpec((1, tile, d), kv_map),
-            pl.BlockSpec((1, tile, d), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((S + 1, gq, d), lambda i, *_: (0, 0, 0)),
             pl.BlockSpec((S + 1, gq), lambda i, *_: (0, 0)),
@@ -670,12 +783,18 @@ def lean_cascade_fused(
         ],
     )
     kernel = functools.partial(
-        _lean_cascade_fused_kernel, scale=scale, tile_size=tile, gq=gq
+        _lean_cascade_fused_kernel, scale=scale, tile_size=tile, gq=gq,
+        quantized=quant,
     )
     out_shapes = [
         jax.ShapeDtypeStruct((S + 1, gq, d), jnp.float32),
         jax.ShapeDtypeStruct((S + 1, gq), jnp.float32),
     ]
+    inputs = (q_stack, k_rows, v_rows)
+    if quant:
+        inputs += (
+            k_scales.astype(jnp.float32), v_scales.astype(jnp.float32),
+        )
     o, lse = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -686,7 +805,7 @@ def lean_cascade_fused(
         interpret=interpret,
     )(
         desc.astype(jnp.int32), ctx_all.astype(jnp.int32),
-        route.astype(jnp.int32), q_stack, k_rows, v_rows,
+        route.astype(jnp.int32), *inputs,
     )
     return o[:S], lse[:S]
 

@@ -56,18 +56,24 @@ def _lean_prefill_kernel(
     q_ref,         # (1, gq, d)    gq = g * chunk_cap query rows
     k_ref,         # (1, tile, d)  current LeanTile fetched via route
     v_ref,         # (1, tile, d)
-    o_ref,         # (1, gq, d)    partial un-scaled output (piece slot)
-    m_ref,         # (1, gq)
-    l_ref,         # (1, gq)
-    acc_ref,       # VMEM (gq, d) f32
-    m_acc_ref,     # VMEM (gq, 1) f32
-    l_acc_ref,     # VMEM (gq, 1) f32
-    *,
+    *refs,         # [ks_ref (1,1), vs_ref (1,1)] when quantized, then:
+                   # o_ref (1, gq, d)  partial un-scaled output (piece slot)
+                   # m_ref (1, gq)
+                   # l_ref (1, gq)
+                   # acc_ref   VMEM (gq, d) f32
+                   # m_acc_ref VMEM (gq, 1) f32
+                   # l_acc_ref VMEM (gq, 1) f32
     scale: float,
     tile_size: int,
     tiles_per_worker: int,
     chunk_cap: int,
+    quantized: bool = False,
 ):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref, m_acc_ref, l_acc_ref = refs
+    else:
+        o_ref, m_ref, l_ref, acc_ref, m_acc_ref, l_acc_ref = refs
+        ks_ref = vs_ref = None
     g = pl.program_id(0)
     t = pl.program_id(1)
     i = g * tiles_per_worker + t
@@ -92,6 +98,10 @@ def _lean_prefill_kernel(
         q = q_ref[0].astype(jnp.float32)                   # (gq, d)
         k = k_ref[0].astype(jnp.float32)                   # (tile, d)
         v = v_ref[0].astype(jnp.float32)
+        if ks_ref is not None:
+            k = k * ks_ref[0, 0]                           # int8 tile dequant
+        if vs_ref is not None:
+            v = v * vs_ref[0, 0]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -135,6 +145,8 @@ def lean_prefill_chunk_partials(
     scale: float,
     chunk_cap: int,
     interpret: bool = False,
+    k_scales: jax.Array | None = None,   # quant: (rows, 1) f32 per-row scales
+    v_scales: jax.Array | None = None,
 ):
     """Phase 1 of the stream-K chunk pack: per-piece partials.
 
@@ -143,12 +155,17 @@ def lean_prefill_chunk_partials(
     position 0 visible (visible lengths are >= 1 and ``qstart >= 0``), so
     no piece-set of a segment is ever fully masked and the final divide is
     safe without an epsilon.
+
+    ``k_scales``/``v_scales`` enable int8 pool rows: each routed tile is
+    dequantized in-kernel with its per-(page, head) f32 scale before the
+    fp32 online softmax, so partials merge identically to the fp path.
     """
     S_seg, gq, d = q_seg.shape
     tile = sched.tile_size
     G, T = sched.num_workers, sched.tiles_per_worker
     P = sched.num_pieces
     desc = jnp.asarray(pack_descriptors(sched))
+    quant = k_scales is not None
 
     def q_map(g, t, desc, *_):
         i = g * T + t
@@ -161,20 +178,29 @@ def lean_prefill_chunk_partials(
     def kv_map(g, t, desc, ctx, qstart, route):
         return (route[g * T + t], 0, 0)
 
+    def scale_map(g, t, desc, ctx, qstart, route):
+        return (route[g * T + t], 0)
+
     def out_map(g, t, desc, *_):
         return (desc[DESC_PIECE, g * T + t], 0, 0)
 
     def stat_map(g, t, desc, *_):
         return (desc[DESC_PIECE, g * T + t], 0)
 
+    in_specs = [
+        pl.BlockSpec((1, gq, d), q_map),
+        pl.BlockSpec((1, tile, d), kv_map),
+        pl.BlockSpec((1, tile, d), kv_map),
+    ]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, 1), scale_map),
+            pl.BlockSpec((1, 1), scale_map),
+        ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(G, T),
-        in_specs=[
-            pl.BlockSpec((1, gq, d), q_map),
-            pl.BlockSpec((1, tile, d), kv_map),
-            pl.BlockSpec((1, tile, d), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, gq, d), out_map),
             pl.BlockSpec((1, gq), stat_map),
@@ -189,12 +215,18 @@ def lean_prefill_chunk_partials(
     kernel = functools.partial(
         _lean_prefill_kernel,
         scale=scale, tile_size=tile, tiles_per_worker=T, chunk_cap=chunk_cap,
+        quantized=quant,
     )
     out_shapes = [
         jax.ShapeDtypeStruct((P + 1, gq, d), jnp.float32),
         jax.ShapeDtypeStruct((P + 1, gq), jnp.float32),
         jax.ShapeDtypeStruct((P + 1, gq), jnp.float32),
     ]
+    inputs = (q_seg, k_rows, v_rows)
+    if quant:
+        inputs += (
+            k_scales.astype(jnp.float32), v_scales.astype(jnp.float32),
+        )
     o_p, m_p, l_p = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -208,6 +240,6 @@ def lean_prefill_chunk_partials(
         seg_ctx.astype(jnp.int32),
         seg_qstart.astype(jnp.int32),
         route.astype(jnp.int32),
-        q_seg, k_rows, v_rows,
+        *inputs,
     )
     return o_p[:P], m_p[:P], l_p[:P]

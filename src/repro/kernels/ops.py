@@ -189,7 +189,10 @@ def lean_decode_from_schedule(
     gq = q_seg.shape[1]
     seg_ctx = seg_ctx.astype(jnp.int32)
 
-    if fused and fused_vmem_bytes(sched, gq, d) > FUSED_VMEM_BUDGET:
+    kv_eb = jnp.dtype(k.dtype).itemsize
+    if fused and fused_vmem_bytes(
+        sched, gq, d, kv_elem_bytes=kv_eb
+    ) > FUSED_VMEM_BUDGET:
         fused = False
     if fused:
         o_seg, lse = lean_decode_fused(
@@ -284,6 +287,8 @@ def lean_decode_paged_from_schedule(
     merge_impl: str = "xla",
     interpret: bool = False,
     return_lse: bool = False,
+    k_scales: Optional[jax.Array] = None,   # int8 pools: (num_pages, Hkv) f32
+    v_scales: Optional[jax.Array] = None,
 ):
     """Jit-stable *paged* LeanAttention decode against a prebuilt schedule.
 
@@ -297,6 +302,12 @@ def lean_decode_paged_from_schedule(
 
     Runs the identical fp op sequence as the dense path: on equal logical
     inputs the outputs are bit-identical.
+
+    ``k_scales``/``v_scales`` (per-(page, head) f32, from a quantized int8
+    pool) ride the same route operand into the kernels, which dequantize
+    each KV tile in VMEM before the fp32 online softmax — merge numerics
+    are unchanged and the smaller elements shrink both the HBM traffic per
+    stream-K tile and the fused-path VMEM footprint.
     """
     B, Hq, d = q.shape
     num_pages, Hkv, page_size, _ = k_pool.shape
@@ -314,19 +325,26 @@ def lean_decode_paged_from_schedule(
     # the dense kernel bodies wholesale with a 1D routing operand
     k_rows = k_pool.reshape(num_pages * Hkv, page_size, d)
     v_rows = v_pool.reshape(num_pages * Hkv, page_size, d)
+    ks_rows = vs_rows = None
+    if k_scales is not None:
+        ks_rows = k_scales.reshape(num_pages * Hkv, 1)
+        vs_rows = v_scales.reshape(num_pages * Hkv, 1)
 
-    if fused and fused_vmem_bytes(sched, gq, d) > FUSED_VMEM_BUDGET:
+    kv_eb = jnp.dtype(k_pool.dtype).itemsize
+    if fused and fused_vmem_bytes(
+        sched, gq, d, kv_elem_bytes=kv_eb
+    ) > FUSED_VMEM_BUDGET:
         fused = False
     route = _paged_route(sched, page_tbl, Hkv, fused)
     if fused:
         o_seg, lse = lean_decode_paged_fused(
             q_seg, k_rows, v_rows, seg_ctx, route, sched, scale,
-            interpret=interpret,
+            interpret=interpret, k_scales=ks_rows, v_scales=vs_rows,
         )
     else:
         o_p, m_p, l_p = lean_decode_paged_partials(
             q_seg, k_rows, v_rows, seg_ctx, route, sched, scale,
-            interpret=interpret,
+            interpret=interpret, k_scales=ks_rows, v_scales=vs_rows,
         )
         o_seg, lse = _merge_two_phase(
             o_p, m_p, l_p, sched, merge_impl, interpret
@@ -353,6 +371,8 @@ def lean_decode_paged(
     interpret: bool = False,
     return_lse: bool = False,
     pool=None,
+    k_scales: Optional[jax.Array] = None,
+    v_scales: Optional[jax.Array] = None,
 ):
     """Convenience paged decode: builds (or cache-fetches) the schedule from
     host context lengths, then runs :func:`lean_decode_paged_from_schedule`.
@@ -395,13 +415,20 @@ def lean_decode_paged(
         q, k_pool, v_pool, seg_ctx, jnp.asarray(ptbl_np, jnp.int32), sched,
         scale=scale, fused=fused, merge_impl=merge_impl,
         interpret=interpret, return_lse=return_lse,
+        k_scales=k_scales, v_scales=v_scales,
     )
 
 
-def cascade_uses_fused(csched: CascadeSchedule, gq: int, d: int) -> bool:
+def cascade_uses_fused(
+    csched: CascadeSchedule, gq: int, d: int, kv_elem_bytes: int = 4
+) -> bool:
     """Whether the fused single-kernel cascade fits the VMEM budget (the
-    static fallback decision callers can query for stats/bench)."""
-    return cascade_fused_vmem_bytes(csched, gq, d) <= FUSED_VMEM_BUDGET
+    static fallback decision callers can query for stats/bench).
+    ``kv_elem_bytes`` is the pool element width — quantized int8 pools
+    (1 byte) fit schedules the f32 accounting would have rejected."""
+    return cascade_fused_vmem_bytes(
+        csched, gq, d, kv_elem_bytes=kv_elem_bytes
+    ) <= FUSED_VMEM_BUDGET
 
 
 def lean_decode_cascade_from_schedule(
@@ -420,6 +447,8 @@ def lean_decode_cascade_from_schedule(
     fused: bool = True,
     interpret: bool = False,
     return_lse: bool = False,
+    k_scales: Optional[jax.Array] = None,   # int8 pools: (num_pages, Hkv) f32
+    v_scales: Optional[jax.Array] = None,
 ):
     """Jit-stable cascade (prefix-grouped) paged LeanAttention decode.
 
@@ -461,6 +490,10 @@ def lean_decode_cascade_from_schedule(
     NP = csched.num_groups
     k_rows = k_pool.reshape(num_pages * Hkv, page_size, d)
     v_rows = v_pool.reshape(num_pages * Hkv, page_size, d)
+    ks_rows = vs_rows = None
+    if k_scales is not None:
+        ks_rows = k_scales.reshape(num_pages * Hkv, 1)
+        vs_rows = v_scales.reshape(num_pages * Hkv, 1)
 
     # stacked member queries: padding ranks carry member-0 copies whose
     # partial rows are dropped (or garbage-targeted) at merge
@@ -475,7 +508,9 @@ def lean_decode_cascade_from_schedule(
     route_s = _paged_route(csched.suffix_sched, suffix_tbl, Hkv, fused=False)
     seg_ctx_suffix = seg_ctx_suffix.astype(jnp.int32)
 
-    if fused and not cascade_uses_fused(csched, g, d):
+    if fused and not cascade_uses_fused(
+        csched, g, d, kv_elem_bytes=jnp.dtype(k_pool.dtype).itemsize
+    ):
         fused = False
     if fused:
         # ---- single flat grid: prefix partials + suffix partials + merge
@@ -492,7 +527,7 @@ def lean_decode_cascade_from_schedule(
         o_seg, lse = lean_cascade_fused(
             q_stack, k_rows, v_rows, ctx_all, route,
             jnp.asarray(fused_desc, jnp.int32), csched, scale, g,
-            interpret=interpret,
+            interpret=interpret, k_scales=ks_rows, v_scales=vs_rows,
         )
         out = o_seg.reshape(B, Hq, d).astype(q.dtype)
         if return_lse:
@@ -503,11 +538,13 @@ def lean_decode_cascade_from_schedule(
     o_p, m_p, l_p = lean_decode_paged_partials(
         q_pref, k_rows, v_rows, seg_ctx_prefix, route_p,
         csched.prefix_sched, scale, interpret=interpret,
+        k_scales=ks_rows, v_scales=vs_rows,
     )
     q_suf = q.reshape(B * Hkv, g, d)
     o_s, m_s, l_s = lean_decode_paged_partials(
         q_suf, k_rows, v_rows, seg_ctx_suffix, route_s,
         csched.suffix_sched, scale, interpret=interpret,
+        k_scales=ks_rows, v_scales=vs_rows,
     )
     # merge: slice prefix pieces per member, reduce with suffix pieces.
     # Targets derive from the RUNTIME members array — a prefix piece of
@@ -588,6 +625,8 @@ def lean_decode_cascade(
     interpret: bool = False,
     return_lse: bool = False,
     pool=None,
+    k_scales: Optional[jax.Array] = None,
+    v_scales: Optional[jax.Array] = None,
 ):
     """Convenience cascade decode: builds (or cache-fetches) the cascade
     schedule + binding from host lengths/grouping, derives the phase
@@ -640,7 +679,7 @@ def lean_decode_cascade(
         jnp.asarray(prefix_tbl, jnp.int32), jnp.asarray(suffix_tbl, jnp.int32),
         jnp.asarray(fused_desc, jnp.int32),
         csched, scale=scale, fused=fused, interpret=interpret,
-        return_lse=return_lse,
+        return_lse=return_lse, k_scales=k_scales, v_scales=v_scales,
     )
 
 
@@ -656,6 +695,8 @@ def lean_prefill_chunks(
     scale: Optional[float] = None,
     merge_impl: str = "xla",
     interpret: bool = False,
+    k_scales: Optional[jax.Array] = None,   # int8 pools: (num_pages, Hkv) f32
+    v_scales: Optional[jax.Array] = None,
 ):
     """Jit-stable stream-K chunked prefill against a prebuilt chunk schedule.
 
@@ -680,11 +721,16 @@ def lean_prefill_chunks(
     q_seg = q.reshape(N, Hkv, g, C, d).reshape(N * Hkv, g * C, d)
     k_rows = k_pool.reshape(num_pages * Hkv, page_size, d)
     v_rows = v_pool.reshape(num_pages * Hkv, page_size, d)
+    ks_rows = vs_rows = None
+    if k_scales is not None:
+        ks_rows = k_scales.reshape(num_pages * Hkv, 1)
+        vs_rows = v_scales.reshape(num_pages * Hkv, 1)
     route = _paged_route(sched, page_tbls, Hkv, fused=False)
     o_p, m_p, l_p = lean_prefill_chunk_partials(
         q_seg, k_rows, v_rows, seg_ctx.astype(jnp.int32),
         seg_qstart.astype(jnp.int32), route, sched, scale,
         chunk_cap=C, interpret=interpret,
+        k_scales=ks_rows, v_scales=vs_rows,
     )
     o_seg, _lse = _merge_two_phase(o_p, m_p, l_p, sched, merge_impl, interpret)
     return o_seg.reshape(N, Hq, C, d).astype(q.dtype)

@@ -16,6 +16,7 @@ from repro.core.attention import (
     mha_decode_ref,
     mha_prefill_ref,
     paged_scatter_tokens,
+    paged_scatter_tokens_quant,
 )
 
 
@@ -217,6 +218,9 @@ def attn_decode_paged(
     compute_dtype=jnp.bfloat16,
     attn_fn=None,                 # override: f(q, k_pool, v_pool, ctx) -> out
     ctx_lens: Optional[jax.Array] = None,   # (B,) per-slot lengths, required
+    k_scale: Optional[jax.Array] = None,    # int8 pools: (num_pages, Hkv) f32
+    v_scale: Optional[jax.Array] = None,
+    scale_per_head: bool = True,
 ):
     """Paged twin of :func:`attn_decode` for global-attention layers.
 
@@ -228,9 +232,18 @@ def attn_decode_paged(
     ``attn_fn`` receives the *pools* plus the visible lengths (the paged
     lean kernel consumes them natively; ref/fixed backends gather first).
     Returns (out, k_pool, v_pool).
+
+    ``k_scale``/``v_scale`` flip the pools to quantized int8 storage: the
+    token write goes through :func:`paged_scatter_tokens_quant` (scales
+    grow monotonically, touched pages requantize), the int8 pools pass to
+    ``attn_fn`` *undequantized* together with ``k_scales=``/``v_scales=``
+    keywords (the lean kernels dequantize per tile in VMEM), and the ref
+    fallback gathers through :func:`paged_gather_kv_dequant`. Returns the
+    5-tuple (out, k_pool, v_pool, k_scale, v_scale).
     """
     if ctx_lens is None:
         raise ValueError("paged decode requires per-slot ctx_lens")
+    quant = k_scale is not None
     B, _, D = x.shape
     ps = k_pool.shape[2]
     capacity = page_tbl.shape[1] * ps
@@ -247,27 +260,58 @@ def attn_decode_paged(
         k = rope(k, pos, rope_theta)
     # scatter the token into its slot's current page
     write_pos = jnp.minimum(ctx_lens, capacity - 1)
-    pages_w = page_tbl[jnp.arange(B), write_pos // ps]
-    offs = write_pos % ps
-    k_pool = k_pool.at[pages_w, :, offs].set(k[:, 0].astype(k_pool.dtype))
-    v_pool = v_pool.at[pages_w, :, offs].set(v[:, 0].astype(v_pool.dtype))
+    if quant:
+        ones = jnp.ones((B,), jnp.int32)
+        k_pool, k_scale = paged_scatter_tokens_quant(
+            k_pool, k_scale, page_tbl, write_pos, ones, k,
+            per_head=scale_per_head,
+        )
+        v_pool, v_scale = paged_scatter_tokens_quant(
+            v_pool, v_scale, page_tbl, write_pos, ones, v,
+            per_head=scale_per_head,
+        )
+    else:
+        pages_w = page_tbl[jnp.arange(B), write_pos // ps]
+        offs = write_pos % ps
+        k_pool = k_pool.at[pages_w, :, offs].set(k[:, 0].astype(k_pool.dtype))
+        v_pool = v_pool.at[pages_w, :, offs].set(v[:, 0].astype(v_pool.dtype))
     ctx = jnp.minimum(ctx_lens + 1, capacity).astype(jnp.int32)
     qd = q.reshape(B, n_heads, head_dim)
     k_eff, v_eff = k_pool, v_pool
-    if k_pool.dtype not in (jnp.bfloat16, jnp.float16, jnp.float32):
+    if not quant and k_pool.dtype not in (
+        jnp.bfloat16, jnp.float16, jnp.float32
+    ):
+        # fp8 caches: reads upcast in-register; int8 pools instead stay
+        # quantized all the way to the kernel (scales ride alongside)
         k_eff = k_pool.astype(compute_dtype)
         v_eff = v_pool.astype(compute_dtype)
     if attn_fn is not None:
-        o = attn_fn(qd, k_eff, v_eff, ctx)
+        if quant:
+            o = attn_fn(
+                qd, k_eff, v_eff, ctx, k_scales=k_scale, v_scales=v_scale
+            )
+        else:
+            o = attn_fn(qd, k_eff, v_eff, ctx)
     else:
-        from repro.core.attention import mha_decode_ref, paged_gather_kv
-
-        o = mha_decode_ref(
-            qd, paged_gather_kv(k_eff, page_tbl),
-            paged_gather_kv(v_eff, page_tbl), ctx_lens=ctx,
+        from repro.core.attention import (
+            mha_decode_ref, paged_gather_kv, paged_gather_kv_dequant,
         )
+
+        if quant:
+            kd = paged_gather_kv_dequant(
+                k_eff, k_scale, page_tbl, dtype=compute_dtype
+            )
+            vd = paged_gather_kv_dequant(
+                v_eff, v_scale, page_tbl, dtype=compute_dtype
+            )
+        else:
+            kd = paged_gather_kv(k_eff, page_tbl)
+            vd = paged_gather_kv(v_eff, page_tbl)
+        o = mha_decode_ref(qd, kd, vd, ctx_lens=ctx)
     o = o.reshape(B, 1, n_heads * head_dim).astype(compute_dtype)
     out = o @ p["wo"].astype(compute_dtype)
+    if quant:
+        return out.astype(x.dtype), k_pool, v_pool, k_scale, v_scale
     return out.astype(x.dtype), k_pool, v_pool
 
 
@@ -286,6 +330,9 @@ def attn_prefill_chunk_paged(
     rope_theta: Optional[float] = 10000.0,
     compute_dtype=jnp.bfloat16,
     attn_fn=None,     # override: f(q, k_pool, v_pool, page_tbls, offs) -> o
+    k_scale: Optional[jax.Array] = None,    # int8 pools: (num_pages, Hkv) f32
+    v_scale: Optional[jax.Array] = None,
+    scale_per_head: bool = True,
 ):
     """Chunked-prefill attention for global-attention layers (paged KV).
 
@@ -300,8 +347,11 @@ def attn_prefill_chunk_paged(
 
     Chunk-padding positions (``i >= lens[n]``) write the null page and
     produce garbage activations confined to their own rows; callers gather
-    logits only at valid positions. Returns ``(out, k_pool, v_pool)``.
+    logits only at valid positions. Returns ``(out, k_pool, v_pool)`` —
+    or, with ``k_scale``/``v_scale`` (quantized int8 pools, same contract
+    as :func:`attn_decode_paged`), the 5-tuple including updated scales.
     """
+    quant = k_scale is not None
     N, C, D = x.shape
     xc = x.astype(compute_dtype)
     q = (xc @ p["wq"].astype(compute_dtype)).reshape(N, C, n_heads, head_dim)
@@ -316,19 +366,46 @@ def attn_prefill_chunk_paged(
         k = rope(k, pos, rope_theta)
     # append the chunk's KV to the pool FIRST — queries attend their own
     # chunk (causally), so the read below must see these writes
-    k_pool = paged_scatter_tokens(k_pool, page_tbls, offs, lens, k)
-    v_pool = paged_scatter_tokens(v_pool, page_tbls, offs, lens, v)
+    if quant:
+        k_pool, k_scale = paged_scatter_tokens_quant(
+            k_pool, k_scale, page_tbls, offs, lens, k, per_head=scale_per_head
+        )
+        v_pool, v_scale = paged_scatter_tokens_quant(
+            v_pool, v_scale, page_tbls, offs, lens, v, per_head=scale_per_head
+        )
+    else:
+        k_pool = paged_scatter_tokens(k_pool, page_tbls, offs, lens, k)
+        v_pool = paged_scatter_tokens(v_pool, page_tbls, offs, lens, v)
     qh = jnp.swapaxes(q, 1, 2)                             # (N, Hq, C, hd)
     k_eff, v_eff = k_pool, v_pool
-    if k_pool.dtype not in (jnp.bfloat16, jnp.float16, jnp.float32):
+    if not quant and k_pool.dtype not in (
+        jnp.bfloat16, jnp.float16, jnp.float32
+    ):
         k_eff = k_pool.astype(compute_dtype)
         v_eff = v_pool.astype(compute_dtype)
     if attn_fn is not None:
-        o = attn_fn(qh, k_eff, v_eff, page_tbls, offs)
+        if quant:
+            o = attn_fn(
+                qh, k_eff, v_eff, page_tbls, offs,
+                k_scales=k_scale, v_scales=v_scale,
+            )
+        else:
+            o = attn_fn(qh, k_eff, v_eff, page_tbls, offs)
     else:
+        if quant:
+            # reference path: dequantize the whole pool densely (tests /
+            # fallback only — the kernel path never materializes this)
+            k_eff = (
+                k_pool.astype(jnp.float32) * k_scale[:, :, None, None]
+            ).astype(compute_dtype)
+            v_eff = (
+                v_pool.astype(jnp.float32) * v_scale[:, :, None, None]
+            ).astype(compute_dtype)
         o = mha_chunk_prefill_paged_ref(qh, k_eff, v_eff, page_tbls, offs)
     o = jnp.swapaxes(o, 1, 2).reshape(N, C, n_heads * head_dim)
     out = o.astype(compute_dtype) @ p["wo"].astype(compute_dtype)
+    if quant:
+        return out.astype(x.dtype), k_pool, v_pool, k_scale, v_scale
     return out.astype(x.dtype), k_pool, v_pool
 
 

@@ -78,8 +78,11 @@ class ModelConfig:
     remat: bool = True
     scan_layers: bool = True
     unroll_scans: bool = False              # flop-count mode (see roofline)
-    # beyond-paper: fp8 KV cache halves decode HBM traffic & cache footprint
-    kv_cache_dtype: str = "bf16"            # 'bf16' | 'f8'
+    # beyond-paper: fp8 KV cache halves decode HBM traffic & cache footprint;
+    # 'int8' stores *paged* pools quantized (symmetric, per-(page, head) f32
+    # scales, in-kernel dequant) for 2-4x effective pool capacity
+    kv_cache_dtype: str = "bf16"            # 'bf16' | 'f8' | 'int8'
+    kv_scale_granularity: str = "page_head"  # 'page_head' | 'page' (int8)
 
     def __post_init__(self):
         n = sum(len(pat) * reps for pat, reps in self.stages)
@@ -230,15 +233,36 @@ def init_paged_cache(
     memory wall), and cross-attention / recurrent state stays per-slot.
     The same logical page ids index every layer's pool (one allocator, many
     pools), exactly as in paged-attention serving stacks.
+
+    ``kv_cache_dtype == "int8"`` (or ``kv_dtype=jnp.int8``) stores the pools
+    *quantized*: each attn layer additionally carries ``k_scale`` /
+    ``v_scale`` leaves of shape ``(reps, num_pages, n_kv_heads)`` f32 — one
+    symmetric scale per (page, kv head), 0 for untouched pages. All writes
+    must then go through :func:`repro.core.attention
+    .paged_scatter_tokens_quant` so scales stay consistent with content.
     """
+    quant = False
     if kv_dtype is None:
-        kv_dtype = (
-            jnp.float8_e4m3fn if cfg.kv_cache_dtype == "f8" else jnp.bfloat16
-        )
-    dense = init_cache(cfg, batch, cache_len, kv_dtype=kv_dtype)
+        if cfg.kv_cache_dtype == "int8":
+            quant = True
+            kv_dtype = jnp.int8
+        else:
+            kv_dtype = (
+                jnp.float8_e4m3fn if cfg.kv_cache_dtype == "f8"
+                else jnp.bfloat16
+            )
+    else:
+        quant = jnp.dtype(kv_dtype) == jnp.int8
+    # dense sub-caches (window rings, cross-attn) stay fp — only the shared
+    # page pools quantize
+    dense = init_cache(
+        cfg, batch, cache_len,
+        kv_dtype=jnp.bfloat16 if quant else kv_dtype,
+    )
     pool = jnp.zeros(
         (num_pages, cfg.n_kv_heads, page_size, cfg.head_dim), kv_dtype
     )
+    scales = jnp.zeros((num_pages, cfg.n_kv_heads), jnp.float32)
     cache = []
     for (pattern, reps), stage_c in zip(cfg.stages, dense):
         unit = []
@@ -247,6 +271,13 @@ def init_paged_cache(
                 lc = dict(lc)
                 lc["k"] = jnp.broadcast_to(pool, (reps,) + pool.shape)
                 lc["v"] = jnp.broadcast_to(pool, (reps,) + pool.shape)
+                if quant:
+                    lc["k_scale"] = jnp.broadcast_to(
+                        scales, (reps,) + scales.shape
+                    )
+                    lc["v_scale"] = jnp.broadcast_to(
+                        scales, (reps,) + scales.shape
+                    )
             unit.append(lc)
         cache.append(tuple(unit))
     return cache
@@ -640,16 +671,26 @@ def prefill_chunks(
             up, uc = up_uc
             new_cs = []
             for kind, lp, lc in zip(pattern, up, uc):
-                h, kc, vc = attn_prefill_chunk_paged(
+                quant = "k_scale" in lc
+                out = attn_prefill_chunk_paged(
                     lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
                     lc["k"], lc["v"], page_tbls, offs, lens,
                     n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
                     head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
                     attn_fn=attn_fn,
+                    k_scale=lc["k_scale"] if quant else None,
+                    v_scale=lc["v_scale"] if quant else None,
+                    scale_per_head=cfg.kv_scale_granularity == "page_head",
                 )
+                if quant:
+                    h, kc, vc, ks, vs = out
+                    nc = {"k": kc, "v": vc, "k_scale": ks, "v_scale": vs}
+                else:
+                    h, kc, vc = out
+                    nc = {"k": kc, "v": vc}
                 x = x + h
                 x, _ = _ffn_part(lp, x, cfg)
-                new_cs.append({"k": kc, "v": vc})
+                new_cs.append(nc)
             return x, tuple(new_cs)
 
         if reps == 1 or not cfg.scan_layers:
@@ -726,14 +767,25 @@ def decode_step(
                 if kind in ATTN_KINDS:
                     window = cfg.window if kind == "win" else None
                     if page_tbl is not None and kind == "attn":
-                        h, kc, vc = attn_decode_paged(
+                        quant = "k_scale" in lc
+                        out = attn_decode_paged(
                             lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
                             lc["k"], lc["v"], page_tbl, cur_len,
                             n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
                             head_dim=cfg.head_dim,
                             rope_theta=cfg.rope_theta,
                             attn_fn=attn_fn, ctx_lens=ctx_lens,
+                            k_scale=lc["k_scale"] if quant else None,
+                            v_scale=lc["v_scale"] if quant else None,
+                            scale_per_head=(
+                                cfg.kv_scale_granularity == "page_head"
+                            ),
                         )
+                        if quant:
+                            h, kc, vc, ks, vs = out
+                        else:
+                            h, kc, vc = out
+                            ks = vs = None
                     else:
                         h, kc, vc = attn_decode(
                             lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
@@ -744,8 +796,12 @@ def decode_step(
                             attn_fn=win_attn_fn if kind == "win" else attn_fn,
                             ctx_lens=ctx_lens,
                         )
+                        ks = vs = None
                     x = x + h
                     nc = {"k": kc, "v": vc}
+                    if ks is not None:
+                        nc["k_scale"] = ks
+                        nc["v_scale"] = vs
                     if kind == "xattn":
                         from repro.core.attention import mha_decode_ref
 

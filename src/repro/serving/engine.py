@@ -68,7 +68,7 @@ from repro.core.leantile import (
     make_chunk_schedule,
     make_schedule,
 )
-from repro.core.attention import paged_gather_kv
+from repro.core.attention import paged_gather_kv, paged_gather_kv_dequant
 from repro.kernels import flash_decode, lean_decode
 from repro.kernels.ops import (
     cascade_tables,
@@ -96,7 +96,7 @@ from repro.serving.guards import (
     GuardConfig,
     PoisonError,
 )
-from repro.serving.kvpool import KVPagePool
+from repro.serving.kvpool import KVLayout, KVPagePool
 from repro.serving.prefix_cache import RadixPrefixCache, lcp_group_passes
 from repro.serving.telemetry import Gauge, Histogram
 
@@ -217,19 +217,56 @@ def _pages_admit_write(pool, src, pages, page_size):
     return pool.at[:, pages].set(chunks.astype(pool.dtype))
 
 
+def _pages_admit_write_quant(pool, scales, src, pages, page_size, per_head):
+    """Quantizing :func:`_pages_admit_write`: whole pages are replaced, so
+    each page's scale is simply *set* to the fresh content's amax/127 (no
+    requantize-grow dance — there is no surviving old content)."""
+    from repro.core.attention import quantize_kv_blocks
+
+    reps, _, H, L, hd = src.shape
+    n = pages.shape[0]
+    need = n * page_size
+    s = src[:, 0]
+    if need > L:
+        s = jnp.pad(s, ((0, 0), (0, 0), (0, need - L), (0, 0)))
+    chunks = s[:, :, :need].reshape(reps, H, n, page_size, hd)
+    chunks = jnp.moveaxis(chunks, 2, 1)          # (reps, n, H, ps, hd)
+    q, sc = quantize_kv_blocks(chunks, per_head=per_head)
+    return pool.at[:, pages].set(q.astype(pool.dtype)), scales.at[
+        :, pages
+    ].set(sc)
+
+
 def _write_slot_paged(cache, cache1, pages, slot, *, cfg: ModelConfig,
                       page_size: int):
     """Paged admission write: 'attn' pools take the page scatter, everything
     else (win rings, cross-attn, recurrent state) takes the dense slot row
-    write. Jitted with the destination donated, like ``_write_slot``."""
+    write. Jitted with the destination donated, like ``_write_slot``.
+    Quantized pools (``k_scale`` leaves present) quantize each admitted
+    page and set its scale; the prefill source cache stays dense fp."""
+    per_head = cfg.kv_scale_granularity == "page_head"
     out = []
     for (pattern, reps), st_c, st_c1 in zip(cfg.stages, cache, cache1):
         unit = []
         for kind, lc, lc1 in zip(pattern, st_c, st_c1):
             if kind == "attn":
                 nc = dict(lc)
-                nc["k"] = _pages_admit_write(lc["k"], lc1["k"], pages, page_size)
-                nc["v"] = _pages_admit_write(lc["v"], lc1["v"], pages, page_size)
+                if "k_scale" in lc:
+                    nc["k"], nc["k_scale"] = _pages_admit_write_quant(
+                        lc["k"], lc["k_scale"], lc1["k"], pages, page_size,
+                        per_head,
+                    )
+                    nc["v"], nc["v_scale"] = _pages_admit_write_quant(
+                        lc["v"], lc["v_scale"], lc1["v"], pages, page_size,
+                        per_head,
+                    )
+                else:
+                    nc["k"] = _pages_admit_write(
+                        lc["k"], lc1["k"], pages, page_size
+                    )
+                    nc["v"] = _pages_admit_write(
+                        lc["v"], lc1["v"], pages, page_size
+                    )
                 unit.append(nc)
             else:
                 unit.append(_write_slot(lc, lc1, slot))
@@ -256,16 +293,22 @@ def _kernel_decode_step_paged(
     lean backend fetches tiles through it natively, the fixed-split
     baseline gathers to dense first."""
 
-    def attn_fn(q, k_pool, v_pool, ctx):
+    def attn_fn(q, k_pool, v_pool, ctx, k_scales=None, v_scales=None):
         seg_ctx = jnp.repeat(ctx.astype(jnp.int32), cfg.n_kv_heads)
         if backend == "lean":
             return lean_decode_paged_from_schedule(
                 q, k_pool, v_pool, seg_ctx, page_tbl, sched,
                 fused=fused, interpret=interpret,
+                k_scales=k_scales, v_scales=v_scales,
             )
+        if k_scales is not None:
+            kd = paged_gather_kv_dequant(k_pool, k_scales, page_tbl)
+            vd = paged_gather_kv_dequant(v_pool, v_scales, page_tbl)
+        else:
+            kd = paged_gather_kv(k_pool, page_tbl)
+            vd = paged_gather_kv(v_pool, page_tbl)
         return flash_decode_from_lens(
-            q, paged_gather_kv(k_pool, page_tbl),
-            paged_gather_kv(v_pool, page_tbl), seg_ctx,
+            q, kd, vd, seg_ctx,
             num_splits=num_splits, tile=sched.tile_size, interpret=interpret,
         )
 
@@ -302,7 +345,7 @@ def _kernel_decode_step_cascade(
     (members, pass lengths, per-slot coverage, tables, merge descriptors)
     rides as runtime arrays, so equivalent geometries share this trace."""
 
-    def attn_fn(q, k_pool, v_pool, ctx):
+    def attn_fn(q, k_pool, v_pool, ctx, k_scales=None, v_scales=None):
         suffix = jnp.maximum(
             ctx.astype(jnp.int32) - seq_prefix_len.astype(jnp.int32), 0
         )
@@ -311,6 +354,7 @@ def _kernel_decode_step_cascade(
             q, k_pool, v_pool, seg_suffix, prefix_lens, members,
             prefix_tbl, suffix_tbl, fused_desc, csched,
             fused=fused, interpret=interpret,
+            k_scales=k_scales, v_scales=v_scales,
         )
 
     cur = jnp.max(ctx_lens)
@@ -330,7 +374,12 @@ def _copy_page(cache, src, dst, *, cfg: ModelConfig):
         for kind, lc in zip(pattern, st_c):
             if kind == "attn":
                 nc = dict(lc)
-                for key in ("k", "v"):
+                keys = ("k", "v")
+                if "k_scale" in lc:
+                    # a CoW clone copies int8 content + its scale verbatim:
+                    # exact, no requantization error
+                    keys = ("k", "v", "k_scale", "v_scale")
+                for key in keys:
                     pool = lc[key]
                     row = jax.lax.dynamic_slice_in_dim(pool, src, 1, axis=1)
                     nc[key] = jax.lax.dynamic_update_slice_in_dim(
@@ -349,7 +398,11 @@ def _fill_page(cache, page, value, *, cfg: ModelConfig):
     are traced scalars): NaN-poisoning a victim page under fault injection,
     and zero-scrubbing a quarantined slot's private pages before they
     return to the free list — recycled pages may be read through masked
-    tiles, where any *finite* garbage is harmless but NaN is not."""
+    tiles, where any *finite* garbage is harmless but NaN is not.
+
+    Quantized pools: int8 content cannot hold NaN, so the *scale* leaf
+    carries the fill value instead — ``0 * NaN = NaN`` on dequant keeps
+    NaN-poisoning observable, and a 0.0 scrub dequantizes to exact zeros."""
     out = []
     for (pattern, reps), st_c in zip(cfg.stages, cache):
         unit = []
@@ -358,12 +411,27 @@ def _fill_page(cache, page, value, *, cfg: ModelConfig):
                 nc = dict(lc)
                 for key in ("k", "v"):
                     pool = lc[key]
+                    fill = (
+                        jnp.zeros((), pool.dtype)
+                        if jnp.issubdtype(pool.dtype, jnp.integer)
+                        else value
+                    )
                     row = jnp.full(
                         pool.shape[:1] + (1,) + pool.shape[2:],
-                        value, pool.dtype,
+                        fill, pool.dtype,
                     )
                     nc[key] = jax.lax.dynamic_update_slice_in_dim(
                         pool, row, page, axis=1
+                    )
+                for key in ("k_scale", "v_scale"):
+                    if key not in lc:
+                        continue
+                    sc = lc[key]
+                    row = jnp.full(
+                        sc.shape[:1] + (1,) + sc.shape[2:], value, sc.dtype
+                    )
+                    nc[key] = jax.lax.dynamic_update_slice_in_dim(
+                        sc, row, page, axis=1
                     )
                 unit.append(nc)
             else:
@@ -438,18 +506,27 @@ def _chunk_prefill_step(
     advance through their prompts."""
     if backend == "lean":
 
-        def attn_fn(q, k_pool, v_pool, tbls, o):
+        def attn_fn(q, k_pool, v_pool, tbls, o, k_scales=None, v_scales=None):
             visible = jnp.maximum(offs + lens, 1).astype(jnp.int32)
             seg_ctx = jnp.repeat(visible, cfg.n_kv_heads)
             seg_qstart = jnp.repeat(offs.astype(jnp.int32), cfg.n_kv_heads)
             return lean_prefill_chunks(
                 q, k_pool, v_pool, seg_ctx, seg_qstart, tbls, sched,
-                interpret=interpret,
+                interpret=interpret, k_scales=k_scales, v_scales=v_scales,
             )
 
     elif backend == "fixed":
 
-        def attn_fn(q, k_pool, v_pool, tbls, o):
+        def attn_fn(q, k_pool, v_pool, tbls, o, k_scales=None, v_scales=None):
+            if k_scales is not None:
+                # fixed-split baseline has no in-kernel dequant — widen the
+                # pool view first (bench/fallback path only)
+                k_pool = (
+                    k_pool.astype(jnp.float32) * k_scales[:, :, None, None]
+                ).astype(jnp.bfloat16)
+                v_pool = (
+                    v_pool.astype(jnp.float32) * v_scales[:, :, None, None]
+                ).astype(jnp.bfloat16)
             return flash_prefill_paged(
                 q, k_pool, v_pool, tbls, o, interpret=interpret
             )
@@ -491,7 +568,21 @@ class DecodeEngine:
         cascade_stable_ticks: int = 2,
         faults: Optional[FaultInjector] = None,
         guards: Optional[GuardConfig] = None,
+        kv_dtype: Optional[str] = None,
     ):
+        # ``kv_dtype`` overrides the model config's KV storage dtype for
+        # this engine — 'int8' turns on quantized paged pools (per-(page,
+        # head) f32 scales, in-kernel dequant) for 2-4x effective capacity
+        if kv_dtype is not None and kv_dtype != cfg.kv_cache_dtype:
+            import dataclasses
+
+            cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_dtype)
+        self.quant = paged and cfg.kv_cache_dtype == "int8"
+        if cfg.kv_cache_dtype == "int8" and not paged:
+            raise ValueError(
+                "kv_dtype='int8' quantizes the paged pools — requires "
+                "paged=True (dense caches stay fp)"
+            )
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -566,7 +657,19 @@ class DecodeEngine:
             # pass a smaller num_pages to oversubscribe slots vs memory
             if num_pages is None:
                 num_pages = 1 + max_batch * self.pages_per_slot
-            self.pool = KVPagePool(num_pages, self.tile)
+            n_attn = sum(
+                reps for pattern, reps in cfg.stages
+                for kind in pattern if kind == "attn"
+            )
+            layout = KVLayout(
+                kv_dtype=cfg.kv_cache_dtype,
+                n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.head_dim,
+                page_size=self.tile,
+                n_attn_layers=n_attn,
+                scale_granularity=cfg.kv_scale_granularity,
+            )
+            self.pool = KVPagePool(num_pages, self.tile, layout=layout)
             self.page_tbl = np.zeros(
                 (max_batch, self.pages_per_slot), dtype=np.int32
             )
@@ -590,16 +693,9 @@ class DecodeEngine:
                 )
         self.prefix_cache: Optional[RadixPrefixCache] = None
         if prefix_cache:
-            n_attn = sum(
-                reps for pattern, reps in cfg.stages
-                for kind in pattern if kind == "attn"
-            )
-            kv_bytes = 1 if cfg.kv_cache_dtype == "f8" else 2
-            self.prefix_cache = RadixPrefixCache(
-                self.pool,
-                page_bytes=2 * n_attn * cfg.n_kv_heads * self.tile
-                * cfg.head_dim * kv_bytes,
-            )
+            # byte accounting now flows from the pool's layout descriptor
+            # (the old static page_bytes knob drifted from the true dtype)
+            self.prefix_cache = RadixPrefixCache(self.pool)
         # per-slot prefix-sharing state: which logical tiles are shared
         # (immutable — copy-on-write before any KV write lands in one) and
         # how many *leading full* shared pages form the cascade prefix
@@ -1324,6 +1420,7 @@ class DecodeEngine:
             fused = self.cascade_fused and cascade_uses_fused(
                 csched, self.cfg.n_heads // self.cfg.n_kv_heads,
                 self.cfg.head_dim,
+                kv_elem_bytes=1 if self.quant else 2,
             )
             fused_desc = self._cascade_fused_desc(csched, binding, fused)
             if csched.signature not in self._casc_signatures:
@@ -1572,6 +1669,20 @@ class DecodeEngine:
         self.degraded_gauge.set(n)
         self.stats.degraded = self.degraded_gauge.as_dict()
 
+    def _kv_scale_arrays(self):
+        """Host copies of every quantized pool's per-(page, head) scale
+        array — one ``(num_pages, Hkv)`` entry per attn layer rep, for the
+        pool audit's scale invariants (live pages finite and >= 0)."""
+        out = []
+        for (pattern, reps), st_c in zip(self.cfg.stages, self.cache):
+            for kind, lc in zip(pattern, st_c):
+                if kind != "attn" or "k_scale" not in lc:
+                    continue
+                for key in ("k_scale", "v_scale"):
+                    arr = np.asarray(lc[key])
+                    out.extend(arr[r] for r in range(arr.shape[0]))
+        return out
+
     def _run_audits(self):
         """Periodic invariant audits: every ``audit_interval`` decode calls
         run ``pool.check()`` then ``prefix_cache.check()``; a violation
@@ -1592,7 +1703,10 @@ class DecodeEngine:
             targets.append(("prefix_cache", self.prefix_cache))
         for name, obj in targets:
             try:
-                obj.check()
+                if name == "kv_pool" and self.quant:
+                    obj.check(scales=self._kv_scale_arrays())
+                else:
+                    obj.check()
             except AssertionError as e:
                 self.stats.audit_failures += 1
                 if gc.audit_action == "raise":

@@ -45,9 +45,85 @@ from typing import Callable, Dict, Hashable, Iterable, List, Optional, Sequence
 
 import numpy as np
 
-__all__ = ["KVPagePool", "PoolStats", "NULL_PAGE"]
+__all__ = ["KVLayout", "KVPagePool", "PoolStats", "NULL_PAGE"]
 
 NULL_PAGE = 0
+
+# bytes per stored KV element, by layout dtype tag
+KV_ELEM_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "f8": 1, "int8": 1}
+
+
+@dataclass(frozen=True)
+class KVLayout:
+    """Dtype-aware description of what one physical page holds.
+
+    The pool itself is a host-side allocator and never touches bytes; this
+    descriptor is the single source of truth for *how big* a page is, so
+    every consumer (engine telemetry, prefix-cache byte accounting, bench
+    capacity math) derives the same number instead of re-hardcoding
+    ``2 * layers * Hkv * page * d * elem_bytes`` with a stale dtype.
+
+    ``kv_dtype='int8'`` marks a quantized layout: pages store symmetric
+    int8 values and fp32 scales ride alongside (one per (page, kv-head)
+    at ``scale_granularity='page_head'``, one per page — stored broadcast
+    across head rows so the kernel-side layout is identical — at
+    ``'page'``). Scale bytes are part of ``page_bytes``: they are real
+    pool footprint.
+    """
+
+    kv_dtype: str = "bf16"                # 'f32'|'bf16'|'f16'|'f8'|'int8'
+    n_kv_heads: int = 1
+    head_dim: int = 1
+    page_size: int = 1
+    n_attn_layers: int = 1
+    scale_granularity: str = "page_head"  # 'page_head' | 'page'
+
+    def __post_init__(self):
+        if self.kv_dtype not in KV_ELEM_BYTES:
+            raise ValueError(
+                f"unknown kv_dtype {self.kv_dtype!r} "
+                f"(expected one of {sorted(KV_ELEM_BYTES)})"
+            )
+        if self.scale_granularity not in ("page_head", "page"):
+            raise ValueError(
+                f"unknown scale_granularity {self.scale_granularity!r}"
+            )
+
+    @property
+    def quantized(self) -> bool:
+        return self.kv_dtype == "int8"
+
+    @property
+    def elem_bytes(self) -> int:
+        return KV_ELEM_BYTES[self.kv_dtype]
+
+    @property
+    def scale_bytes_per_page(self) -> int:
+        """fp32 scale bytes riding with one page across k+v and all attn
+        layers (0 for unquantized layouts)."""
+        if not self.quantized:
+            return 0
+        per_layer = self.n_kv_heads if self.scale_granularity == "page_head" else 1
+        return 2 * 4 * per_layer * self.n_attn_layers
+
+    @property
+    def page_bytes(self) -> int:
+        """Total bytes one page id pins across the whole layer stack
+        (k + v payload plus any scale sidecar)."""
+        payload = (
+            2 * self.n_attn_layers * self.n_kv_heads
+            * self.page_size * self.head_dim * self.elem_bytes
+        )
+        return payload + self.scale_bytes_per_page
+
+    def as_dict(self) -> dict:
+        return {
+            "kv_dtype": self.kv_dtype,
+            "scale_granularity": self.scale_granularity,
+            "elem_bytes": self.elem_bytes,
+            "page_bytes": self.page_bytes,
+            "quantized": self.quantized,
+        }
 
 
 @dataclass
@@ -99,13 +175,20 @@ class KVPagePool:
     those pages that actually returned to the free list (refcount 0).
     """
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int,
+                 layout: Optional[KVLayout] = None):
         if num_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is the null page)")
         if page_size <= 0:
             raise ValueError("page_size must be positive")
+        if layout is not None and layout.page_size != page_size:
+            raise ValueError(
+                f"layout.page_size {layout.page_size} != pool page_size "
+                f"{page_size}"
+            )
         self.num_pages = int(num_pages)
         self.page_size = int(page_size)
+        self.layout = layout
         # LIFO free list: recently-freed pages are re-used first, which keeps
         # the working set of hot pages small
         self._free: List[int] = list(range(self.num_pages - 1, 0, -1))
@@ -123,6 +206,13 @@ class KVPagePool:
     def usable_pages(self) -> int:
         """Pages the allocator may hand out (excludes the null page)."""
         return self.num_pages - 1
+
+    @property
+    def page_bytes(self) -> int:
+        """Bytes one page pins across the layer stack, from the layout
+        descriptor (0 when the pool was built without one — the caller
+        opted out of byte accounting)."""
+        return self.layout.page_bytes if self.layout is not None else 0
 
     @property
     def num_free(self) -> int:
@@ -342,8 +432,17 @@ class KVPagePool:
         self.stats.repairs += 1
         return fixed
 
-    def check(self) -> None:
-        """Assert the pool accounting invariants (tests / debug ticks)."""
+    def check(self, *, scales: Optional[Sequence[np.ndarray]] = None) -> None:
+        """Assert the pool accounting invariants (tests / debug ticks).
+
+        ``scales``: optional iterable of fp32 scale arrays whose leading
+        axis is the page id (e.g. the engine's per-layer ``(num_pages,
+        H_kv)`` k/v scale sidecars, host-fetched). When given, every
+        *live* page's scales must be finite and non-negative — a NaN/Inf
+        scale would dequantize an entire page to garbage, and a negative
+        one can never come out of amax/127 quantization. Free pages are
+        exempt (their scales are stale by design until re-admit
+        overwrites them)."""
         holders: Dict[int, int] = {}
         for seq, pages in self._seq_pages.items():
             assert pages, f"empty page list left behind for {seq!r}"
@@ -365,6 +464,22 @@ class KVPagePool:
         overlap = live & set(self._free)
         assert not overlap, f"pages both live and free: {overlap}"
         assert len(self._free) == len(set(self._free)), "free list duplicates"
+        if scales is not None and live:
+            idx = np.asarray(sorted(live))
+            for i, arr in enumerate(scales):
+                a = np.asarray(arr)
+                assert a.shape[0] >= self.num_pages, (
+                    f"scale array {i} covers {a.shape[0]} pages "
+                    f"< pool {self.num_pages}"
+                )
+                vals = a[idx]
+                assert np.isfinite(vals).all(), (
+                    f"non-finite scales on live pages (array {i}): "
+                    f"{idx[~np.isfinite(vals).reshape(len(idx), -1).all(axis=1)]}"
+                )
+                assert (vals >= 0).all(), (
+                    f"negative scales on live pages (array {i})"
+                )
 
     def fragmentation(self) -> float:
         """1 - (longest contiguous free run / free pages). Pages are
@@ -379,7 +494,7 @@ class KVPagePool:
 
     def as_dict(self) -> dict:
         """Stats snapshot for EngineStats / benchmarks."""
-        return {
+        d = {
             "num_pages": self.num_pages,
             "page_size": self.page_size,
             "allocated": self.num_allocated,
@@ -390,3 +505,6 @@ class KVPagePool:
             "fragmentation": self.fragmentation(),
             **self.stats.as_dict(),
         }
+        if self.layout is not None:
+            d["layout"] = self.layout.as_dict()
+        return d

@@ -124,19 +124,27 @@ class PrefixCacheStats:
 class RadixPrefixCache:
     """Token-keyed radix cache of KV pages over a :class:`KVPagePool`.
 
-    ``page_bytes`` (per page per layer-stack, optional) is only used to
-    report ``bytes_saved`` in :meth:`as_dict`.
+    Byte accounting (``bytes_cached``/``bytes_saved`` in :meth:`as_dict`)
+    comes from the pool's :class:`~repro.serving.kvpool.KVLayout`
+    descriptor — there is deliberately no constructor knob: a static
+    number would silently go stale the moment the pool layout (dtype,
+    scale sidecar) changes under it.
     """
 
-    def __init__(self, pool: KVPagePool, *, page_bytes: int = 0):
+    def __init__(self, pool: KVPagePool):
         self.pool = pool
         self.page_size = pool.page_size
-        self.page_bytes = int(page_bytes)
         self.root = _Node((), -1, 0, None)
         self._clock = 0
         self._num_nodes = 0
         self._pages: set = set()          # physical pages backing trie nodes
         self.stats = PrefixCacheStats()
+
+    @property
+    def page_bytes(self) -> int:
+        """Live view of the pool layout's per-page byte cost (0 when the
+        pool has no layout descriptor)."""
+        return self.pool.page_bytes
 
     # ----------------------------------------------------------------- sizes
     def __len__(self) -> int:

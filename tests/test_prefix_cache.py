@@ -17,7 +17,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.serving.kvpool import KVPagePool
+from repro.serving.kvpool import KVLayout, KVPagePool
 from repro.serving.prefix_cache import CACHE_SEQ, RadixPrefixCache
 
 
@@ -113,8 +113,14 @@ def test_pool_alloc_share_evict_churn_accounting(ops, usable):
 
 # ----------------------------------------------------------------- radix trie
 def _mk(usable=64, ps=4):
-    pool = KVPagePool(usable + 1, page_size=ps)
-    return pool, RadixPrefixCache(pool, page_bytes=128)
+    # byte accounting flows from the pool's layout descriptor now — the
+    # static page_bytes constructor knob is gone
+    layout = KVLayout(
+        kv_dtype="bf16", n_kv_heads=2, head_dim=8, page_size=ps,
+        n_attn_layers=1,
+    )
+    pool = KVPagePool(usable + 1, page_size=ps, layout=layout)
+    return pool, RadixPrefixCache(pool)
 
 
 def _donate(pool, cache, seq_key, tokens):
