@@ -53,6 +53,7 @@ METRICS = {
         "prefix", "mixed_depth", "headline", "fused_over_two_call_speedup",
     ),
     "hardening": ("hardening", "hardened_over_plain_throughput"),
+    "observability": ("observability", "traced_over_untraced_throughput"),
     "quant_capacity": ("quant", "capacity_ratio_vs_bf16"),
     "quant_agreement": ("quant", "token_agreement"),
 }
@@ -62,6 +63,9 @@ METRICS = {
 # contract (< 3%), not a noise bar
 THRESHOLDS = {
     "hardening": 0.03,
+    # same contract for tracing: an *enabled* tracer must cost < 3%
+    # (disabled tracing is structurally free — a shared no-op span)
+    "observability": 0.03,
     # layout math, not wall-clock: any drop means the dtype accounting
     # (page_bytes / scale sidecar) regressed, so gate it tight
     "quant_capacity": 0.01,

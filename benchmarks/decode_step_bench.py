@@ -305,6 +305,102 @@ def _run_hardening_section(cfg, params, n_ticks: int) -> dict:
     }
 
 
+def _run_observability_section(cfg, params, n_ticks: int,
+                               flight_out: str = "FLIGHT_sample.json") -> dict:
+    """Tracing overhead: the same paged lean-fused engine, untraced
+    (``NULL_TRACER`` default — the production setting) vs traced (an
+    enabled :class:`repro.obs.trace.Tracer`, which also times a
+    ``block_until_ready`` per decode span for sync attribution). The
+    acceptance contract mirrors the hardening one: the traced/untraced
+    throughput ratio must stay >= 0.97 (gated by
+    ``benchmarks.check_regression``). The protocol tightens the
+    hardening section's alternating *rounds* to alternating *ticks*:
+    within a round each engine ticks in lockstep (plain, traced, plain,
+    traced, ...) and the round's estimate is the per-engine median tick
+    time — on a shared host, drift over a whole round (~10%) dwarfs the
+    microsecond-level span cost being measured, and pairwise
+    interleaving puts both engines inside the same drift window.
+
+    Also writes ``flight_out``: a real flight-recorder postmortem bundle
+    from a one-shot injected ``nan_output`` fault (CI uploads it as an
+    inspectable artifact next to BENCH_decode_step.json).
+    """
+    import statistics
+
+    from repro.obs.trace import Tracer
+    from repro.serving.faults import FaultInjector, FaultSpec
+    from repro.serving.guards import GuardConfig
+
+    def mk(traced: bool):
+        kw = {"tracer": Tracer()} if traced else {}
+        return _mk_engine(
+            cfg, params, "lean", use_fast_path=True, fused=True,
+            paged=True, page_size=16, **kw,
+        )
+
+    eng_plain, eng_traced = mk(False), mk(True)
+    _ticks_per_sec(eng_plain, cfg, 4)
+    _ticks_per_sec(eng_traced, cfg, 4)
+
+    rounds, per_round = 5, max(9, n_ticks)
+    ratios, tps_u_all, tps_t_all = [], [], []
+    for _ in range(rounds):
+        tu, tt = [], []
+        for _ in range(per_round):
+            t0 = time.perf_counter()
+            eng_plain.tick()
+            tu.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            eng_traced.tick()
+            tt.append(time.perf_counter() - t0)
+        tick_u = statistics.median(tu)
+        tick_t = statistics.median(tt)
+        tps_u_all.append(1.0 / tick_u)
+        tps_t_all.append(1.0 / tick_t)
+        ratios.append(tick_u / tick_t)
+
+    spans = eng_traced.tracer.spans
+    dk = [s for s in spans if s["name"] == "decode_kernel"]
+    sync_ms = (
+        statistics.median([s.get("sync_ms", 0.0) for s in dk])
+        if dk else 0.0
+    )
+
+    # sample postmortem artifact: a short hardened run with one injected
+    # transient-NaN fault, dumped through the real guard path
+    inj = FaultInjector(
+        {"nan_output": FaultSpec(rate=1.0, start=3, max_fires=1)}, seed=1
+    )
+    eng_f = _mk_engine(
+        cfg, params, "lean", use_fast_path=True, fused=True,
+        paged=True, page_size=16, faults=inj,
+        guards=GuardConfig(heal_after=2),
+    )
+    _feed(eng_f, cfg, n=3)
+    for _ in range(10):
+        eng_f.tick()
+    sample = eng_f.flight.dump("ci-sample", path=flight_out)
+
+    return {
+        "ticks_per_sec_untraced": statistics.median(tps_u_all),
+        "ticks_per_sec_traced": statistics.median(tps_t_all),
+        "traced_over_untraced_throughput": statistics.median(ratios),
+        "rounds": rounds,
+        "ticks_per_round": per_round,
+        "spans_recorded": len(spans),
+        "decode_sync_ms_median": sync_ms,
+        "flight_sample": {
+            "path": flight_out,
+            "events": len(sample["events"]),
+            "fault_fires": sum(
+                1 for ev in sample["events"]
+                if ev["kind"] == "fault_fire"
+            ),
+            "injector_fires": inj.total_fires,
+        },
+    }
+
+
 def _run_quant_section(cfg, params, n_ticks: int) -> dict:
     """int8 page quantization: effective pool capacity per byte vs bf16
     (the headline — page_bytes straight from the pool's layout
@@ -411,6 +507,9 @@ def run_decode_step(n_ticks: int = 24, out_path: str = "BENCH_decode_step.json",
     result["paged"] = _run_paged_section(cfg, params, n_ticks)
     result["scheduler"] = _run_scheduler_section(cfg, params)
     result["hardening"] = _run_hardening_section(cfg, params, n_ticks)
+    result["observability"] = _run_observability_section(
+        cfg, params, n_ticks
+    )
     result["quant"] = _run_quant_section(cfg, params, n_ticks)
     Path(out_path).write_text(json.dumps(result, indent=1))
     if rows is not None:
@@ -433,6 +532,9 @@ def run_decode_step(n_ticks: int = 24, out_path: str = "BENCH_decode_step.json",
                      s["blocking"]["ttft_long_s"]))
         rows.append(("decode_step_hardened_over_plain", 0.0,
                      result["hardening"]["hardened_over_plain_throughput"]))
+        rows.append(("decode_step_traced_over_untraced", 0.0,
+                     result["observability"][
+                         "traced_over_untraced_throughput"]))
         qn = result["quant"]
         rows.append(("decode_step_quant_capacity_ratio", 0.0,
                      qn["capacity_ratio_vs_bf16"]))
@@ -483,6 +585,15 @@ def main():
         f"hardening: {h['ticks_per_sec_hardened']:.2f} ticks/s hardened vs "
         f"{h['ticks_per_sec_plain']:.2f} plain "
         f"({h['hardened_over_plain_throughput']:.3f}x, gate >= 0.97)"
+    )
+    ob = result["observability"]
+    print(
+        f"observability: {ob['ticks_per_sec_traced']:.2f} ticks/s traced "
+        f"vs {ob['ticks_per_sec_untraced']:.2f} untraced "
+        f"({ob['traced_over_untraced_throughput']:.3f}x, gate >= 0.97); "
+        f"{ob['spans_recorded']} spans, median decode sync "
+        f"{ob['decode_sync_ms_median']:.2f}ms; flight sample -> "
+        f"{ob['flight_sample']['path']}"
     )
     qn = result["quant"]
     print(

@@ -130,6 +130,25 @@ class LeanSchedule:
             return NotImplemented
         return self.signature == other.signature
 
+    # ------------------------------------------------------ observability
+    def work_summary(self) -> dict:
+        """Scalar work totals for tracing/attribution (tiles, segments,
+        pieces, real KV tokens covered). Memoized on the instance like
+        the packed descriptors, so annotating a trace span with a
+        cache-hit schedule costs a dict copy and nothing else."""
+        ws = self.__dict__.get("_work_summary")
+        if ws is None:
+            ws = {
+                "tile_size": int(self.tile_size),
+                "total_tiles": int(self.total_tiles),
+                "num_segments": int(self.num_segments),
+                "num_pieces": int(self.num_pieces),
+                "num_workers": int(self.num_workers),
+                "kv_tokens": int(self.seg_len.sum()),
+            }
+            object.__setattr__(self, "_work_summary", ws)
+        return ws
+
     # ------------------------------------------------- packed descriptors
     def packed_descriptors(self) -> np.ndarray:
         """The (7, G*T) int32 scalar-prefetch array the two-phase kernel

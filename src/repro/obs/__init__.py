@@ -1,0 +1,44 @@
+"""Serving-wide observability: tracing, metrics registry, flight recorder.
+
+Three cooperating layers, all zero-overhead when disabled:
+
+  * :mod:`repro.obs.trace` — a structured tracer with nestable spans
+    (``tick`` > ``schedule_build`` / ``decode_kernel`` / ...), per-request
+    lifecycle timelines (QUEUED -> PREFILLING -> DECODING -> FINISHED with
+    TTFT/TPOT/queue-wait per uid), and a JSON trace-file format that
+    :mod:`repro.obs.report` renders;
+  * :mod:`repro.obs.metrics` — a unified labeled metrics registry
+    (Counter / Gauge / Histogram) with JSON and Prometheus-text
+    exporters; the engine, scheduler, kvpool, prefix cache, and guards
+    register into it instead of hand-rolling stats dicts;
+  * :mod:`repro.obs.flight` — a bounded ring buffer of recent serving
+    events, dumped to a JSON postmortem bundle when the self-healing
+    guards degrade/poison a slot or a fault is injected.
+
+``python -m repro.obs report TRACE`` renders per-tick predicted-vs-
+measured attribution and per-request timelines from a recorded trace.
+"""
+from repro.obs.flight import FlightRecorder, load_flight_dump
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    default_bounds,
+    parse_prometheus,
+)
+from repro.obs.trace import NULL_TRACER, Tracer, load_trace
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "default_bounds",
+    "parse_prometheus",
+    "Tracer",
+    "NULL_TRACER",
+    "load_trace",
+    "FlightRecorder",
+    "load_flight_dump",
+]

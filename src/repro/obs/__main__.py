@@ -1,0 +1,47 @@
+"""CLI: render traces and flight dumps.
+
+    python -m repro.obs report TRACE.json [--limit N]
+    python -m repro.obs flight FLIGHT.json [--tail N]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.obs.flight import load_flight_dump
+from repro.obs.report import render_flight, render_report
+from repro.obs.trace import load_trace
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Render observability artifacts.",
+    )
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    rp = sub.add_parser(
+        "report",
+        help="per-tick attribution + request timelines from a trace",
+    )
+    rp.add_argument("trace", help="trace JSON written by Tracer.save()")
+    rp.add_argument("--limit", type=int, default=40,
+                    help="max ticks to print (default 40)")
+
+    fp = sub.add_parser(
+        "flight", help="render a flight-recorder postmortem bundle"
+    )
+    fp.add_argument("dump", help="flight dump JSON")
+    fp.add_argument("--tail", type=int, default=20,
+                    help="trailing events to print (default 20)")
+
+    args = p.parse_args(argv)
+    if args.cmd == "report":
+        print(render_report(load_trace(args.trace), limit=args.limit))
+    else:
+        print(render_flight(load_flight_dump(args.dump), tail=args.tail))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

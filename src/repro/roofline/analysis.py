@@ -157,6 +157,52 @@ def analyze(
     )
 
 
+def schedule_decode_cost(
+    sched,
+    *,
+    n_q_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    kv_elem_bytes: int = 4,
+    q_rows: int = 1,
+) -> Dict[str, float]:
+    """Predicted cost of one stream-K decode pass over ``sched``.
+
+    ``sched`` is a ``LeanSchedule``: ``seg_len`` holds the per-segment
+    context length in tokens (one segment per (batch, kv_head) pair), so
+    the KV traffic the kernel must stream is exactly
+
+        kv_bytes = sum(seg_len) * head_dim * 2 * kv_elem_bytes
+
+    (K and V planes), and the attention flops per query row are the
+    usual QK^T + PV = 4 * head_dim per (q_head, kv token) with
+    ``n_q_heads / n_kv_heads`` query heads sharing each segment's KV.
+    ``tile_kv_bytes`` is the tile-padded variant (``total_tiles *
+    tile_size`` KV positions) — what the kernel actually walks, padding
+    included. Predicted times come from the module's hardware model
+    (``HBM_BW`` / ``PEAK_FLOPS``); the obs report compares them to
+    measured ``decode_kernel`` span milliseconds.
+    """
+    kv_tokens = int(sched.seg_len.sum())
+    tile_kv_tokens = int(sched.total_tiles) * int(sched.tile_size)
+    plane = head_dim * 2 * kv_elem_bytes           # K + V per token
+    group = max(1, n_q_heads // max(1, n_kv_heads))
+    flops = 4.0 * head_dim * group * q_rows * kv_tokens
+    kv_bytes = float(kv_tokens * plane)
+    tile_kv_bytes = float(tile_kv_tokens * plane)
+    return {
+        "kv_tokens": kv_tokens,
+        "kv_bytes": kv_bytes,
+        "tile_kv_bytes": tile_kv_bytes,
+        "flops": flops,
+        "pred_mem_ms": tile_kv_bytes / HBM_BW * 1e3,
+        "pred_compute_ms": flops / PEAK_FLOPS * 1e3,
+        "total_tiles": int(sched.total_tiles),
+        "num_segments": int(sched.num_segments),
+        "num_pieces": int(sched.num_pieces),
+    }
+
+
 def model_flops_for(cfg, shape_spec, n_params_active: int) -> float:
     """Analytic 'useful' flops per step.
 

@@ -96,9 +96,12 @@ from repro.serving.guards import (
     GuardConfig,
     PoisonError,
 )
+from repro.obs.flight import FlightRecorder
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER, Tracer
+from repro.roofline.analysis import schedule_decode_cost
 from repro.serving.kvpool import KVLayout, KVPagePool
 from repro.serving.prefix_cache import RadixPrefixCache, lcp_group_passes
-from repro.serving.telemetry import Gauge, Histogram
 
 import contextlib
 
@@ -129,49 +132,99 @@ class Request:
         return len(self.generated) >= self.max_new_tokens
 
 
-@dataclass
-class EngineStats:
-    ticks: int = 0
-    tokens_generated: int = 0
-    prefills: int = 0                 # blocking whole-prompt admissions
-    chunk_prefills: int = 0           # chunked-prefill chunk executions
-    prefill_tokens: int = 0           # prompt tokens pushed through chunks
-    preemptions: int = 0
-    prefill_compiles: int = 0         # distinct bucketed prefill shapes
-    prefix_matched_tokens: int = 0    # prompt tokens served from the radix cache
-    prefix_attach_count: int = 0      # admissions that hit the radix cache
-    cow_copies: int = 0               # copy-on-write page copies
-    cascade_ticks: int = 0            # decode ticks run on the cascade path
-    cascade_grouped_slots: int = 0    # cumulative slots decoded via a group
-    cascade_grouped_passes: int = 0   # cumulative grouped passes executed
-    cascade_fused_ticks: int = 0      # cascade ticks on the fused kernel
-    cascade_retraces: int = 0         # distinct cascade schedule geometries
-    cascade_stability_skips: int = 0  # groupings held back by the N-tick guard
-    cascade_levels_max: int = 0       # deepest pass nesting seen on any tick
-    cascade_last: dict = field(default_factory=dict)  # last tick's grouping
-    schedules: List[dict] = field(default_factory=list)
-    schedule_cache: dict = field(default_factory=dict)
-    kv_pool: dict = field(default_factory=dict)
-    prefix_cache: dict = field(default_factory=dict)
+# Counter-valued EngineStats fields, published to the metrics registry as
+# ``engine_<name>`` counters. The attribute routing in EngineStats keeps
+# every existing ``stats.<name> += 1`` / ``stats.<name> = v`` call site
+# working while the registry becomes the single source of truth.
+_STAT_COUNTERS = (
+    "ticks",
+    "tokens_generated",
+    "prefills",                  # blocking whole-prompt admissions
+    "chunk_prefills",            # chunked-prefill chunk executions
+    "prefill_tokens",            # prompt tokens pushed through chunks
+    "preemptions",
+    "prefill_compiles",          # distinct bucketed prefill shapes
+    "prefix_matched_tokens",     # prompt tokens served from the radix cache
+    "prefix_attach_count",       # admissions that hit the radix cache
+    "cow_copies",                # copy-on-write page copies
+    "cascade_ticks",             # decode ticks run on the cascade path
+    "cascade_grouped_slots",     # cumulative slots decoded via a group
+    "cascade_grouped_passes",    # cumulative grouped passes executed
+    "cascade_fused_ticks",       # cascade ticks on the fused kernel
+    "cascade_retraces",          # distinct cascade schedule geometries
+    "cascade_stability_skips",   # groupings held back by the N-tick guard
+    "cascade_levels_max",        # deepest pass nesting seen on any tick
     # self-healing / fault-injection telemetry (guards + FaultInjector)
-    nan_ticks: int = 0                # slot-ticks quarantined (non-finite)
-    degrade_escalations: int = 0      # slot moves DOWN the fallback chain
-    degrade_heals: int = 0            # slot moves back UP toward fast path
-    poisoned_slots: int = 0           # slots preempted after exhausting it
-    donation_aborts: int = 0          # prefix-cache donations unwound
-    audits_run: int = 0               # periodic invariant audit sweeps
-    audit_failures: int = 0           # audits that caught a violation
-    audit_repairs: int = 0            # violations fixed by repair()
-    degraded: dict = field(default_factory=dict)   # degraded-mode gauge
-    faults: dict = field(default_factory=dict)     # injector fire counts
-    # per-tick prefill-vs-decode token split (capped like the schedule log)
-    tick_prefill_tokens: List[int] = field(default_factory=list)
-    tick_decode_tokens: List[int] = field(default_factory=list)
-    # latency histograms (seconds) — populated by the Scheduler, which is
-    # the layer that knows arrival/first-token/per-token timestamps
-    ttft: Histogram = field(default_factory=Histogram)
-    tpot: Histogram = field(default_factory=Histogram)
-    queue_wait: Histogram = field(default_factory=Histogram)
+    "nan_ticks",                 # slot-ticks quarantined (non-finite)
+    "degrade_escalations",       # slot moves DOWN the fallback chain
+    "degrade_heals",             # slot moves back UP toward fast path
+    "poisoned_slots",            # slots preempted after exhausting it
+    "donation_aborts",           # prefix-cache donations unwound
+    "audits_run",                # periodic invariant audit sweeps
+    "audit_failures",            # audits that caught a violation
+    "audit_repairs",             # violations fixed by repair()
+)
+
+
+class EngineStats:
+    """Engine telemetry, backed by a :class:`repro.obs.metrics.
+    MetricsRegistry`.
+
+    The public attribute surface is unchanged from the old dataclass —
+    counters read/assign as plain ints, the latency histograms keep
+    their ``observe``/``as_dict`` API, and the snapshot dict fields
+    (``kv_pool``, ``schedule_cache``, ...) are ordinary attributes — but
+    counter and histogram state now lives in registry metrics named
+    ``engine_*``, so ``registry.as_dict()`` / ``to_prometheus()`` export
+    everything without a second bookkeeping path.
+
+    DEPRECATED access pattern: reading hand-rolled stats dict shapes off
+    this object; prefer ``engine.metrics`` (the registry) for new code.
+    """
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._counters = {
+            name: self.registry.counter(f"engine_{name}")
+            for name in _STAT_COUNTERS
+        }
+        self.cascade_last = {}       # last tick's grouping
+        self.schedules = []
+        self.schedule_cache = {}
+        self.kv_pool = {}
+        self.prefix_cache = {}
+        self.degraded = {}           # degraded-mode gauge snapshot
+        self.faults = {}             # injector fire counts
+        # per-tick prefill-vs-decode token split (capped like the
+        # schedule log)
+        self.tick_prefill_tokens = []
+        self.tick_decode_tokens = []
+        # latency histograms (seconds) — populated by the Scheduler, which
+        # is the layer that knows arrival/first-token/per-token timestamps
+        self.ttft = self.registry.histogram(
+            "engine_ttft_seconds", help="time to first token"
+        )
+        self.tpot = self.registry.histogram(
+            "engine_tpot_seconds", help="inter-token latency"
+        )
+        self.queue_wait = self.registry.histogram(
+            "engine_queue_wait_seconds", help="submit-to-admit wait"
+        )
+
+    # counters masquerade as plain int attributes: __getattr__ only fires
+    # for names not in __dict__, i.e. exactly the routed counter fields
+    def __getattr__(self, name):
+        counters = self.__dict__.get("_counters")
+        if counters is not None and name in counters:
+            return counters[name].value
+        raise AttributeError(name)
+
+    def __setattr__(self, name, value):
+        counters = self.__dict__.get("_counters")
+        if counters is not None and name in counters:
+            counters[name].value = int(value)
+        else:
+            object.__setattr__(self, name, value)
 
     def latency_dict(self) -> dict:
         return {
@@ -569,6 +622,10 @@ class DecodeEngine:
         faults: Optional[FaultInjector] = None,
         guards: Optional[GuardConfig] = None,
         kv_dtype: Optional[str] = None,
+        tracer: Optional[Tracer] = None,
+        metrics: Optional[MetricsRegistry] = None,
+        flight: Optional[FlightRecorder] = None,
+        flight_dir: Optional[str] = None,
     ):
         # ``kv_dtype`` overrides the model config's KV storage dtype for
         # this engine — 'int8' turns on quantized paged pools (per-(page,
@@ -616,13 +673,34 @@ class DecodeEngine:
         self.interpret = (
             jax.default_backend() == "cpu" if interpret is None else interpret
         )
-        self.stats = EngineStats()
+
+        # observability: structured tracer (NULL_TRACER is the module-wide
+        # disabled instance — one falsy attribute check on the hot path),
+        # unified metrics registry (EngineStats counters live in it), and
+        # the always-on flight recorder (bounded ring; dumps a postmortem
+        # bundle on degrade/poison/fatal/injected-fault)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.stats = EngineStats(registry=self.metrics)
+        self.flight = (
+            flight if flight is not None
+            else FlightRecorder(dump_dir=flight_dir)
+        )
+        if flight is not None and flight_dir is not None:
+            self.flight.dump_dir = flight_dir
+        self._tick_dumped = False       # one injected-fault dump per tick
+        self._fires_dumped = 0          # injector fires already dumped for
+        self._sched_costs: dict = {}    # schedule -> roofline cost meta
 
         # fault injection + self-healing guards. Both default OFF; with
         # neither configured every hot-path hook below is a single `is None`
         # attribute test, keeping the hardened engine's fault-free tick
         # byte-for-byte the old code path (the perf gate enforces <3%).
         self.faults = faults
+        if faults is not None and faults.recorder is None:
+            # every injected fire logs a fault_fire event, so postmortem
+            # dumps always name the injected point in their tail
+            faults.recorder = self.flight
         if guards is not None and not paged:
             raise ValueError(
                 "guards (self-healing) require paged=True: quarantining a "
@@ -636,7 +714,9 @@ class DecodeEngine:
         self._slot_degrade = [0] * max_batch
         self._slot_bad = [0] * max_batch
         self._slot_good = [0] * max_batch
-        self.degraded_gauge = Gauge()
+        self.degraded_gauge = self.metrics.gauge(
+            "engine_degraded_slots", help="live slots off the fast path"
+        )
         self._audit_clock = 0
 
         # tile is fixed per engine (schedule/jit key stability); the cache
@@ -670,6 +750,7 @@ class DecodeEngine:
                 scale_granularity=cfg.kv_scale_granularity,
             )
             self.pool = KVPagePool(num_pages, self.tile, layout=layout)
+            self.pool.register_metrics(self.metrics)
             self.page_tbl = np.zeros(
                 (max_batch, self.pages_per_slot), dtype=np.int32
             )
@@ -696,6 +777,7 @@ class DecodeEngine:
             # byte accounting now flows from the pool's layout descriptor
             # (the old static page_bytes knob drifted from the true dtype)
             self.prefix_cache = RadixPrefixCache(self.pool)
+            self.prefix_cache.register_metrics(self.metrics)
         # per-slot prefix-sharing state: which logical tiles are shared
         # (immutable — copy-on-write before any KV write lands in one) and
         # how many *leading full* shared pages form the cascade prefix
@@ -707,6 +789,11 @@ class DecodeEngine:
         self.next_tokens = np.zeros((max_batch, 1), dtype=np.int32)
 
         self.sched_cache = ScheduleCache(max_entries=schedule_cache_entries)
+        self.metrics.gauge_fn(
+            "schedule_cache_hit_rate",
+            lambda: self.sched_cache.stats.hit_rate,
+            help="stream-K schedule cache hit rate",
+        )
 
         # bucketed admission prefill: pad prompts up to canonical bucket
         # lengths so distinct prompt lengths stop costing one XLA compile
@@ -775,10 +862,14 @@ class DecodeEngine:
         s_pad = self.cache_len + ((-self.cache_len) % self.tile)
         ctx = self.ctx_lens if ctx_lens is None else ctx_lens
         lens = np.minimum(ctx + 1, self.cache_len)
-        return self.sched_cache.get(
-            lens.tolist(), self.cfg.n_kv_heads, self.tile, self.num_workers,
-            max_len=s_pad,
-        )
+        with self.tracer.span("schedule_build") as sp:
+            sched = self.sched_cache.get(
+                lens.tolist(), self.cfg.n_kv_heads, self.tile,
+                self.num_workers, max_len=s_pad,
+            )
+            if sp:
+                sp.annotate(**sched.work_summary())
+        return sched
 
     # ------------------------------------------------------------- attn fn
     def _make_attn_fn(self):
@@ -951,7 +1042,7 @@ class DecodeEngine:
         if got is None:
             return False
         new = got[0]
-        with _quiet_donation():
+        with self.tracer.span("cow", slot=slot, tile=t), _quiet_donation():
             self.cache = self._jit_copy_page(
                 self.cache, jnp.asarray(old, jnp.int32),
                 jnp.asarray(new, jnp.int32),
@@ -980,6 +1071,12 @@ class DecodeEngine:
         written, first token sampled. Returns False (engine unchanged) when
         the paged pool cannot currently hold the prompt. Does NOT touch the
         engine queue — callers (``_admit`` or a Scheduler) own queueing."""
+        with self.tracer.span(
+            "admit", uid=req.uid, prompt_tokens=len(req.prompt)
+        ):
+            return self._admit_blocking_inner(req, slot)
+
+    def _admit_blocking_inner(self, req: Request, slot: int) -> bool:
         plen = len(req.prompt)
         pages = None
         if self.paged:
@@ -1113,21 +1210,33 @@ class DecodeEngine:
         # chunk schedules ride the same bucketed cache lattice as decode;
         # only the lean backend consumes one — keying ref/fixed on it
         # would retrace their whole chunk step per schedule signature
-        sched = None
-        if self.attn_backend == "lean":
-            sched = make_chunk_schedule(
-                visible, self.cfg.n_kv_heads, self.tile, self.num_workers,
-                max_len=self.pages_per_slot * self.tile,
-                cache=self.sched_cache,
-            )
-        with _quiet_donation():
-            next_tok, self.cache = self._jit_prefill_chunks(
-                self.params, self.cache, jnp.asarray(toks),
-                jnp.asarray(offs), jnp.asarray(lens), jnp.asarray(tbls),
-                backend=self.attn_backend, sched=sched,
-                interpret=self.interpret,
-            )
         n_tokens = int(lens.sum())
+        sp = self.tracer.span(
+            "prefill_chunk", chunks=len(work), tokens=n_tokens
+        )
+        with sp:
+            sched = None
+            if self.attn_backend == "lean":
+                sched = make_chunk_schedule(
+                    visible, self.cfg.n_kv_heads, self.tile,
+                    self.num_workers,
+                    max_len=self.pages_per_slot * self.tile,
+                    cache=self.sched_cache,
+                )
+                if sp:
+                    sp.annotate(**sched.work_summary())
+            with _quiet_donation():
+                next_tok, self.cache = self._jit_prefill_chunks(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(offs), jnp.asarray(lens),
+                    jnp.asarray(tbls),
+                    backend=self.attn_backend, sched=sched,
+                    interpret=self.interpret,
+                )
+            if sp:
+                t0 = time.perf_counter()
+                jax.block_until_ready(next_tok)
+                sp.add_sync(time.perf_counter() - t0)
         self.stats.chunk_prefills += len(work)
         self.stats.prefill_tokens += n_tokens
         self._log_tick_tokens(self.stats.tick_prefill_tokens, n_tokens)
@@ -1188,6 +1297,9 @@ class DecodeEngine:
         else:
             self.queue.insert(0, req)
         self.stats.preemptions += 1
+        self.flight.record("preempt", slot=slot, uid=req.uid,
+                           tick=int(self.stats.ticks))
+        self.tracer.request_event(req.uid, "PREEMPTED", slot=slot)
 
     def preempt_slot(self, slot: int):
         """Public eviction hook for schedulers (pool-pressure deadlock
@@ -1303,6 +1415,16 @@ class DecodeEngine:
         a grouping must survive ``cascade_stable_ticks`` consecutive
         ticks of admission/finish churn before the engine pays the
         (possible) retrace of entering the cascade path."""
+        with self.tracer.span("cascade_group") as sp:
+            csched, binding = self._cascade_schedule_inner(active, ctx_np)
+            if sp:
+                sp.annotate(
+                    engaged=csched is not None,
+                    stable_ticks=self._casc_stable,
+                )
+        return csched, binding
+
+    def _cascade_schedule_inner(self, active: List[int], ctx_np):
         passes = self._cascade_grouping(active)
         if not passes:
             self._casc_key = None
@@ -1345,7 +1467,32 @@ class DecodeEngine:
         are nulled for this call, routing the garbage token write to the
         reserved null page). The excluded slots' real page tables and
         progress are untouched.
+
+        This wrapper owns the per-tick observability: the ``tick`` trace
+        span, one flight-recorder event per tick, and — when the attached
+        injector fired anywhere since the last dump, *including between
+        ticks* (admission-time ``page_alloc``, prefill-time ``cow_clone``)
+        — a postmortem dump (deduped against dumps the guard paths
+        already wrote this tick).
         """
+        self._tick_dumped = False
+        with self.tracer.span("tick"):
+            out = self._decode_tick_inner(exclude)
+        self.flight.record(
+            "tick", tick=self.stats.ticks, emitted=len(out),
+            active=sum(1 for r in self.slot_req if r is not None),
+            queued=len(self.queue),
+        )
+        if (
+            self.faults is not None
+            and self.faults.total_fires > self._fires_dumped
+        ):
+            if not self._tick_dumped:
+                self._flight_dump("fault-injected")
+            self._fires_dumped = self.faults.total_fires
+        return out
+
+    def _decode_tick_inner(self, exclude=None) -> Dict[int, int]:
         exclude = set(exclude) if exclude else set()
         if self.faults is not None and self.faults.enabled:
             self._fault_tick_hooks(exclude)
@@ -1415,7 +1562,7 @@ class DecodeEngine:
         if csched is not None:
             # cascade decode: shared prefix runs walked once per grouped
             # pass; the membership-free schedule is the only static key
-            self._record_schedule(csched.suffix_sched)
+            self._note_schedule(csched.suffix_sched, "cascade")
             prefix_tbl, suffix_tbl = cascade_tables(ptbl_np, binding)
             fused = self.cascade_fused and cascade_uses_fused(
                 csched, self.cfg.n_heads // self.cfg.n_kv_heads,
@@ -1459,7 +1606,7 @@ class DecodeEngine:
             # ONE schedule build (cached) serves both the stats record and
             # the kernel step — nothing is derived twice per tick
             sched = self._tick_schedule(ctx_np)
-            self._record_schedule(sched)
+            self._note_schedule(sched, "fast")
             tokens = jnp.asarray(self.next_tokens)
             ctx = jnp.asarray(ctx_np, jnp.int32)
             ptbl = jnp.asarray(ptbl_np) if self.paged else None
@@ -1505,7 +1652,23 @@ class DecodeEngine:
         earlier pass this tick is never re-touched by a later pass.
         Level 0 is the configured path (cascade grouping included);
         levels 1/2 are the vanilla paged lean kernel fused / two-call;
-        level 3 the pure-jnp paged oracle."""
+        level 3 the pure-jnp paged oracle.
+
+        Wrapped in the ``decode_kernel`` trace span; with tracing enabled
+        the pass blocks on the logits inside the span so device-sync time
+        is attributed here (a disabled tracer leaves dispatch async)."""
+        sp = self.tracer.span(
+            "decode_kernel", level=level, slots=len(slots),
+        )
+        with sp:
+            logits = self._decode_pass_inner(level, slots, active, exclude)
+            if sp:
+                t0 = time.perf_counter()
+                jax.block_until_ready(logits)
+                sp.add_sync(time.perf_counter() - t0)
+        return logits
+
+    def _decode_pass_inner(self, level, slots, active, exclude):
         masked = exclude | (set(active) - set(slots))
         ctx_np = self.ctx_lens.copy()
         ptbl_np = self.page_tbl
@@ -1529,6 +1692,12 @@ class DecodeEngine:
             )
             return logits
         sched = self._tick_schedule(ctx_np)
+        if self.tracer.enabled:
+            # fallback passes annotate cost meta but skip the schedule
+            # log — stats.schedules stays a fast-path record
+            self.tracer.annotate(
+                path="fallback", **self._schedule_cost(sched)
+            )
         num_splits = fixed_split_factor(
             int(sched.seg_len.max(initial=1)),
             sched.num_segments, self.tile, self.num_workers,
@@ -1603,17 +1772,41 @@ class DecodeEngine:
         return out
 
     # --------------------------------------------------------- self-healing
+    def _flight_dump(self, reason: str, **extra) -> dict:
+        """Snapshot the flight ring into a postmortem bundle (written to
+        the recorder's ``dump_dir`` when one is configured). Marks the
+        tick as dumped so the injected-fault fallback dump in
+        :meth:`decode_tick` doesn't double up."""
+        ctx = {
+            "tick": int(self.stats.ticks),
+            "degraded_slots": self.degraded_gauge.value,
+            **extra,
+        }
+        if self.faults is not None:
+            ctx["fault_fires"] = self.faults.total_fires
+        self._tick_dumped = True
+        return self.flight.dump(reason, extra=ctx)
+
     def _on_bad_slot(self, s: int):
         """A tick produced non-finite logits for slot ``s``: escalate one
         level down the fallback chain, or — once the chain is exhausted for
         ``poison_after`` consecutive ticks — poison the slot."""
         gc = self.guard_cfg
         self.stats.nan_ticks += 1
+        self.flight.record("nan_tick", slot=s, tick=int(self.stats.ticks))
         self._slot_good[s] = 0
         if self._slot_degrade[s] < gc.max_degrade:
             self._slot_degrade[s] += 1
             self._slot_bad[s] = 0
             self.stats.degrade_escalations += 1
+            self.flight.record(
+                "degrade", slot=s, level=self._slot_degrade[s],
+                backend=DEGRADE_LEVELS[
+                    min(self._slot_degrade[s], len(DEGRADE_LEVELS) - 1)
+                ],
+            )
+            self._flight_dump("degrade", slot=s,
+                              level=self._slot_degrade[s])
             return
         self._slot_bad[s] += 1
         if self._slot_bad[s] >= gc.poison_after:
@@ -1654,7 +1847,12 @@ class DecodeEngine:
                 {int(self.page_tbl[s, t]) for t in shared}
             )
         self.stats.poisoned_slots += 1
+        self.flight.record(
+            "poison", slot=s, tick=int(self.stats.ticks),
+            scrubbed_pages=self.pool.count(s) - len(shared),
+        )
         self._preempt(s)
+        self._flight_dump("poison", slot=s)
 
     def _reset_guard(self, s: int):
         self._slot_degrade[s] = 0
@@ -1701,27 +1899,38 @@ class DecodeEngine:
             targets.append(("kv_pool", self.pool))
         if self.prefix_cache is not None:
             targets.append(("prefix_cache", self.prefix_cache))
-        for name, obj in targets:
-            try:
-                if name == "kv_pool" and self.quant:
-                    obj.check(scales=self._kv_scale_arrays())
-                else:
-                    obj.check()
-            except AssertionError as e:
-                self.stats.audit_failures += 1
-                if gc.audit_action == "raise":
-                    raise FatalInvariantError(
-                        f"{name} invariant audit failed: {e}"
-                    ) from e
-                if gc.audit_action == "repair":
-                    obj.repair()
-                    self.stats.audit_repairs += 1
-                    obj.check()     # repair must restore the invariants
-                else:
-                    warnings.warn(
-                        f"{name} invariant audit failed (action=log): {e}",
-                        RuntimeWarning,
+        with self.tracer.span("audit", targets=len(targets)):
+            for name, obj in targets:
+                try:
+                    if name == "kv_pool" and self.quant:
+                        obj.check(scales=self._kv_scale_arrays())
+                    else:
+                        obj.check()
+                except AssertionError as e:
+                    self.stats.audit_failures += 1
+                    self.flight.record(
+                        "audit_failure", target=name,
+                        action=gc.audit_action, error=str(e)[:200],
                     )
+                    if gc.audit_action == "raise":
+                        # fatal: the postmortem bundle is the last thing
+                        # written before the engine goes down
+                        self._flight_dump("fatal-audit", target=name)
+                        raise FatalInvariantError(
+                            f"{name} invariant audit failed: {e}"
+                        ) from e
+                    if gc.audit_action == "repair":
+                        obj.repair()
+                        self.stats.audit_repairs += 1
+                        obj.check()  # repair must restore the invariants
+                        self._flight_dump("audit-repair", target=name)
+                    else:
+                        warnings.warn(
+                            f"{name} invariant audit failed "
+                            f"(action=log): {e}",
+                            RuntimeWarning,
+                        )
+                        self._flight_dump("audit-failure", target=name)
 
     # ---------------------------------------------------------- fault hooks
     def _fault_tick_hooks(self, exclude):
@@ -1786,6 +1995,38 @@ class DecodeEngine:
     # benchmark/debug record from growing without limit
     SCHEDULE_LOG_CAP = 512
 
+    def _schedule_cost(self, sched: LeanSchedule) -> dict:
+        """Roofline cost meta (KV bytes / flops / predicted ms) for a
+        decode schedule, memoized per schedule object — the ScheduleCache
+        hands out identical instances tick-to-tick, so a steady-state tick
+        does zero cost-model arithmetic here."""
+        cost = self._sched_costs.get(sched)
+        if cost is None:
+            if len(self._sched_costs) > 128:
+                self._sched_costs.clear()
+            elem = 2
+            if self.paged and self.pool.layout is not None:
+                elem = self.pool.layout.elem_bytes
+            cost = schedule_decode_cost(
+                sched,
+                n_q_heads=self.cfg.n_heads,
+                n_kv_heads=self.cfg.n_kv_heads,
+                head_dim=self.cfg.head_dim,
+                kv_elem_bytes=elem,
+            )
+            self._sched_costs[sched] = cost
+        return cost
+
+    def _note_schedule(self, sched: LeanSchedule, path: str):
+        """The single per-pass schedule bookkeeping point — stats record
+        plus trace annotation (execution path + roofline cost meta onto
+        the enclosing ``decode_kernel`` span) — shared by the cascade,
+        fast, and legacy decode paths, so the per-tick recording logic
+        exists once."""
+        self._record_schedule(sched)
+        if self.tracer.enabled:
+            self.tracer.annotate(path=path, **self._schedule_cost(sched))
+
     def _record_schedule(self, sched: LeanSchedule):
         # lens come from the schedule itself (one entry per batch slot), so
         # the record is internally consistent: sum(ceil(len/tile)) * Hkv ==
@@ -1812,7 +2053,7 @@ class DecodeEngine:
             min(default_tile_size(self.cfg.head_dim), max(8, max(lens))),
             self.num_workers,
         )
-        self._record_schedule(sched)
+        self._note_schedule(sched, "legacy")
 
         attn_fn = self._make_attn_fn()
         if attn_fn is None:

@@ -127,6 +127,11 @@ class FaultInjector:
             [self.seed, len(FAULT_POINTS)]
         )
         self.last_fire_tick = -1
+        # optional FlightRecorder (repro.obs.flight): every fire logs a
+        # ``fault_fire`` event, so a postmortem dump's trailing events
+        # always name the injected point. The engine wires this up when
+        # it owns both the injector and a recorder.
+        self.recorder = None
 
     # ------------------------------------------------------------------ clock
     def advance(self) -> int:
@@ -166,6 +171,11 @@ class FaultInjector:
     def _count_fire(self, point: str):
         self.fires[point] += 1
         self.last_fire_tick = self.tick
+        if self.recorder is not None:
+            self.recorder.record(
+                "fault_fire", point=point, injector_tick=self.tick,
+                fires=self.fires[point],
+            )
 
     def rng(self, point: str) -> np.random.Generator:
         """The point's private generator — for fault *payloads* that need

@@ -508,3 +508,29 @@ class KVPagePool:
         if self.layout is not None:
             d["layout"] = self.layout.as_dict()
         return d
+
+    def register_metrics(self, registry, prefix: str = "kvpool") -> None:
+        """Publish live occupancy into a :class:`repro.obs.metrics.
+        MetricsRegistry` as callback gauges — sampled at export time, so
+        the pool pays nothing per tick."""
+        registry.gauge_fn(
+            f"{prefix}_pages_in_use", lambda: self.num_allocated,
+            help="KV pages currently allocated",
+        )
+        registry.gauge_fn(
+            f"{prefix}_pages_free", lambda: self.num_free,
+            help="KV pages on the free list",
+        )
+        registry.gauge_fn(
+            f"{prefix}_page_utilization",
+            lambda: self.num_allocated / max(1, self.usable_pages),
+            help="allocated / usable pages",
+        )
+        registry.gauge_fn(
+            f"{prefix}_pages_saved", lambda: self.pages_saved,
+            help="pages deduped by refcount sharing",
+        )
+        registry.gauge_fn(
+            f"{prefix}_live_sequences", lambda: self.live_sequences,
+            help="sequences currently holding pages",
+        )

@@ -447,6 +447,28 @@ class RadixPrefixCache:
             d["bytes_saved"] = self.pool.pages_saved * self.page_bytes
         return d
 
+    def register_metrics(self, registry,
+                         prefix: str = "prefix_cache") -> None:
+        """Publish cache effectiveness into a :class:`repro.obs.metrics.
+        MetricsRegistry` as callback gauges (zero per-lookup cost)."""
+        registry.gauge_fn(
+            f"{prefix}_hit_rate", lambda: self.stats.hit_rate,
+            help="radix lookups served from cache",
+        )
+        registry.gauge_fn(
+            f"{prefix}_cached_pages", lambda: self.cached_pages,
+            help="pages held by the radix trie",
+        )
+        registry.gauge_fn(
+            f"{prefix}_nodes", lambda: self._num_nodes,
+            help="radix trie nodes",
+        )
+        registry.gauge_fn(
+            f"{prefix}_bytes_saved",
+            lambda: self.pool.pages_saved * self.page_bytes,
+            help="KV bytes deduped via shared prefixes",
+        )
+
 
 # -------------------------------------------------------------- grouping
 def lcp_group_passes(

@@ -21,8 +21,13 @@ layer that turns those into a server:
     every generated token, including the first one sampled off the final
     prefill chunk;
   * **telemetry**: TTFT / TPOT / queue-wait histograms (recorded into the
-    engine's :class:`~repro.serving.engine.EngineStats`), queue-depth and
-    per-tick prefill-vs-decode token logs.
+    engine's :class:`~repro.serving.engine.EngineStats`, which now lives
+    on the :class:`repro.obs.metrics.MetricsRegistry`), queue-depth and
+    per-tick prefill-vs-decode token logs. Request lifecycle transitions
+    additionally stream into the engine's :class:`repro.obs.trace.Tracer`
+    (``request_event`` / ``request_token``), so a traced run yields
+    per-uid QUEUED -> PREFILLING -> DECODING -> FINISHED timelines with
+    TTFT/TPOT derived independently of the histograms.
 
 Chunked prefill requires a paged engine and an all-global-attention
 architecture (``engine.supports_chunked_prefill()``); otherwise the
@@ -197,6 +202,22 @@ class Scheduler:
         # engine preemptions (pool pressure mid-decode) fold back into OUR
         # queue, keeping their arrival time so aging continues
         engine.preempt_sink = self._on_preempt
+        # observability: lifecycle events flow into the engine's tracer
+        # (a NULL_TRACER no-ops them) and queue-depth gauges into its
+        # metrics registry, next to the engine/kvpool/cache families
+        self.tracer = engine.tracer
+        engine.metrics.gauge_fn(
+            "scheduler_queue_depth", lambda: len(self.queue),
+            help="requests waiting for admission",
+        )
+        engine.metrics.gauge_fn(
+            "scheduler_active_slots", lambda: len(self._slot_sr),
+            help="slots holding a PREFILLING or DECODING request",
+        )
+        engine.metrics.gauge_fn(
+            "scheduler_pending", lambda: self.pending,
+            help="queued + in-flight requests",
+        )
 
     # ---------------------------------------------------------------- submit
     def submit(
@@ -245,6 +266,10 @@ class Scheduler:
             sr.deadline_at = sr.arrival_step + sr.deadline_window
         self.requests[uid] = sr
         self.queue.append(sr)
+        self.tracer.request_event(
+            uid, "QUEUED", prompt_tokens=int(prompt.size),
+            priority=priority,
+        )
         return sr
 
     def _on_preempt(self, req: Request):
@@ -274,6 +299,10 @@ class Scheduler:
             return
         sr.enqueue_time = time.perf_counter()
         self.queue.insert(0, sr)
+        # (the engine already emitted PREEMPTED for this uid)
+        self.tracer.request_event(
+            sr.uid, "QUEUED", requeue=True, preemptions=sr.preemptions
+        )
 
     # ---------------------------------------------------------------- policy
     def _starving(self, sr: ScheduledRequest) -> bool:
@@ -320,6 +349,10 @@ class Scheduler:
         # residency must not be booked as queue wait on re-admission
         self.engine.stats.queue_wait.observe(
             time.perf_counter() - sr.enqueue_time
+        )
+        self.tracer.request_event(
+            sr.uid, "PREFILLING", slot=sr.slot,
+            prefix_matched=sr.prefill_done,
         )
 
     def _admit_backoff(self, sr: ScheduledRequest):
@@ -377,6 +410,7 @@ class Scheduler:
             self._record_admission(sr)
             if not self.chunked:
                 # blocking admission already sampled the first token
+                self.tracer.request_event(sr.uid, "DECODING", slot=slot)
                 self._emit_first_token(sr)
 
     # --------------------------------------------------------------- prefill
@@ -460,6 +494,7 @@ class Scheduler:
                 self.engine.next_tokens[slot, 0] = nxt
                 self.engine.ctx_lens[slot] = len(sr.req.prompt)
                 sr.state = RequestState.DECODING
+                self.tracer.request_event(sr.uid, "DECODING", slot=slot)
                 self._emit_first_token(sr)
 
     # ---------------------------------------------------------------- tokens
@@ -470,7 +505,9 @@ class Scheduler:
             # time to its FIRST first-token only
             sr.first_token_time = now
             self.engine.stats.ttft.observe(now - sr.arrival_time)
+            self.tracer.request_event(sr.uid, "FIRST_TOKEN")
         sr.last_token_time = now
+        self.tracer.request_token(sr.uid)
         tok = sr.req.generated[-1]
         done = sr.req.done
         if sr.on_token:
@@ -483,6 +520,7 @@ class Scheduler:
         if sr.last_token_time >= 0:
             self.engine.stats.tpot.observe(now - sr.last_token_time)
         sr.last_token_time = now
+        self.tracer.request_token(sr.uid)
         if sr.on_token:
             sr.on_token(sr.uid, tok, done)
 
@@ -496,6 +534,7 @@ class Scheduler:
         sr.state = RequestState.FAILED
         sr.error = msg
         self.stats.poisoned += 1
+        self.tracer.request_event(sr.uid, "FAILED", error=msg)
         self.requests.pop(sr.uid, None)
 
     def cancel(self, uid: int) -> bool:
@@ -515,6 +554,7 @@ class Scheduler:
             self.engine.release_slot(slot)
         sr.state = RequestState.CANCELLED
         self.stats.cancellations += 1
+        self.tracer.request_event(uid, "CANCELLED")
         self.requests.pop(uid, None)
         return True
 
@@ -570,6 +610,9 @@ class Scheduler:
         sr.slot = -1
         sr.state = RequestState.FINISHED
         self.stats.finished += 1
+        self.tracer.request_event(
+            sr.uid, "FINISHED", tokens=len(sr.req.generated)
+        )
         # a steady-state server must not grow per-request state forever:
         # the handle stays with the caller, the scheduler forgets it (and
         # its uid becomes reusable)

@@ -1,146 +1,14 @@
-"""Serving telemetry primitives: cheap streaming histograms.
+"""DEPRECATED compat shim — the telemetry primitives moved to
+:mod:`repro.obs.metrics`.
 
-The scheduler records per-request latencies (TTFT, TPOT, queue wait) and
-per-tick gauges at token rate — potentially millions of observations on a
-busy server — so the recorder must be O(1) per observation with a fixed
-memory footprint. :class:`Histogram` keeps geometric buckets plus exact
-count/sum/min/max; percentiles interpolate within the winning bucket, which
-is plenty for the factor-level questions the benchmarks ask (is TTFT 2x
-worse? is p99 queue wait bounded?).
+``Histogram``, ``Gauge``, and ``default_bounds`` live in the unified
+metrics registry now (alongside ``Counter`` and ``MetricsRegistry``, with
+JSON and Prometheus exporters). This module re-exports them so existing
+imports keep working; new code should import from ``repro.obs`` directly.
+Scheduled for removal once no in-repo consumer imports it.
 """
 from __future__ import annotations
 
-import bisect
-import math
-from typing import List, Optional, Sequence
+from repro.obs.metrics import Gauge, Histogram, default_bounds
 
-__all__ = ["Histogram", "Gauge"]
-
-
-class Gauge:
-    """A current-value gauge with peak and time-above-zero tracking.
-
-    Used for the engine's degraded-mode gauge: ``value`` is the number of
-    slots currently off the fast path, ``peak`` the worst simultaneous
-    degradation seen, and ``ticks_nonzero`` how many updates observed a
-    non-zero value — the chaos suite asserts the gauge returns to 0
-    within a bounded number of fault-free ticks."""
-
-    def __init__(self):
-        self.value = 0
-        self.peak = 0
-        self.updates = 0
-        self.ticks_nonzero = 0
-
-    def set(self, value: int) -> None:
-        self.value = int(value)
-        self.peak = max(self.peak, self.value)
-        self.updates += 1
-        if self.value:
-            self.ticks_nonzero += 1
-
-    def as_dict(self) -> dict:
-        return {
-            "value": self.value,
-            "peak": self.peak,
-            "updates": self.updates,
-            "ticks_nonzero": self.ticks_nonzero,
-        }
-
-    def __repr__(self):
-        return (
-            f"Gauge(value={self.value}, peak={self.peak}, "
-            f"nonzero={self.ticks_nonzero}/{self.updates})"
-        )
-
-
-def default_bounds(
-    lo: float = 1e-4, hi: float = 100.0, per_decade: int = 5
-) -> List[float]:
-    """Geometric bucket upper bounds covering [lo, hi] (seconds by default:
-    0.1 ms .. 100 s, 5 buckets per decade ~ 58% resolution)."""
-    n = int(math.ceil(math.log10(hi / lo) * per_decade)) + 1
-    return [lo * 10 ** (i / per_decade) for i in range(n)]
-
-
-class Histogram:
-    """Fixed-bucket streaming histogram (+ exact count/sum/min/max).
-
-    Observations above the last bound land in an overflow bucket whose
-    "upper edge" is the max ever seen; below the first bound, in the first
-    bucket. O(log B) per observe (bisect), O(B) memory, mergeable.
-    """
-
-    def __init__(self, bounds: Optional[Sequence[float]] = None):
-        self.bounds = list(bounds) if bounds is not None else default_bounds()
-        self.counts = [0] * (len(self.bounds) + 1)   # +1 overflow
-        self.count = 0
-        self.sum = 0.0
-        self.min = math.inf
-        self.max = -math.inf
-
-    def observe(self, value: float) -> None:
-        self.count += 1
-        self.sum += value
-        self.min = min(self.min, value)
-        self.max = max(self.max, value)
-        self.counts[bisect.bisect_left(self.bounds, value)] += 1
-
-    @property
-    def mean(self) -> float:
-        return self.sum / self.count if self.count else 0.0
-
-    def percentile(self, p: float) -> float:
-        """Approximate p-th percentile: linear interpolation inside the
-        winning bucket, clamped to the exact [min, max]. Empty histograms
-        report 0.0 (never the ±inf sentinels in ``min``/``max``), and ``p``
-        is clamped into [0, 100]."""
-        if not self.count:
-            return 0.0
-        rank = min(max(p, 0.0), 100.0) / 100.0 * self.count
-        acc = 0
-        for i, c in enumerate(self.counts):
-            if c == 0:
-                continue
-            if acc + c >= rank:
-                lo = self.bounds[i - 1] if i > 0 else self.min
-                hi = self.bounds[i] if i < len(self.bounds) else self.max
-                frac = (rank - acc) / c
-                val = lo + (hi - lo) * frac
-                return min(max(val, self.min), self.max)
-            acc += c
-        return self.max
-
-    def merge(self, other: "Histogram") -> "Histogram":
-        if other.bounds != self.bounds:
-            raise ValueError("histogram bucket bounds differ")
-        self.counts = [a + b for a, b in zip(self.counts, other.counts)]
-        self.count += other.count
-        self.sum += other.sum
-        # min/max are ±inf sentinels on an empty side; plain min/max keeps
-        # them correct, and a doubly-empty merge stays the empty histogram
-        self.min = min(self.min, other.min)
-        self.max = max(self.max, other.max)
-        return self
-
-    def as_dict(self) -> dict:
-        """JSON-friendly summary (for BENCH_*.json / EngineStats dumps)."""
-        if not self.count:
-            return {"count": 0}
-        return {
-            "count": self.count,
-            "mean": self.mean,
-            "min": self.min,
-            "max": self.max,
-            "p50": self.percentile(50),
-            "p90": self.percentile(90),
-            "p99": self.percentile(99),
-        }
-
-    def __repr__(self):
-        if not self.count:
-            return "Histogram(empty)"
-        return (
-            f"Histogram(n={self.count}, mean={self.mean:.4g}, "
-            f"p50={self.percentile(50):.4g}, p99={self.percentile(99):.4g})"
-        )
+__all__ = ["Histogram", "Gauge", "default_bounds"]

@@ -21,6 +21,7 @@ from hypothesis import strategies as st
 
 from repro.configs import get_smoke_config
 from repro.models import init_params
+from repro.obs.flight import load_flight_dump
 from repro.serving.engine import DecodeEngine, Request
 from repro.serving.faults import FaultInjector, FaultSpec
 from repro.serving.guards import GuardConfig
@@ -113,25 +114,44 @@ def test_nan_output_quarantine_degrade_heal_token_identical(setup):
 
 
 @pytest.mark.chaos
-def test_nan_kv_corruption_poisons_and_recomputes(setup):
+def test_nan_kv_corruption_poisons_and_recomputes(setup, tmp_path):
     """Real device-side KV corruption: no alternate kernel can make NaN
     attention finite, so the victim rides the chain to the bottom, is
     poisoned (pages scrubbed + freed), and recomputes from its prompt —
     finishing with the exact fault-free stream. Scrubbing matters: a NaN
-    page recycled un-zeroed would poison whichever innocent slot got it."""
+    page recycled un-zeroed would poison whichever innocent slot got it.
+
+    The flight recorder must leave a postmortem trail: the degrade and
+    poison dumps' trailing events name the injected ``nan_kv`` point, so
+    the fault is attributable from the JSON artifacts alone."""
     cfg, params = setup
     base = _run(_mk_engine(cfg, params), cfg)
     guards = GuardConfig(heal_after=2, poison_after=2)
     inj = FaultInjector(
         {"nan_kv": FaultSpec(rate=1.0, start=3, max_fires=1)}, seed=2
     )
-    eng = _mk_engine(cfg, params, faults=inj, guards=guards)
+    eng = _mk_engine(cfg, params, faults=inj, guards=guards,
+                     flight_dir=str(tmp_path))
     assert _run(eng, cfg) == base
     assert inj.fires["nan_kv"] == 1
     assert eng.stats.poisoned_slots == 1
     assert eng.stats.degrade_escalations >= 3     # rode the chain down
     assert eng.stats.preemptions >= 1             # recompute-resume
     _assert_recovered(eng)
+    # postmortem bundles on disk: degrade + poison paths both dumped, and
+    # each bundle's recent events identify the injected fault point
+    files = sorted(tmp_path.glob("flight-*.json"))
+    assert files, "no flight dumps written"
+    reasons = set()
+    for f in files:
+        doc = load_flight_dump(f)
+        reasons.add(doc["reason"])
+        fires = [ev for ev in doc["events"]
+                 if ev["kind"] == "fault_fire"]
+        assert fires and all(ev["point"] == "nan_kv" for ev in fires)
+    assert "poison" in reasons
+    assert "degrade" in reasons
+    assert eng.flight.dumps == len(files)
 
 
 @pytest.mark.chaos
@@ -261,11 +281,14 @@ FAULT_MATRIX = [
 @pytest.mark.chaos
 @pytest.mark.parametrize("point,spec", FAULT_MATRIX,
                          ids=[p for p, _ in FAULT_MATRIX])
-def test_fault_matrix_every_point_recovers(setup, point, spec):
+def test_fault_matrix_every_point_recovers(setup, point, spec, tmp_path):
     """One cell per injection point: whatever the failure mode, the system
     drains every request, leaks nothing, and ends with the gauge at 0.
     (The point-specific recovery *paths* are asserted by the dedicated
-    tests above; this sweep pins the blanket survival contract.)"""
+    tests above; this sweep pins the blanket survival contract.) Every
+    cell must also leave a flight-recorder postmortem whose trailing
+    events name the injected point — including points that fire *between*
+    decode ticks (admission-time ``page_alloc``, prefill ``cow_clone``)."""
     cfg, params = setup
     rng = np.random.default_rng(11)
     shared = rng.integers(0, cfg.vocab_size, 12)
@@ -275,6 +298,7 @@ def test_fault_matrix_every_point_recovers(setup, point, spec):
         cfg, params, prefix_cache=True, faults=inj,
         guards=GuardConfig(heal_after=2, audit_interval=3,
                            audit_action="repair"),
+        flight_dir=str(tmp_path),
     )
     sch = Scheduler(eng, SchedulerConfig(
         chunk_size=8, prefill_pack=2, token_budget=32,
@@ -296,6 +320,14 @@ def test_fault_matrix_every_point_recovers(setup, point, spec):
     assert inj.total_fires >= 1, f"{point} schedule never fired"
     _quiesce(eng)
     _assert_recovered(eng)
+    # the postmortem contract: >= 1 dump on disk, and at least one
+    # bundle's trailing events contain a fault_fire naming this point
+    files = sorted(tmp_path.glob("flight-*.json"))
+    assert files, f"{point}: faults fired but no flight dump written"
+    assert any(
+        ev["kind"] == "fault_fire" and ev["point"] == point
+        for f in files for ev in load_flight_dump(f)["events"][-64:]
+    ), f"{point}: no dump's trailing events identify the fault point"
 
 
 @pytest.mark.slow

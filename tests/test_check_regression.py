@@ -26,6 +26,7 @@ DOC = {
         },
     },
     "hardening": {"hardened_over_plain_throughput": 1.0},
+    "observability": {"traced_over_untraced_throughput": 1.0},
     "quant": {"capacity_ratio_vs_bf16": 1.9, "token_agreement": 0.97},
 }
 
