@@ -463,7 +463,8 @@ def _run_quant_section(cfg, params, n_ticks: int) -> dict:
 
 
 def run_decode_step(n_ticks: int = 24, out_path: str = "BENCH_decode_step.json",
-                    rows: list | None = None) -> dict:
+                    rows: list | None = None,
+                    history_path: str | None = "BENCH_history.jsonl") -> dict:
     import jax
 
     jax.config.update("jax_platform_name", "cpu")
@@ -471,12 +472,24 @@ def run_decode_step(n_ticks: int = 24, out_path: str = "BENCH_decode_step.json",
     from repro.configs import get_smoke_config
     from repro.models import init_params
 
+    from benchmarks.trajectory import (
+        append_history,
+        env_fingerprint,
+        new_run_id,
+    )
+
     cfg = get_smoke_config("mistral-nemo-12b")
     params = init_params(jax.random.PRNGKey(0), cfg)
 
+    # environment fingerprint + run id: the absolute-trajectory gate in
+    # check_regression compares like-fingerprint history only, and uses
+    # run_id to exclude this very run's freshly appended record
+    fingerprint = env_fingerprint()
+    run_id = new_run_id()
     result: dict = {"config": {
         "arch": "mistral-nemo-12b(smoke)", "max_batch": 4, "cache_len": 64,
         "num_workers": 8, "ticks": n_ticks, "platform": "cpu-interpret",
+        "fingerprint": fingerprint, "run_id": run_id,
     }}
 
     # fast path (lean fused) — also collect host/device split
@@ -512,6 +525,18 @@ def run_decode_step(n_ticks: int = 24, out_path: str = "BENCH_decode_step.json",
     )
     result["quant"] = _run_quant_section(cfg, params, n_ticks)
     Path(out_path).write_text(json.dumps(result, indent=1))
+    if history_path:
+        append_history(
+            {
+                "ticks_per_sec_fast": tps_fast,
+                "ticks_per_sec_legacy": tps_legacy,
+                "ms_per_tick_fast": s_per_tick * 1e3,
+            },
+            fingerprint=fingerprint,
+            run_id=run_id,
+            wall_time=time.time(),
+            path=history_path,
+        )
     if rows is not None:
         d = result["decode_step"]
         p = result["paged"]
@@ -543,16 +568,19 @@ def run_decode_step(n_ticks: int = 24, out_path: str = "BENCH_decode_step.json",
     return result
 
 
-def run(rows: list):
-    run_decode_step(rows=rows)
+def run(rows: list, history_path="BENCH_history.jsonl"):
+    run_decode_step(rows=rows, history_path=history_path)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--ticks", type=int, default=24)
     ap.add_argument("--out", default="BENCH_decode_step.json")
+    ap.add_argument("--history", default="BENCH_history.jsonl",
+                    help="trajectory store to append to ('' disables)")
     args = ap.parse_args()
-    result = run_decode_step(args.ticks, args.out)
+    result = run_decode_step(args.ticks, args.out,
+                             history_path=args.history or None)
     d = result["decode_step"]
     print(json.dumps(result, indent=1))
     p = result["paged"]

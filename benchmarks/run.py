@@ -2,9 +2,14 @@
 
 Prints ``name,us_per_call,derived`` CSV. "derived" is the figure's metric
 (speedup ratio, occupancy, timeshare, or error vs oracle, per row name).
+The ``decode_step`` suite also appends an environment-fingerprinted
+absolute-throughput record to the trajectory store (``--history``, see
+:mod:`benchmarks.trajectory`) that the check_regression absolute gate
+compares like-fingerprint runs against.
 
   python -m benchmarks.run            # all
   python -m benchmarks.run --only fig7,fig10
+  python -m benchmarks.run --only decode_step --history ''   # no append
 """
 from __future__ import annotations
 
@@ -14,8 +19,14 @@ import argparse
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument(
+        "--history", default="BENCH_history.jsonl",
+        help="perf-trajectory store the decode_step suite appends its "
+             "fingerprinted absolute-throughput record to ('' disables)",
+    )
     args = ap.parse_args()
     only = [s for s in args.only.split(",") if s]
+    history = args.history or None
 
     rows: list = []
     from . import (
@@ -24,7 +35,8 @@ def main() -> None:
     )
 
     suites = {
-        "decode_step": lambda: decode_step_bench.run(rows),
+        "decode_step": lambda: decode_step_bench.run(
+            rows, history_path=history),
         "prefix": lambda: prefix_bench.run(rows),
         "fig7": lambda: attention_bench.fig7_context_sweep(rows),
         "fig7b": lambda: attention_bench.fig7b_heads_sweep(rows),

@@ -1,0 +1,127 @@
+"""Perf-trajectory store: environment-fingerprinted bench history.
+
+The ratio gates in :mod:`benchmarks.check_regression` catch *relative*
+regressions (hardened vs plain, traced vs untraced) but are blind to the
+whole stack getting slower together — the ROADMAP's "absolute perf gate"
+gap. The trajectory store closes it: every ``decode_step`` bench run
+appends one JSONL record to ``BENCH_history.jsonl`` carrying the
+absolute throughput numbers plus an **environment fingerprint** (device
+kind, jax platform, jax version; git sha recorded for forensics but not
+matched), and the gate compares a fresh run only against
+*like-fingerprint* history — CPU-interpret and TPU numbers never
+cross-contaminate, and a laptop run never fails against CI's trajectory.
+
+Each record also carries the run's own ``run_id`` so a gate executed in
+the same invocation that appended the record can exclude it (a run
+trivially matches itself).
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import uuid
+from pathlib import Path
+from typing import List, Optional
+
+__all__ = [
+    "HISTORY_FORMAT_VERSION",
+    "HISTORY_PATH",
+    "env_fingerprint",
+    "fingerprint_key",
+    "new_run_id",
+    "append_history",
+    "load_history",
+]
+
+HISTORY_FORMAT_VERSION = 1
+HISTORY_PATH = "BENCH_history.jsonl"
+
+
+def env_fingerprint() -> dict:
+    """Identity of the measuring environment. ``device``/``platform``/
+    ``jax`` form the comparison key (:func:`fingerprint_key`);
+    ``git_sha`` is informational. Never raises — a stripped container
+    without git or an uninitialized backend degrades to "unknown"."""
+    device = platform = "unknown"
+    jax_version = "unknown"
+    try:
+        import jax
+
+        jax_version = jax.__version__
+        platform = jax.default_backend()
+        device = jax.devices()[0].device_kind
+    except Exception:
+        pass
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=Path(__file__).resolve().parent,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        sha = "unknown"
+    return {
+        "device": device,
+        "platform": platform,
+        "jax": jax_version,
+        "git_sha": sha,
+    }
+
+
+def fingerprint_key(fp: dict) -> tuple:
+    """The like-for-like comparison key (sha intentionally excluded:
+    code changes are exactly what the gate must see across)."""
+    return (
+        fp.get("device", "unknown"),
+        fp.get("platform", "unknown"),
+        fp.get("jax", "unknown"),
+    )
+
+
+def new_run_id() -> str:
+    return uuid.uuid4().hex[:12]
+
+
+def append_history(
+    metrics: dict,
+    *,
+    fingerprint: Optional[dict] = None,
+    run_id: Optional[str] = None,
+    wall_time: Optional[float] = None,
+    path=HISTORY_PATH,
+) -> dict:
+    """Append one trajectory record; returns it. ``metrics`` holds the
+    absolute numbers the gate compares (``ticks_per_sec_fast`` first
+    among them)."""
+    record = {
+        "format": HISTORY_FORMAT_VERSION,
+        "run_id": run_id or new_run_id(),
+        "fingerprint": fingerprint or env_fingerprint(),
+        "metrics": dict(metrics),
+    }
+    if wall_time is not None:
+        record["wall_time"] = wall_time
+    p = Path(path)
+    with p.open("a") as fh:
+        fh.write(json.dumps(record, sort_keys=True) + "\n")
+    return record
+
+
+def load_history(path=HISTORY_PATH) -> List[dict]:
+    """All parseable records, file order. Corrupt lines are skipped —
+    a truncated append must not brick the gate."""
+    p = Path(path)
+    if not p.exists():
+        return []
+    out = []
+    for line in p.read_text().splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if isinstance(rec, dict) and isinstance(rec.get("metrics"), dict):
+            out.append(rec)
+    return out

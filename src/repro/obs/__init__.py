@@ -13,11 +13,23 @@ Three cooperating layers, all zero-overhead when disabled:
     register into it instead of hand-rolling stats dicts;
   * :mod:`repro.obs.flight` — a bounded ring buffer of recent serving
     events, dumped to a JSON postmortem bundle when the self-healing
-    guards degrade/poison a slot or a fault is injected.
+    guards degrade/poison a slot or a fault is injected;
+  * :mod:`repro.obs.watch` — the perf watchdog: streaming anomaly
+    detectors (tick spikes, retrace storms, occupancy collapse, prefix
+    hit-rate drops, degrade flapping) plus per-class SLO error budgets
+    with burn-rate alerting, arming flight-recorder postmortems the
+    moment a pathology emerges;
+  * :mod:`repro.obs.calib` — fitted measured/predicted roofline
+    correction factors so the watchdog's occupancy band (and the
+    report's occupancy column) compares against calibrated, not
+    hardcoded, predictions.
 
 ``python -m repro.obs report TRACE`` renders per-tick predicted-vs-
-measured attribution and per-request timelines from a recorded trace.
+measured attribution and per-request timelines from a recorded trace;
+``python -m repro.obs calibrate TRACE --out calib.json`` fits the
+correction factors.
 """
+from repro.obs.calib import Calibration, fit_calibration, load_calibration
 from repro.obs.flight import FlightRecorder, load_flight_dump
 from repro.obs.metrics import (
     Counter,
@@ -28,8 +40,21 @@ from repro.obs.metrics import (
     parse_prometheus,
 )
 from repro.obs.trace import NULL_TRACER, Tracer, load_trace
+from repro.obs.watch import (
+    ErrorBudget,
+    PerfWatchdog,
+    SLOConfig,
+    WatchConfig,
+)
 
 __all__ = [
+    "Calibration",
+    "fit_calibration",
+    "load_calibration",
+    "ErrorBudget",
+    "PerfWatchdog",
+    "SLOConfig",
+    "WatchConfig",
     "Counter",
     "Gauge",
     "Histogram",

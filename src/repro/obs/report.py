@@ -30,6 +30,7 @@ __all__ = [
     "render_attribution",
     "render_requests",
     "render_effectiveness",
+    "render_watchdog",
     "render_report",
     "render_flight",
 ]
@@ -43,14 +44,17 @@ def _fmt_ms(v: Optional[float]) -> str:
     return f"{v:8.3f}" if v is not None else "       -"
 
 
-def tick_attribution(doc: dict) -> List[dict]:
+def tick_attribution(doc: dict, calib=None) -> List[dict]:
     """Fold the span list into one row per tick.
 
     Each row: measured total tick ms, per-phase child ms, summed
     device-sync ms, and the cost model's predicted memory/compute ms
     (from decode_kernel span metadata — either the pre-stamped
     ``pred_*_ms`` fields or derived from ``kv_bytes``/``flops`` via the
-    hardware model)."""
+    hardware model). With a fitted :class:`repro.obs.calib.Calibration`,
+    each decode span's prediction is scaled by its path's correction
+    factor, so the ratio column reads ~1.0 on a healthy run instead of
+    the raw platform gap."""
     ticks: Dict[int, dict] = {}
     for sp in doc.get("spans", []):
         t = sp.get("tick", -1)
@@ -81,21 +85,29 @@ def tick_attribution(doc: dict) -> List[dict]:
                 row["flops"] += float(fl)
             pm = meta.get("pred_mem_ms")
             pc = meta.get("pred_compute_ms")
-            row["pred_mem_ms"] += (
+            factor = (
+                calib.factor(meta.get("path", "fast"))
+                if calib is not None else 1.0
+            )
+            row["pred_mem_ms"] += factor * (
                 float(pm) if pm is not None
                 else (float(kv) / HBM_BW * 1e3 if kv is not None else 0.0)
             )
-            row["pred_compute_ms"] += (
+            row["pred_compute_ms"] += factor * (
                 float(pc) if pc is not None
                 else (float(fl) / PEAK_FLOPS * 1e3 if fl is not None else 0.0)
             )
     return [ticks[t] for t in sorted(ticks)]
 
 
-def render_attribution(doc: dict, limit: int = 40) -> str:
-    rows = tick_attribution(doc)
+def render_attribution(doc: dict, limit: int = 40, calib=None) -> str:
+    rows = tick_attribution(doc, calib=calib)
+    head = "== per-tick attribution (measured vs roofline-predicted ms) =="
+    if calib is not None:
+        head = ("== per-tick attribution (measured vs CALIBRATED "
+                "roofline ms) ==")
     lines = [
-        "== per-tick attribution (measured vs roofline-predicted ms) ==",
+        head,
         ("tick   total  sched  prefil decode  cascde  other  "
          "pr.mem pr.cmp  meas/pred"),
     ]
@@ -130,11 +142,15 @@ def render_attribution(doc: dict, limit: int = 40) -> str:
         f"({tot['kv_bytes'] / 1e6:.2f} MB KV streamed)"
     )
     if pred > 0:
-        lines.append(
-            f"  measured decode / roofline bound: "
-            f"{tot['decode_kernel'] / pred:.1f}x "
+        note = (
+            "(1.0x == matches the calibrated expectation)"
+            if calib is not None else
             "(1.0x == hardware-limited; interpret-mode CPU runs are "
             "far above)"
+        )
+        lines.append(
+            f"  measured decode / roofline bound: "
+            f"{tot['decode_kernel'] / pred:.1f}x {note}"
         )
     return "\n".join(lines)
 
@@ -207,7 +223,55 @@ def render_effectiveness(doc: dict) -> str:
     return "\n".join(lines)
 
 
-def render_report(doc: dict, limit: int = 40) -> str:
+def render_watchdog(doc: dict) -> str:
+    """Detector timeline + SLO error-budget table from the watchdog
+    snapshot embedded under trace ``meta.watchdog`` (see
+    :meth:`repro.obs.watch.PerfWatchdog.as_dict`)."""
+    wd = (doc.get("meta") or {}).get("watchdog") or {}
+    lines = ["== watchdog detector timeline =="]
+    if not wd:
+        lines.append("  (no watchdog snapshot embedded in trace)")
+    else:
+        counts = wd.get("fire_counts") or {}
+        armed = ", ".join(
+            f"{k}:{v}" for k, v in sorted(counts.items()) if v
+        ) or "none"
+        lines.append(
+            f"  {wd.get('ticks', 0)} watched ticks, "
+            f"{wd.get('total_fires', 0)} detector fires ({armed})"
+        )
+        fires = wd.get("fires") or []
+        for f in fires[-20:]:
+            det = f.get("detector", "?")
+            detail = ", ".join(
+                f"{k}={v}" for k, v in sorted(f.items())
+                if k not in ("detector", "tick", "window")
+            )
+            lines.append(f"  tick {f.get('tick', -1):4d}  {det:20s} {detail}")
+        if not fires:
+            lines.append("  (no detector fires)")
+    lines.append("")
+    lines.append("== SLO error budgets ==")
+    slo = wd.get("slo") or {}
+    if not slo:
+        lines.append("  (no SLO classes declared)")
+    else:
+        lines.append(
+            "  class         events breach  budget  remaining  burn"
+        )
+        for name in sorted(slo):
+            b = slo[name]
+            lines.append(
+                f"  {name[:13]:13s} {b.get('events', 0):6d} "
+                f"{b.get('breaches', 0):6d} "
+                f"{b.get('budget', 0.0):7.3f} "
+                f"{b.get('budget_remaining', 0.0):9.3f} "
+                f"{b.get('burn_rate', 0.0):6.2f}"
+            )
+    return "\n".join(lines)
+
+
+def render_report(doc: dict, limit: int = 40, calib=None) -> str:
     head = (
         f"trace: {doc.get('ticks', 0)} ticks, "
         f"{len(doc.get('spans', []))} spans, "
@@ -215,9 +279,10 @@ def render_report(doc: dict, limit: int = 40) -> str:
     )
     return "\n\n".join([
         head,
-        render_attribution(doc, limit=limit),
+        render_attribution(doc, limit=limit, calib=calib),
         render_requests(doc),
         render_effectiveness(doc),
+        render_watchdog(doc),
     ])
 
 
@@ -228,6 +293,13 @@ def render_flight(doc: dict, tail: int = 20) -> str:
         f"flight dump: reason={doc.get('reason')!r}, "
         f"{len(events)} events (showing last {min(tail, len(events))})",
     ]
+    reason = str(doc.get("reason") or "")
+    if reason.startswith("watchdog-"):
+        lines.append(
+            f"watchdog-armed postmortem: detector "
+            f"{reason[len('watchdog-'):]!r} "
+            "(tripping window in context below)"
+        )
     ctx = doc.get("context")
     if ctx:
         lines.append("context: " + ", ".join(

@@ -239,6 +239,24 @@ class Tracer:
     def request_uids(self) -> list:
         return list(self._requests)
 
+    def tick_spans(self, tick: Optional[int] = None) -> list:
+        """Finished spans of one tick (default: the latest), in record
+        order. Walks the ring from the right and stops at the first
+        older span, so per-tick consumers (the perf watchdog) pay for
+        the tick's spans, not the whole capacity-65536 ring."""
+        if not self.enabled:
+            return []
+        t = self.tick_index if tick is None else int(tick)
+        out = []
+        for sp in reversed(self._spans):
+            if sp["tick"] > t:
+                continue
+            if sp["tick"] < t:
+                break
+            out.append(sp)
+        out.reverse()
+        return out
+
     # ----------------------------------------------------------------- io
     def to_dict(self, extra: Optional[dict] = None) -> dict:
         doc = {

@@ -203,6 +203,21 @@ def schedule_decode_cost(
     }
 
 
+def calibrated_cost(cost: dict, factor: float) -> dict:
+    """Scale a :func:`schedule_decode_cost` prediction into measured-time
+    units using a fitted correction factor (see
+    :func:`repro.obs.calib.fit_calibration`). The hardware model above is
+    a *bound*; the factor carries everything the bound ignores — dispatch
+    overhead, interpret-mode slowdown, layout traffic — so consumers
+    (watchdog occupancy band, report occupancy column) compare measured
+    ms against ``factor * predicted`` instead of the raw bound."""
+    out = dict(cost)
+    out["pred_mem_ms"] = cost["pred_mem_ms"] * factor
+    out["pred_compute_ms"] = cost["pred_compute_ms"] * factor
+    out["calib_factor"] = float(factor)
+    return out
+
+
 def model_flops_for(cfg, shape_spec, n_params_active: int) -> float:
     """Analytic 'useful' flops per step.
 

@@ -91,6 +91,7 @@ from repro.models import (
 from repro.models import supports_chunked_prefill as _cfg_supports_chunked
 from repro.serving.faults import FaultInjector, corrupt_trie_node
 from repro.serving.guards import (
+    DEGRADE_CAUSES,
     DEGRADE_LEVELS,
     FatalInvariantError,
     GuardConfig,
@@ -626,6 +627,7 @@ class DecodeEngine:
         metrics: Optional[MetricsRegistry] = None,
         flight: Optional[FlightRecorder] = None,
         flight_dir: Optional[str] = None,
+        watchdog=None,
     ):
         # ``kv_dtype`` overrides the model config's KV storage dtype for
         # this engine — 'int8' turns on quantized paged pools (per-(page,
@@ -717,7 +719,25 @@ class DecodeEngine:
         self.degraded_gauge = self.metrics.gauge(
             "engine_degraded_slots", help="live slots off the fast path"
         )
+        self._degrade_cause = self.metrics.counter(
+            "engine_degrade_cause_total",
+            help="degrade escalations by cause (see guards.DEGRADE_CAUSES)",
+            labelnames=("cause",),
+        )
         self._audit_clock = 0
+
+        # perf watchdog (streaming anomaly detectors, repro.obs.watch).
+        # ``watchdog`` may be True (defaults) or a WatchConfig; callers
+        # needing SLO budgets or a fitted calibration construct
+        # PerfWatchdog(engine, ...) themselves — it attaches here. Absent,
+        # the per-tick hook is a single `is None` test.
+        self.watchdog = None
+        if watchdog is not None and watchdog is not False:
+            from repro.obs.watch import PerfWatchdog, WatchConfig
+
+            PerfWatchdog(
+                self, WatchConfig() if watchdog is True else watchdog
+            )
 
         # tile is fixed per engine (schedule/jit key stability); the cache
         # capacity bounds every slot's visible context. Paged mode: lean
@@ -1476,6 +1496,7 @@ class DecodeEngine:
         already wrote this tick).
         """
         self._tick_dumped = False
+        t0 = time.perf_counter() if self.watchdog is not None else 0.0
         with self.tracer.span("tick"):
             out = self._decode_tick_inner(exclude)
         self.flight.record(
@@ -1490,6 +1511,11 @@ class DecodeEngine:
             if not self._tick_dumped:
                 self._flight_dump("fault-injected")
             self._fires_dumped = self.faults.total_fires
+        # watchdog runs after the fault-dump block so its own postmortems
+        # (reason "watchdog-<detector>") are additional to — and
+        # distinguishable from — fault-hook-originated bundles
+        if self.watchdog is not None:
+            self.watchdog.on_tick((time.perf_counter() - t0) * 1e3)
         return out
 
     def _decode_tick_inner(self, exclude=None) -> Dict[int, int]:
@@ -1799,8 +1825,10 @@ class DecodeEngine:
             self._slot_degrade[s] += 1
             self._slot_bad[s] = 0
             self.stats.degrade_escalations += 1
+            self._degrade_cause.labels(cause="nan_guard").inc()
             self.flight.record(
                 "degrade", slot=s, level=self._slot_degrade[s],
+                cause="nan_guard",
                 backend=DEGRADE_LEVELS[
                     min(self._slot_degrade[s], len(DEGRADE_LEVELS) - 1)
                 ],
@@ -1853,6 +1881,47 @@ class DecodeEngine:
         )
         self._preempt(s)
         self._flight_dump("poison", slot=s)
+
+    def force_degrade(self, levels: int = 1, cause: str = "watchdog",
+                      slots: Optional[List[int]] = None) -> int:
+        """Explicit, *observable* degrade: push active slots ``levels``
+        steps down the fallback chain, recording the cause (a
+        ``guards.DEGRADE_CAUSES`` member) on the flight event and the
+        ``engine_degrade_cause_total`` counter — detector-triggered
+        degrade must be attributable in a postmortem, never inferred.
+        Requires guards (the chain heals back via the usual
+        ``heal_after`` clean-tick rule). Returns slots escalated."""
+        if self.guard_cfg is None:
+            raise ValueError("force_degrade requires guards=GuardConfig(...)")
+        if cause not in DEGRADE_CAUSES:
+            raise ValueError(
+                f"unknown degrade cause {cause!r} (see DEGRADE_CAUSES)"
+            )
+        targets = (
+            slots if slots is not None
+            else [s for s in range(self.max_batch)
+                  if self.slot_req[s] is not None]
+        )
+        moved = 0
+        for s in targets:
+            if self.slot_req[s] is None:
+                continue
+            new = min(self._slot_degrade[s] + levels,
+                      self.guard_cfg.max_degrade)
+            if new == self._slot_degrade[s]:
+                continue
+            self._slot_degrade[s] = new
+            self._slot_good[s] = 0
+            self.stats.degrade_escalations += 1
+            self._degrade_cause.labels(cause=cause).inc()
+            self.flight.record(
+                "degrade", slot=s, level=new, cause=cause,
+                backend=DEGRADE_LEVELS[min(new, len(DEGRADE_LEVELS) - 1)],
+            )
+            moved += 1
+        if moved:
+            self._update_degraded_gauge()
+        return moved
 
     def _reset_guard(self, s: int):
         self._slot_degrade[s] = 0

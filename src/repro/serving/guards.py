@@ -48,6 +48,7 @@ __all__ = [
     "FatalInvariantError",
     "GuardConfig",
     "DEGRADE_LEVELS",
+    "DEGRADE_CAUSES",
     "classify",
 ]
 
@@ -92,6 +93,18 @@ DEGRADE_LEVELS = (
     "ref-oracle",
 )
 MAX_DEGRADE = len(DEGRADE_LEVELS) - 1
+
+# Why a slot moved down the chain. Every escalation carries one of these
+# on its flight-recorder "degrade" event and on the
+# ``engine_degrade_cause_total{cause=...}`` counter, so a postmortem
+# distinguishes the NaN guard reacting to bad logits from the perf
+# watchdog reacting to an occupancy collapse (``DecodeEngine.
+# force_degrade``) without inferring it from surrounding events.
+DEGRADE_CAUSES = (
+    "nan_guard",   # non-finite logits tripped the per-tick NaN guard
+    "watchdog",    # a perf-watchdog detector forced the degrade
+    "manual",      # operator/test called force_degrade directly
+)
 
 
 @dataclass

@@ -118,6 +118,7 @@ class ScheduledRequest:
     req: Request
     priority: int = 0
     on_token: Optional[Callable[[int, int, bool], None]] = None
+    slo_class: str = "default"            # SLO budget class (watchdog)
     state: RequestState = RequestState.QUEUED
     slot: int = -1
     prefill_done: int = 0                 # prompt tokens already chunked in
@@ -229,11 +230,16 @@ class Scheduler:
         on_token: Optional[Callable[[int, int, bool], None]] = None,
         uid: Optional[int] = None,
         deadline_steps: Optional[int] = None,
+        slo_class: str = "default",
     ) -> ScheduledRequest:
         """Enqueue a request; returns its handle immediately. Tokens stream
         through ``on_token(uid, token, done)`` as :meth:`step` produces
         them and accumulate in ``handle.generated``. ``deadline_steps``
-        overrides the config-level TTFT deadline for this request."""
+        overrides the config-level TTFT deadline for this request.
+        ``slo_class`` names the request's SLO budget class: when the
+        engine carries a perf watchdog with a matching
+        :class:`~repro.obs.watch.SLOConfig`, this request's TTFT/TPOT
+        observations are charged against that class's error budget."""
         prompt = np.asarray(prompt, dtype=np.int32)
         if prompt.size == 0:
             raise ValueError("empty prompt (nothing to prefill)")
@@ -251,6 +257,7 @@ class Scheduler:
             ),
             priority=priority,
             on_token=on_token,
+            slo_class=slo_class,
             arrival_seq=self._arrival_seq,
             arrival_step=self.stats.steps,
             arrival_time=now,
@@ -504,7 +511,12 @@ class Scheduler:
             # a preempted-and-resumed request re-enters here; TTFT is the
             # time to its FIRST first-token only
             sr.first_token_time = now
-            self.engine.stats.ttft.observe(now - sr.arrival_time)
+            ttft = now - sr.arrival_time
+            self.engine.stats.ttft.observe(ttft)
+            if self.engine.watchdog is not None:
+                self.engine.watchdog.observe_latency(
+                    sr.slo_class, "ttft", ttft
+                )
             self.tracer.request_event(sr.uid, "FIRST_TOKEN")
         sr.last_token_time = now
         self.tracer.request_token(sr.uid)
@@ -518,7 +530,12 @@ class Scheduler:
     def _emit_decode_token(self, sr: ScheduledRequest, tok: int, done: bool):
         now = time.perf_counter()
         if sr.last_token_time >= 0:
-            self.engine.stats.tpot.observe(now - sr.last_token_time)
+            tpot = now - sr.last_token_time
+            self.engine.stats.tpot.observe(tpot)
+            if self.engine.watchdog is not None:
+                self.engine.watchdog.observe_latency(
+                    sr.slo_class, "tpot", tpot
+                )
         sr.last_token_time = now
         self.tracer.request_token(sr.uid)
         if sr.on_token:
@@ -697,4 +714,21 @@ class Scheduler:
             "degraded": dict(es.degraded),
             "faults": dict(es.faults),
             **es.latency_dict(),
+            **self._watchdog_telemetry(),
+        }
+
+    def _watchdog_telemetry(self) -> dict:
+        """Watchdog fire counts + per-class SLO budget state, when the
+        engine carries a perf watchdog (empty otherwise so older telemetry
+        consumers see an unchanged dict)."""
+        wd = self.engine.watchdog
+        if wd is None:
+            return {}
+        return {
+            "watchdog": {
+                "ticks": wd.ticks,
+                "total_fires": wd.total_fires,
+                "fire_counts": wd.fire_counts(),
+            },
+            "slo": {k: b.as_dict() for k, b in wd.budgets.items()},
         }

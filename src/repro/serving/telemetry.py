@@ -3,12 +3,21 @@
 
 ``Histogram``, ``Gauge``, and ``default_bounds`` live in the unified
 metrics registry now (alongside ``Counter`` and ``MetricsRegistry``, with
-JSON and Prometheus exporters). This module re-exports them so existing
-imports keep working; new code should import from ``repro.obs`` directly.
-Scheduled for removal once no in-repo consumer imports it.
+JSON and Prometheus exporters). Importing this module emits a one-time
+``DeprecationWarning``; no in-repo consumer imports it anymore, and it
+will be removed once downstream users have migrated.
 """
 from __future__ import annotations
+
+import warnings
 
 from repro.obs.metrics import Gauge, Histogram, default_bounds
 
 __all__ = ["Histogram", "Gauge", "default_bounds"]
+
+warnings.warn(
+    "repro.serving.telemetry is deprecated: import Gauge/Histogram/"
+    "default_bounds from repro.obs.metrics instead",
+    DeprecationWarning,
+    stacklevel=2,
+)

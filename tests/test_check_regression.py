@@ -127,3 +127,155 @@ def test_cli_inject_regression_exits_nonzero(tmp_path: Path):
     )
     assert bad.returncode == 1, bad.stdout + bad.stderr
     assert "FAIL" in bad.stdout
+
+
+# ---------------------------------------------------------------------------
+# absolute-trajectory gate (BENCH_history.jsonl, like-fingerprint only)
+# ---------------------------------------------------------------------------
+
+from benchmarks.check_regression import (          # noqa: E402
+    check_trajectory, update_baseline,
+)
+
+FP = {"device": "cpu", "platform": "cpu", "jax": "0.4.37",
+      "git_sha": "abc1234"}
+OTHER_FP = {"device": "TPU v5e", "platform": "tpu", "jax": "0.4.37",
+            "git_sha": "abc1234"}
+
+
+def _hist(vals, fp=FP, run_prefix="old"):
+    return [
+        {"format": 1, "run_id": f"{run_prefix}{i}", "fingerprint": fp,
+         "metrics": {"ticks_per_sec_fast": v}}
+        for i, v in enumerate(vals)
+    ]
+
+
+def _cur(tps=100.0, fp=FP, run_id="me"):
+    return {
+        "decode_step": {"ticks_per_sec_fast": tps},
+        "config": {"fingerprint": fp, "run_id": run_id},
+    }
+
+
+def test_trajectory_passes_at_parity():
+    _rows, failures = check_trajectory(_cur(100.0), _hist([99.0, 101.0, 100.0]))
+    assert failures == []
+
+
+def test_trajectory_fails_on_absolute_slowdown():
+    rows, failures = check_trajectory(_cur(80.0), _hist([100.0, 100.0, 100.0]))
+    assert failures == ["ticks_per_sec_fast"]
+    assert rows[0][4] == "FAIL (regression)"
+
+
+def test_trajectory_inject_regression_knob_trips():
+    _rows, failures = check_trajectory(
+        _cur(100.0), _hist([100.0] * 3), scale=0.8
+    )
+    assert failures == ["ticks_per_sec_fast"]
+
+
+def test_trajectory_ignores_other_fingerprints():
+    """TPU history must never gate a CPU run: a 'slowdown' vs numbers
+    from different hardware is a fingerprint mismatch, not a regression."""
+    rows, failures = check_trajectory(
+        _cur(80.0), _hist([1000.0] * 5, fp=OTHER_FP)
+    )
+    assert failures == []
+    assert rows[0][4] == "skip (no like-fingerprint history)"
+
+
+def test_trajectory_excludes_own_run_record():
+    """The bench appends its own record before the gate runs; comparing a
+    run against itself would always pass, masking regressions."""
+    history = _hist([100.0] * 3) + [
+        {"format": 1, "run_id": "me", "fingerprint": FP,
+         "metrics": {"ticks_per_sec_fast": 80.0}},
+    ]
+    _rows, failures = check_trajectory(_cur(80.0, run_id="me"), history)
+    assert failures == ["ticks_per_sec_fast"]
+
+
+def test_trajectory_median_window_resists_outliers():
+    """One lucky fast record inside the window must not ratchet the bar:
+    the median of the last `window` records is the comparison point."""
+    history = _hist([100.0, 100.0, 100.0, 100.0, 500.0])
+    _rows, failures = check_trajectory(_cur(95.0), history, window=5)
+    assert failures == []
+
+
+def test_trajectory_skips_without_fingerprint():
+    rows, failures = check_trajectory(
+        {"decode_step": {"ticks_per_sec_fast": 1.0}}, _hist([100.0])
+    )
+    assert failures == []
+    assert rows[0][4] == "skip (no fingerprint in artifact)"
+
+
+def test_trajectory_skips_with_empty_history():
+    rows, failures = check_trajectory(_cur(100.0), [])
+    assert failures == []
+    assert rows[0][4].startswith("skip")
+
+
+def test_trajectory_metric_missing_fails_when_history_exists():
+    cur = _cur(100.0)
+    del cur["decode_step"]["ticks_per_sec_fast"]
+    _rows, failures = check_trajectory(cur, _hist([100.0] * 3))
+    assert failures == ["ticks_per_sec_fast"]
+
+
+def test_update_baseline_clamps_parity_ratios(tmp_path: Path):
+    """--update-baseline caps the hardening/observability parity ratios
+    at 1.0 (a lucky faster-than-plain draw must not ratchet the bar) and
+    leaves every other metric untouched."""
+    cur = copy.deepcopy(DOC)
+    cur["hardening"]["hardened_over_plain_throughput"] = 1.07
+    cur["observability"]["traced_over_untraced_throughput"] = 0.99
+    out = tmp_path / "base.json"
+    clamped = update_baseline(cur, out)
+    assert clamped == ["hardening"]
+    doc = json.loads(out.read_text())
+    assert doc["hardening"]["hardened_over_plain_throughput"] == 1.0
+    assert doc["observability"]["traced_over_untraced_throughput"] == 0.99
+    assert doc["decode_step"]["speedup_vs_legacy"] == 500.0
+    # the regenerated baseline gates cleanly against the artifact it
+    # came from
+    _rows, failures = check(cur, doc)
+    assert failures == []
+
+
+def test_cli_update_baseline_and_trajectory_end_to_end(tmp_path: Path):
+    """Full CLI loop: --update-baseline writes a gateable baseline, the
+    trajectory gate passes at parity with like-fingerprint history and
+    exits 1 under --inject-regression."""
+    cur = tmp_path / "cur.json"
+    base = tmp_path / "base.json"
+    hist = tmp_path / "hist.jsonl"
+    doc = copy.deepcopy(DOC)
+    doc["decode_step"]["ticks_per_sec_fast"] = 100.0
+    doc["config"] = {"fingerprint": FP, "run_id": "me"}
+    cur.write_text(json.dumps(doc))
+    hist.write_text(
+        "\n".join(json.dumps(r) for r in _hist([100.0, 101.0, 99.0])) + "\n"
+    )
+    repo = Path(__file__).resolve().parent.parent
+    argv = [sys.executable, "-m", "benchmarks.check_regression",
+            "--current", str(cur), "--baseline", str(base),
+            "--history", str(hist)]
+    upd = subprocess.run(
+        argv + ["--update-baseline"], cwd=repo,
+        capture_output=True, text=True,
+    )
+    assert upd.returncode == 0, upd.stdout + upd.stderr
+    assert base.exists()
+    ok = subprocess.run(argv, cwd=repo, capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    assert "trajectory" in ok.stdout
+    bad = subprocess.run(
+        argv + ["--inject-regression", "0.8"], cwd=repo,
+        capture_output=True, text=True,
+    )
+    assert bad.returncode == 1, bad.stdout + bad.stderr
+    assert "trajectory:ticks_per_sec_fast" in bad.stdout

@@ -39,7 +39,7 @@ from repro.serving.scheduler import (
     Scheduler,
     SchedulerConfig,
 )
-from repro.serving.telemetry import Gauge
+from repro.obs.metrics import Gauge
 
 jax.config.update("jax_platform_name", "cpu")
 

@@ -207,8 +207,15 @@ def test_histogram_rebucket_preserves_exact_moments():
     assert Histogram([1.0]).rebucket([2.0]).count == 0
 
 
-def test_telemetry_shim_still_exports_old_names():
-    from repro.serving import telemetry
+def test_telemetry_shim_warns_and_still_exports_old_names():
+    """The deprecated shim keeps the old names importable but announces
+    its replacement via DeprecationWarning (once, at import)."""
+    import importlib
+    import sys
+
+    sys.modules.pop("repro.serving.telemetry", None)
+    with pytest.warns(DeprecationWarning, match="repro.obs.metrics"):
+        telemetry = importlib.import_module("repro.serving.telemetry")
     assert telemetry.Histogram is Histogram
     h = telemetry.Histogram(bounds=telemetry.default_bounds())
     h.observe(0.01)

@@ -390,7 +390,7 @@ def test_histogram_empty_is_guarded():
     """The empty histogram must never leak its ±inf sentinels: percentile
     and the JSON summary report zeros / a bare count, repr stays printable,
     and merging empties is a no-op."""
-    from repro.serving.telemetry import Histogram
+    from repro.obs.metrics import Histogram
 
     h = Histogram()
     assert h.count == 0
