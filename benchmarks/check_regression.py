@@ -21,7 +21,10 @@ once the baseline is refreshed).
 Per-metric thresholds: ``THRESHOLDS`` overrides the CLI threshold for
 metrics with a tighter contract — the hardening-overhead ratio (hardened
 engine vs plain, both fault-free) is gated at 3%, the "zero overhead when
-disabled" acceptance bar, not the 15% noise bar.
+disabled" acceptance bar, not the 15% noise bar. ``FLOORS`` adds absolute
+hard floors checked before the relative gate: the speculative speedup at
+k=4 must stay >= 1.0x regardless of what the baseline recorded — below
+parity the feature costs more than it amortizes.
 
 **Absolute-trajectory gate**: the ratio gates above are blind to the
 whole stack slowing down together, so the gate also compares the current
@@ -78,6 +81,15 @@ METRICS = {
     "observability": ("observability", "traced_over_untraced_throughput"),
     "quant_capacity": ("quant", "capacity_ratio_vs_bf16"),
     "quant_agreement": ("quant", "token_agreement"),
+    "speculative": ("speculative", "spec_speedup_k4"),
+}
+
+# absolute hard floors, checked before the relative gate: some metrics
+# carry a meaningful zero point that no amount of baseline drift may
+# cross — speculative decode below 1.0x means verify sweeps cost more
+# than the tokens they amortize, i.e. the feature actively hurts
+FLOORS = {
+    "speculative": 1.0,
 }
 
 # per-metric regression thresholds overriding the CLI default: the
@@ -117,8 +129,17 @@ def check(current: dict, baseline: dict, threshold: float = 0.15,
         cur = _lookup(current, path)
         if cur is not None:
             cur *= scale
+        floor = FLOORS.get(suite)
+        if floor is not None and cur is not None and cur < floor:
+            rows.append((suite, base, cur, None,
+                         f"FAIL (below floor {floor:g})"))
+            failures.append(suite)
+            continue
         if base is None:
-            rows.append((suite, base, cur, None, "skip (no baseline)"))
+            verdict = ("ok (floor only, no baseline)"
+                       if floor is not None and cur is not None
+                       else "skip (no baseline)")
+            rows.append((suite, base, cur, None, verdict))
             continue
         if cur is None:
             # distinguish "the whole bench section never ran" from "the
@@ -205,8 +226,19 @@ CLAMP_SUITES = ("hardening", "observability")
 
 def update_baseline(current: dict, out_path) -> list:
     """Regenerate the committed baseline from a bench artifact, applying
-    the clamp-to-1.0 rules automatically. Returns the clamped suites."""
+    the clamp-to-1.0 rules automatically. Returns the clamped suites.
+
+    Top-level sections present in the existing baseline but absent from
+    the current artifact are preserved — different bench entry points
+    own different sections (``prefix_bench`` vs ``decode_step_bench``),
+    and refreshing from one must not silently un-gate the other's
+    metrics."""
     doc = json.loads(json.dumps(current))      # deep copy, JSON-clean
+    out = Path(out_path)
+    if out.exists():
+        existing = json.loads(out.read_text())
+        for section, val in existing.items():
+            doc.setdefault(section, val)
     clamped = []
     for suite in CLAMP_SUITES:
         path = METRICS[suite]

@@ -80,8 +80,11 @@ def run_real_engine(rows: list):
     rng = np.random.default_rng(0)
     outs = {}
     for backend in ("ref", "lean", "fixed"):
-        eng = DecodeEngine(cfg, params, max_batch=2, cache_len=96,
-                           attn_backend=backend, num_workers=8)
+        from repro.serving.config import EngineConfig
+
+        eng = DecodeEngine(cfg, params, config=EngineConfig(
+            max_batch=2, cache_len=96, attn_backend=backend, num_workers=8,
+        ))
         for uid in range(3):
             eng.submit(Request(uid=uid,
                                prompt=rng.integers(0, cfg.vocab_size, 12 + 5 * uid),

@@ -47,12 +47,14 @@ def _build(cfg, params, *, prefix_cache, cascade, **ekw):
     from repro.serving.engine import DecodeEngine
     from repro.serving.scheduler import Scheduler, SchedulerConfig
 
-    eng = DecodeEngine(
-        cfg, params, max_batch=8, cache_len=192, attn_backend="lean",
+    from repro.serving.config import EngineConfig
+
+    eng = DecodeEngine(cfg, params, config=EngineConfig.from_legacy(
+        max_batch=8, cache_len=192, attn_backend="lean",
         num_workers=8, paged=True, page_size=PAGE,
         prefix_cache=prefix_cache, cascade=cascade,
         **({"cascade_stable_ticks": 1} if cascade else {}), **ekw,
-    )
+    ))
     sched = Scheduler(eng, SchedulerConfig(
         chunk_size=32, prefill_pack=4, token_budget=256,
     ))

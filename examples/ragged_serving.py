@@ -11,6 +11,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import init_params
+from repro.serving.config import EngineConfig, PagedConfig
 from repro.serving.engine import DecodeEngine
 from repro.serving.scheduler import RequestState, Scheduler, SchedulerConfig
 
@@ -18,9 +19,10 @@ cfg = get_smoke_config("mistral-nemo-12b")
 params = init_params(jax.random.PRNGKey(0), cfg)
 rng = np.random.default_rng(0)
 
-eng = DecodeEngine(cfg, params, max_batch=4, cache_len=128,
-                   attn_backend="lean", num_workers=8,
-                   paged=True, page_size=16)
+eng = DecodeEngine(cfg, params, config=EngineConfig(
+    max_batch=4, cache_len=128, attn_backend="lean", num_workers=8,
+    paged=PagedConfig(enabled=True, page_size=16),
+))
 sch = Scheduler(eng, SchedulerConfig(
     chunk_size=16, prefill_pack=2, token_budget=32, policy="priority",
     starvation_bound=16,

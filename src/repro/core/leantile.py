@@ -43,6 +43,7 @@ __all__ = [
     "make_schedule",
     "make_cascade_schedule",
     "make_chunk_schedule",
+    "make_spec_schedule",
     "default_tile_size",
     "fixed_split_factor",
 ]
@@ -400,6 +401,43 @@ def make_chunk_schedule(
     if max_len is not None:
         lens = [min(n, max_len) for n in lens]
     return make_schedule(lens, num_kv_heads, tile_size, num_workers)
+
+
+def make_spec_schedule(
+    ctx_lens: Sequence[int],
+    rows: int,
+    num_kv_heads: int,
+    tile_size: int,
+    num_workers: int,
+    *,
+    max_len: Optional[int] = None,
+    cache: Optional["ScheduleCache"] = None,
+) -> LeanSchedule:
+    """Stream-K schedule for a *speculative verify* tick: ``rows`` stacked
+    query rows per sequence (the last committed token plus k draft tokens)
+    scored against ``ctx_lens[b] + rows`` visible KV in one sweep.
+
+    This is a chunk schedule in disguise — a verify tick is a prefill pack
+    whose "chunk" is the draft block, so the visible KV per sequence is the
+    committed context plus the block itself and the linearization is
+    :func:`make_chunk_schedule` verbatim (the per-row runtime ``qstart``
+    causal mask handles the offset inside the kernel). Sequences excluded
+    from the verify pass ride along with ``ctx_lens[b] = 0``: their walk
+    covers ``rows`` tokens of tiles that the runtime ``seg_ctx = 0`` masks
+    entirely, like idle slots in decode schedules.
+
+    With ``cache`` given, bucketing over ``(ctx_len, rows)`` falls out of
+    the shared length lattice: ``ctx + rows`` buckets exactly like any other
+    visible length, so verify schedules hit the same memoized entries as
+    decode and chunk-prefill schedules.
+    """
+    if rows < 1:
+        raise ValueError(f"spec schedule needs rows >= 1, got {rows}")
+    visible = [int(c) + rows for c in ctx_lens]
+    return make_chunk_schedule(
+        visible, num_kv_heads, tile_size, num_workers,
+        max_len=max_len, cache=cache,
+    )
 
 
 # ----------------------------------------------------------------- cascade

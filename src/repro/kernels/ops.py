@@ -26,7 +26,8 @@ for schedules whose VMEM footprint exceeds the fused budget.
 from __future__ import annotations
 
 import warnings
-from typing import Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +59,9 @@ from .flash_prefill import flash_prefill, flash_prefill_paged  # re-export
 from .lean_prefill import lean_prefill_chunk_partials
 
 __all__ = [
+    "DecodePlan",
+    "CascadeOperands",
+    "decode",
     "lean_decode",
     "lean_decode_from_schedule",
     "lean_decode_paged",
@@ -68,6 +72,7 @@ __all__ = [
     "cascade_uses_fused",
     "lean_prefill_chunks",
     "flash_decode",
+    "flash_decode_from_lens",
     "flash_prefill",
     "flash_prefill_paged",
     "default_num_workers",
@@ -159,6 +164,131 @@ def _merge_two_phase(o_p, m_p, l_p, sched, merge_impl, interpret):
     return finalize(seg), seg.m + jnp.log(seg.l)
 
 
+# ---------------------------------------------------------------- DecodePlan
+_PLAN_KINDS = ("dense", "paged", "cascade", "flash", "verify")
+
+
+@dataclass(frozen=True)
+class DecodePlan:
+    """Everything jit-static about one decode dispatch, in one hashable key.
+
+    The ten parallel entry points this module grew (dense/paged/cascade x
+    convenience/from-schedule, flash, chunk-prefill) all reduce to "which
+    kernel family + which schedule + which layout flags" — a ``DecodePlan``
+    names that choice once, and :func:`decode` routes it. Every public
+    entry point below is now a thin wrapper that builds a plan and
+    delegates, so wrapper and dispatcher are bit-identical by construction
+    (pinned in ``tests/test_ops_decode.py``), and new modes land as a plan
+    kind instead of an eleventh function — speculative verify
+    (``kind='verify'``, ``spec_rows`` stacked query rows per sequence with
+    a runtime causal offset) is the first.
+
+    Fields mirror the jit-static arguments of the wrapped paths; a plan is
+    content-hashable (``LeanSchedule``/``CascadeSchedule`` hash by
+    content), so it serves directly as a ``static_argnames`` key for an
+    enclosing ``jax.jit`` exactly like the bare schedule used to.
+
+    kind:
+      * ``'dense'``   — stream-K decode over dense per-slot KV
+      * ``'paged'``   — stream-K decode through a page table
+      * ``'cascade'`` — prefix-grouped decode (``sched`` is the
+        :class:`~repro.core.leantile.CascadeSchedule`; grouped-pass
+        operands arrive via :class:`CascadeOperands`)
+      * ``'flash'``   — fixed-split FlashDecoding baseline
+        (``num_splits``/``tile`` static, no schedule)
+      * ``'verify'``  — multi-q-row paged attention: ``spec_rows`` stacked
+        query rows per sequence against a chunk/spec schedule with a
+        runtime ``qstart`` causal offset. Serves both chunked prefill and
+        speculative draft-verify (a verify tick IS a prefill pack whose
+        chunk is the draft block).
+    """
+
+    kind: str
+    sched: Optional[Union[LeanSchedule, CascadeSchedule]] = None
+    scale: Optional[float] = None
+    fused: bool = True
+    merge_impl: str = "xla"
+    interpret: bool = False
+    return_lse: bool = False
+    num_splits: Optional[int] = None      # flash only
+    tile: Optional[int] = None            # flash only
+    spec_rows: int = 0                    # verify only: q rows per sequence
+
+    def __post_init__(self):
+        if self.kind not in _PLAN_KINDS:
+            raise ValueError(
+                f"unknown plan kind {self.kind!r} (one of {_PLAN_KINDS})"
+            )
+        if self.kind == "flash":
+            if self.num_splits is None or self.tile is None:
+                raise ValueError("flash plans need num_splits and tile")
+        elif self.sched is None:
+            raise ValueError(f"{self.kind!r} plans need a schedule")
+        if self.kind == "verify" and self.spec_rows < 1:
+            raise ValueError("verify plans need spec_rows >= 1")
+
+
+class CascadeOperands(NamedTuple):
+    """Runtime arrays of a cascade dispatch (everything membership-shaped —
+    the schedule stays membership-free so equivalent groupings share one
+    trace; see :func:`lean_decode_cascade_from_schedule`)."""
+
+    prefix_lens: jax.Array         # (NP,) int32 true pass lengths (tokens)
+    members: jax.Array             # (NP, nmax) int32 slot ids, -1 padding
+    prefix_tbl: jax.Array          # (NP, Wp) int32 shared pass pages
+    suffix_tbl: jax.Array          # (B, Ws) int32 private tails (shifted)
+    fused_desc: jax.Array          # (7, N) int32 fused merge descriptors
+
+
+def decode(
+    q: jax.Array,
+    kv: Tuple[jax.Array, jax.Array],
+    *,
+    plan: DecodePlan,
+    ctx: jax.Array,
+    page_tbl: Optional[jax.Array] = None,
+    qstart: Optional[jax.Array] = None,
+    k_scales: Optional[jax.Array] = None,
+    v_scales: Optional[jax.Array] = None,
+    cascade: Optional[CascadeOperands] = None,
+):
+    """The one decode dispatcher: ``plan`` picks the kernel family, the
+    arrays ride alongside.
+
+    ``kv`` is ``(k, v)`` — dense per-slot KV for ``'dense'``/``'flash'``
+    plans, the global page pools for ``'paged'``/``'cascade'``/``'verify'``.
+    ``ctx`` carries the runtime lengths: per-segment context for decode
+    kinds, visible KV (``off + len``) for ``'verify'``, suffix lengths for
+    ``'cascade'``. ``qstart`` (verify only) is the per-segment causal
+    offset of query row 0. Pure in every array argument; ``plan`` is the
+    only static key, so an enclosing ``jax.jit(...,
+    static_argnames=('plan',))`` traces once per plan and replays across
+    page migrations, bucket hits, and draft blocks alike.
+    """
+    k, v = kv
+    if plan.kind == "dense":
+        return _dense_decode_impl(q, k, v, ctx, plan)
+    if plan.kind == "paged":
+        if page_tbl is None:
+            raise ValueError("paged plans need page_tbl")
+        return _paged_decode_impl(
+            q, k, v, ctx, page_tbl, plan, k_scales, v_scales
+        )
+    if plan.kind == "cascade":
+        if cascade is None:
+            raise ValueError("cascade plans need CascadeOperands")
+        return _cascade_decode_impl(q, k, v, ctx, cascade, plan,
+                                    k_scales, v_scales)
+    if plan.kind == "flash":
+        return _flash_decode_impl(q, k, v, ctx, plan)
+    # 'verify': multi-q-row paged attention with runtime causal offset
+    if page_tbl is None or qstart is None:
+        raise ValueError("verify plans need page_tbl and qstart")
+    return _verify_impl(
+        q, k, v, ctx, qstart, page_tbl, plan, k_scales, v_scales
+    )
+
+
 def lean_decode_from_schedule(
     q: jax.Array,
     k: jax.Array,
@@ -180,10 +310,21 @@ def lean_decode_from_schedule(
     once per schedule signature. The schedule's tile walk must *cover* the
     true lengths (``sched.seg_len >= seg_ctx``, e.g. built from bucketed
     lengths); masking against ``seg_ctx`` keeps the result exact.
+
+    Thin wrapper over :func:`decode` with a ``'dense'`` :class:`DecodePlan`.
     """
+    plan = DecodePlan(
+        kind="dense", sched=sched, scale=scale, fused=fused,
+        merge_impl=merge_impl, interpret=interpret, return_lse=return_lse,
+    )
+    return decode(q, (k, v), plan=plan, ctx=seg_ctx)
+
+
+def _dense_decode_impl(q, k, v, seg_ctx, plan: DecodePlan):
     B, Hq, d = q.shape
-    _, Hkv, S, _ = k.shape
-    scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
+    sched = plan.sched
+    scale = plan.scale if plan.scale is not None else 1.0 / float(np.sqrt(d))
+    fused = plan.fused
     q_seg, k_seg, v_seg, _g = _to_segments(q, k, v)
     k_seg, v_seg = _pad_kv(k_seg, v_seg, sched.tile_size)
     gq = q_seg.shape[1]
@@ -196,17 +337,19 @@ def lean_decode_from_schedule(
         fused = False
     if fused:
         o_seg, lse = lean_decode_fused(
-            q_seg, k_seg, v_seg, seg_ctx, sched, scale, interpret=interpret
+            q_seg, k_seg, v_seg, seg_ctx, sched, scale,
+            interpret=plan.interpret,
         )
     else:
         o_p, m_p, l_p = lean_decode_partials(
-            q_seg, k_seg, v_seg, seg_ctx, sched, scale, interpret=interpret
+            q_seg, k_seg, v_seg, seg_ctx, sched, scale,
+            interpret=plan.interpret,
         )
         o_seg, lse = _merge_two_phase(
-            o_p, m_p, l_p, sched, merge_impl, interpret
+            o_p, m_p, l_p, sched, plan.merge_impl, plan.interpret
         )
     out = o_seg.reshape(B, Hq, d).astype(q.dtype)
-    if return_lse:
+    if plan.return_lse:
         return out, lse.reshape(B, Hq)
     return out
 
@@ -308,27 +451,51 @@ def lean_decode_paged_from_schedule(
     each KV tile in VMEM before the fp32 online softmax — merge numerics
     are unchanged and the smaller elements shrink both the HBM traffic per
     stream-K tile and the fused-path VMEM footprint.
+
+    Thin wrapper over :func:`decode` with a ``'paged'`` :class:`DecodePlan`.
     """
-    B, Hq, d = q.shape
-    num_pages, Hkv, page_size, _ = k_pool.shape
-    if page_size != sched.tile_size:
-        raise ValueError(
-            f"page_size {page_size} != schedule tile_size {sched.tile_size}"
-            " — lean tiles must map 1:1 onto pages"
-        )
-    scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
-    gq = Hq // Hkv
-    q_seg = q.reshape(B * Hkv, gq, d)
-    seg_ctx = seg_ctx.astype(jnp.int32)
-    # (page, head) flatten: a pool row is one head's page — this is a
-    # layout-preserving reshape (free), and it lets the paged kernels reuse
-    # the dense kernel bodies wholesale with a 1D routing operand
+    plan = DecodePlan(
+        kind="paged", sched=sched, scale=scale, fused=fused,
+        merge_impl=merge_impl, interpret=interpret, return_lse=return_lse,
+    )
+    return decode(
+        q, (k_pool, v_pool), plan=plan, ctx=seg_ctx, page_tbl=page_tbl,
+        k_scales=k_scales, v_scales=v_scales,
+    )
+
+
+def _pool_rows(k_pool, v_pool, k_scales, v_scales):
+    """(page, head) flatten: a pool row is one head's page — this is a
+    layout-preserving reshape (free), and it lets the paged kernels reuse
+    the dense kernel bodies wholesale with a 1D routing operand."""
+    num_pages, Hkv, page_size, d = k_pool.shape
     k_rows = k_pool.reshape(num_pages * Hkv, page_size, d)
     v_rows = v_pool.reshape(num_pages * Hkv, page_size, d)
     ks_rows = vs_rows = None
     if k_scales is not None:
         ks_rows = k_scales.reshape(num_pages * Hkv, 1)
         vs_rows = v_scales.reshape(num_pages * Hkv, 1)
+    return k_rows, v_rows, ks_rows, vs_rows
+
+
+def _paged_decode_impl(q, k_pool, v_pool, seg_ctx, page_tbl,
+                       plan: DecodePlan, k_scales, v_scales):
+    B, Hq, d = q.shape
+    num_pages, Hkv, page_size, _ = k_pool.shape
+    sched = plan.sched
+    if page_size != sched.tile_size:
+        raise ValueError(
+            f"page_size {page_size} != schedule tile_size {sched.tile_size}"
+            " — lean tiles must map 1:1 onto pages"
+        )
+    scale = plan.scale if plan.scale is not None else 1.0 / float(np.sqrt(d))
+    fused = plan.fused
+    gq = Hq // Hkv
+    q_seg = q.reshape(B * Hkv, gq, d)
+    seg_ctx = seg_ctx.astype(jnp.int32)
+    k_rows, v_rows, ks_rows, vs_rows = _pool_rows(
+        k_pool, v_pool, k_scales, v_scales
+    )
 
     kv_eb = jnp.dtype(k_pool.dtype).itemsize
     if fused and fused_vmem_bytes(
@@ -339,18 +506,18 @@ def lean_decode_paged_from_schedule(
     if fused:
         o_seg, lse = lean_decode_paged_fused(
             q_seg, k_rows, v_rows, seg_ctx, route, sched, scale,
-            interpret=interpret, k_scales=ks_rows, v_scales=vs_rows,
+            interpret=plan.interpret, k_scales=ks_rows, v_scales=vs_rows,
         )
     else:
         o_p, m_p, l_p = lean_decode_paged_partials(
             q_seg, k_rows, v_rows, seg_ctx, route, sched, scale,
-            interpret=interpret, k_scales=ks_rows, v_scales=vs_rows,
+            interpret=plan.interpret, k_scales=ks_rows, v_scales=vs_rows,
         )
         o_seg, lse = _merge_two_phase(
-            o_p, m_p, l_p, sched, merge_impl, interpret
+            o_p, m_p, l_p, sched, plan.merge_impl, plan.interpret
         )
     out = o_seg.reshape(B, Hq, d).astype(q.dtype)
-    if return_lse:
+    if plan.return_lse:
         return out, lse.reshape(B, Hq)
     return out
 
@@ -474,7 +641,31 @@ def lean_decode_cascade_from_schedule(
     itself re-associates the softmax reduction, so against the unshared
     single-walk schedule the result is exact-but-not-bitwise (fp32
     tolerance), exactly like any other stream-K repartition.
+
+    Thin wrapper over :func:`decode` with a ``'cascade'``
+    :class:`DecodePlan` (the membership-shaped arrays travel as
+    :class:`CascadeOperands`).
     """
+    plan = DecodePlan(
+        kind="cascade", sched=csched, scale=scale, fused=fused,
+        interpret=interpret, return_lse=return_lse,
+    )
+    ops_c = CascadeOperands(
+        prefix_lens=prefix_lens, members=members, prefix_tbl=prefix_tbl,
+        suffix_tbl=suffix_tbl, fused_desc=fused_desc,
+    )
+    return decode(
+        q, (k_pool, v_pool), plan=plan, ctx=seg_ctx_suffix, cascade=ops_c,
+        k_scales=k_scales, v_scales=v_scales,
+    )
+
+
+def _cascade_decode_impl(q, k_pool, v_pool, seg_ctx_suffix, ops_c,
+                         plan: DecodePlan, k_scales, v_scales):
+    csched = plan.sched
+    scale, fused, interpret = plan.scale, plan.fused, plan.interpret
+    return_lse = plan.return_lse
+    prefix_lens, members, prefix_tbl, suffix_tbl, fused_desc = ops_c
     B, Hq, d = q.shape
     num_pages, Hkv, page_size, _ = k_pool.shape
     if page_size != csched.tile_size:
@@ -708,31 +899,53 @@ def lean_prefill_chunks(
     migrate across physical pages. Two-phase execution; the merge phase is
     the decode one (partials are the same ``(o, m, l)`` triple with
     ``g * C`` rows per segment instead of ``g``).
+
+    Thin wrapper over :func:`decode` with a ``'verify'`` :class:`DecodePlan`
+    (``spec_rows = C``): a chunked-prefill pack and a speculative verify
+    tick are the same multi-q-row workload, differing only in what the
+    rows hold (prompt chunk vs draft block).
     """
     N, Hq, C, d = q.shape
+    plan = DecodePlan(
+        kind="verify", sched=sched, scale=scale, merge_impl=merge_impl,
+        interpret=interpret, spec_rows=C,
+    )
+    return decode(
+        q, (k_pool, v_pool), plan=plan, ctx=seg_ctx, page_tbl=page_tbls,
+        qstart=seg_qstart, k_scales=k_scales, v_scales=v_scales,
+    )
+
+
+def _verify_impl(q, k_pool, v_pool, seg_ctx, seg_qstart, page_tbls,
+                 plan: DecodePlan, k_scales, v_scales):
+    N, Hq, C, d = q.shape
     num_pages, Hkv, page_size, _ = k_pool.shape
+    sched = plan.sched
     if page_size != sched.tile_size:
         raise ValueError(
             f"page_size {page_size} != schedule tile_size {sched.tile_size}"
             " — lean tiles must map 1:1 onto pages"
         )
-    scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
+    if C != plan.spec_rows:
+        raise ValueError(
+            f"q carries {C} rows per sequence, plan says {plan.spec_rows}"
+        )
+    scale = plan.scale if plan.scale is not None else 1.0 / float(np.sqrt(d))
     g = Hq // Hkv
     q_seg = q.reshape(N, Hkv, g, C, d).reshape(N * Hkv, g * C, d)
-    k_rows = k_pool.reshape(num_pages * Hkv, page_size, d)
-    v_rows = v_pool.reshape(num_pages * Hkv, page_size, d)
-    ks_rows = vs_rows = None
-    if k_scales is not None:
-        ks_rows = k_scales.reshape(num_pages * Hkv, 1)
-        vs_rows = v_scales.reshape(num_pages * Hkv, 1)
+    k_rows, v_rows, ks_rows, vs_rows = _pool_rows(
+        k_pool, v_pool, k_scales, v_scales
+    )
     route = _paged_route(sched, page_tbls, Hkv, fused=False)
     o_p, m_p, l_p = lean_prefill_chunk_partials(
         q_seg, k_rows, v_rows, seg_ctx.astype(jnp.int32),
         seg_qstart.astype(jnp.int32), route, sched, scale,
-        chunk_cap=C, interpret=interpret,
+        chunk_cap=C, interpret=plan.interpret,
         k_scales=ks_rows, v_scales=vs_rows,
     )
-    o_seg, _lse = _merge_two_phase(o_p, m_p, l_p, sched, merge_impl, interpret)
+    o_seg, _lse = _merge_two_phase(
+        o_p, m_p, l_p, sched, plan.merge_impl, plan.interpret
+    )
     return o_seg.reshape(N, Hq, C, d).astype(q.dtype)
 
 
@@ -750,14 +963,25 @@ def flash_decode_from_lens(
     """Jit-stable FlashDecoding baseline: lengths are a runtime array,
     ``num_splits``/``tile`` are static — the serving engine jits its whole
     decode step over this (the fixed-split analogue of
-    :func:`lean_decode_from_schedule`)."""
+    :func:`lean_decode_from_schedule`).
+
+    Thin wrapper over :func:`decode` with a ``'flash'`` :class:`DecodePlan`.
+    """
+    plan = DecodePlan(
+        kind="flash", scale=scale, num_splits=num_splits, tile=tile,
+        interpret=interpret,
+    )
+    return decode(q, (k, v), plan=plan, ctx=seg_ctx)
+
+
+def _flash_decode_impl(q, k, v, seg_ctx, plan: DecodePlan):
     B, Hq, d = q.shape
-    scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
+    scale = plan.scale if plan.scale is not None else 1.0 / float(np.sqrt(d))
     q_seg, k_seg, v_seg, _g = _to_segments(q, k, v)
-    k_seg, v_seg = _pad_kv(k_seg, v_seg, tile)
+    k_seg, v_seg = _pad_kv(k_seg, v_seg, plan.tile)
     o_p, m_p, l_p = flash_decode_partials(
-        q_seg, k_seg, v_seg, seg_ctx.astype(jnp.int32), num_splits, tile,
-        scale, interpret=interpret,
+        q_seg, k_seg, v_seg, seg_ctx.astype(jnp.int32), plan.num_splits,
+        plan.tile, scale, interpret=plan.interpret,
     )
     part = AttnPartial(
         o=jnp.moveaxis(o_p, 1, 0), m=jnp.moveaxis(m_p, 1, 0),

@@ -10,6 +10,7 @@ from .transformer import (
     prefill_chunks,
     supports_chunked_prefill,
     decode_step,
+    verify_step,
     count_params,
     count_active_params,
 )

@@ -629,36 +629,26 @@ def supports_chunked_prefill(cfg: ModelConfig) -> bool:
     )
 
 
-def prefill_chunks(
+def _chunk_forward(
     params,
     cfg: ModelConfig,
     cache,
-    tokens,                 # (N, C) int32 — one prompt chunk per row
-    offs,                   # (N,) int32 — tokens already prefilled per row
-    lens,                   # (N,) int32 — valid tokens in each chunk
-    page_tbls,              # (N, W) int32 — page table rows of the chunks
+    tokens,                 # (N, C) int32 — one token block per row
+    offs,                   # (N,) int32 — tokens already in cache per row
+    lens,                   # (N,) int32 — valid tokens in each block
+    page_tbls,              # (N, W) int32 — page table rows of the blocks
     attn_fn: Optional[Callable] = None,
 ):
-    """Forward N prompt chunks against the shared paged decode cache.
-
-    The chunked-prefill sibling of :func:`decode_step`: each row is one
-    chunk of one in-flight request's prompt, at its own depth ``offs[n]``.
-    K/V append directly into the page pools through ``page_tbls`` (no dense
-    staging, no copy-on-admit), queries attend causally over each row's
-    visible prefix, and the returned logits are each row's *last valid
-    position* — the row finishing its prompt samples its first token from
-    them. Shapes (N, C, W) are static: one trace serves every chunk of
-    every prompt (``offs``/``lens``/``page_tbls`` are runtime arrays).
-
-    Requires :func:`supports_chunked_prefill`. Returns
-    ``(logits (N, V) f32, new_cache)``.
-    """
+    """Shared body of :func:`prefill_chunks` and :func:`verify_step`: run N
+    token blocks through every layer against the paged decode cache,
+    appending K/V at each row's depth ``offs[n]``. Returns the full hidden
+    states ``(x (N, C, D), new_cache)`` — the callers differ only in which
+    positions they unembed."""
     if not supports_chunked_prefill(cfg):
         raise ValueError(
             f"{cfg.name}: chunked prefill requires all-'attn' stages and "
             "rotary positions (see supports_chunked_prefill)"
         )
-    N, C = tokens.shape
     x = _embed(params, cfg, tokens)
     offs = jnp.asarray(offs, jnp.int32)
     lens = jnp.asarray(lens, jnp.int32)
@@ -727,12 +717,79 @@ def prefill_chunks(
                 body, (x, stage_c), (stage_p, jnp.arange(reps))
             )
         new_cache.append(stage_nc)
+    return x, new_cache
+
+
+def prefill_chunks(
+    params,
+    cfg: ModelConfig,
+    cache,
+    tokens,                 # (N, C) int32 — one prompt chunk per row
+    offs,                   # (N,) int32 — tokens already prefilled per row
+    lens,                   # (N,) int32 — valid tokens in each chunk
+    page_tbls,              # (N, W) int32 — page table rows of the chunks
+    attn_fn: Optional[Callable] = None,
+):
+    """Forward N prompt chunks against the shared paged decode cache.
+
+    The chunked-prefill sibling of :func:`decode_step`: each row is one
+    chunk of one in-flight request's prompt, at its own depth ``offs[n]``.
+    K/V append directly into the page pools through ``page_tbls`` (no dense
+    staging, no copy-on-admit), queries attend causally over each row's
+    visible prefix, and the returned logits are each row's *last valid
+    position* — the row finishing its prompt samples its first token from
+    them. Shapes (N, C, W) are static: one trace serves every chunk of
+    every prompt (``offs``/``lens``/``page_tbls`` are runtime arrays).
+
+    Requires :func:`supports_chunked_prefill`. Returns
+    ``(logits (N, V) f32, new_cache)``.
+    """
+    N, C = tokens.shape
+    x, new_cache = _chunk_forward(
+        params, cfg, cache, tokens, offs, lens, page_tbls, attn_fn
+    )
     # each row's last valid position: the first-token logits for rows whose
     # chunk completes the prompt (other rows' logits are simply unused)
+    lens = jnp.asarray(lens, jnp.int32)
     idx = jnp.clip(lens - 1, 0, C - 1)
     x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
     x_last = rms_norm(x_last, params["final_norm"], cfg.norm_eps)
     return _unembed(params, cfg, x_last), new_cache
+
+
+def verify_step(
+    params,
+    cfg: ModelConfig,
+    cache,
+    tokens,                 # (N, R) int32 — [last committed, k drafts]
+    offs,                   # (N,) int32 — committed context per row
+    lens,                   # (N,) int32 — valid rows (R, or 0 when masked)
+    page_tbls,              # (N, W) int32 — page table rows
+    attn_fn: Optional[Callable] = None,
+):
+    """Speculative verify: score a block of R = k + 1 stacked tokens per
+    sequence in ONE forward and return the logits of *every* position.
+
+    Row layout per sequence: position 0 carries the last committed (not yet
+    attended) token, positions 1..k carry the draft tokens. K/V for the
+    whole block append into the page pools at depths ``offs[n] ..
+    offs[n] + R - 1`` exactly like a prefill chunk; logits row ``i``
+    predicts the token at depth ``offs[n] + i + 1``, so greedy
+    acceptance-rejection runs left to right over the returned rows and a
+    rejected tail needs no scatter undo — the committed length simply never
+    advances over the garbage positions (the same runtime-length masking
+    that makes bucketed schedules exact).
+
+    Mechanically this IS :func:`prefill_chunks` minus the last-position
+    gather: same layer stack, same paged attention entry, same causal
+    ``qstart`` mask — the composition the ROADMAP's speculative item calls
+    for. Returns ``(logits (N, R, V) f32, new_cache)``.
+    """
+    x, new_cache = _chunk_forward(
+        params, cfg, cache, tokens, offs, lens, page_tbls, attn_fn
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, cfg, x), new_cache
 
 
 # ------------------------------------------------------------------ decode

@@ -67,6 +67,7 @@ from repro.core.leantile import (
     fixed_split_factor,
     make_chunk_schedule,
     make_schedule,
+    make_spec_schedule,
 )
 from repro.core.attention import paged_gather_kv, paged_gather_kv_dequant
 from repro.kernels import flash_decode, lean_decode
@@ -87,9 +88,12 @@ from repro.models import (
     init_paged_cache,
     prefill,
     prefill_chunks,
+    verify_step,
 )
 from repro.models import supports_chunked_prefill as _cfg_supports_chunked
+from repro.serving.config import EngineConfig
 from repro.serving.faults import FaultInjector, corrupt_trie_node
+from repro.serving.speculative import NGramProposer
 from repro.serving.guards import (
     DEGRADE_CAUSES,
     DEGRADE_LEVELS,
@@ -164,6 +168,10 @@ _STAT_COUNTERS = (
     "audits_run",                # periodic invariant audit sweeps
     "audit_failures",            # audits that caught a violation
     "audit_repairs",             # violations fixed by repair()
+    # speculative (draft-verify) decode telemetry
+    "spec_ticks",                # decode ticks that ran a verify sweep
+    "spec_draft_tokens",         # draft tokens submitted to verify
+    "spec_accepted_tokens",      # drafts the verify sweep accepted
 )
 
 
@@ -540,6 +548,45 @@ def _kernel_decode_step(
     )
 
 
+def _chunk_attn_fn(offs, lens, *, cfg, backend, sched, interpret):
+    """The multi-q-row paged attention closure shared by chunked prefill
+    and the speculative verify step (``None`` selects the gather + jnp
+    reference path). Rows attend causally up to ``offs + row`` via the
+    schedule's runtime ``qstart``."""
+    if backend == "lean":
+
+        def attn_fn(q, k_pool, v_pool, tbls, o, k_scales=None, v_scales=None):
+            visible = jnp.maximum(offs + lens, 1).astype(jnp.int32)
+            seg_ctx = jnp.repeat(visible, cfg.n_kv_heads)
+            seg_qstart = jnp.repeat(offs.astype(jnp.int32), cfg.n_kv_heads)
+            return lean_prefill_chunks(
+                q, k_pool, v_pool, seg_ctx, seg_qstart, tbls, sched,
+                interpret=interpret, k_scales=k_scales, v_scales=v_scales,
+            )
+
+        return attn_fn
+
+    if backend == "fixed":
+
+        def attn_fn(q, k_pool, v_pool, tbls, o, k_scales=None, v_scales=None):
+            if k_scales is not None:
+                # fixed-split baseline has no in-kernel dequant — widen the
+                # pool view first (bench/fallback path only)
+                k_pool = (
+                    k_pool.astype(jnp.float32) * k_scales[:, :, None, None]
+                ).astype(jnp.bfloat16)
+                v_pool = (
+                    v_pool.astype(jnp.float32) * v_scales[:, :, None, None]
+                ).astype(jnp.bfloat16)
+            return flash_prefill_paged(
+                q, k_pool, v_pool, tbls, o, interpret=interpret
+            )
+
+        return attn_fn
+
+    return None
+
+
 def _chunk_prefill_step(
     params,
     cache,
@@ -558,35 +605,10 @@ def _chunk_prefill_step(
     key, so the engine jits this end-to-end exactly like the decode step —
     one trace per (pack shape, schedule signature), replayed as requests
     advance through their prompts."""
-    if backend == "lean":
-
-        def attn_fn(q, k_pool, v_pool, tbls, o, k_scales=None, v_scales=None):
-            visible = jnp.maximum(offs + lens, 1).astype(jnp.int32)
-            seg_ctx = jnp.repeat(visible, cfg.n_kv_heads)
-            seg_qstart = jnp.repeat(offs.astype(jnp.int32), cfg.n_kv_heads)
-            return lean_prefill_chunks(
-                q, k_pool, v_pool, seg_ctx, seg_qstart, tbls, sched,
-                interpret=interpret, k_scales=k_scales, v_scales=v_scales,
-            )
-
-    elif backend == "fixed":
-
-        def attn_fn(q, k_pool, v_pool, tbls, o, k_scales=None, v_scales=None):
-            if k_scales is not None:
-                # fixed-split baseline has no in-kernel dequant — widen the
-                # pool view first (bench/fallback path only)
-                k_pool = (
-                    k_pool.astype(jnp.float32) * k_scales[:, :, None, None]
-                ).astype(jnp.bfloat16)
-                v_pool = (
-                    v_pool.astype(jnp.float32) * v_scales[:, :, None, None]
-                ).astype(jnp.bfloat16)
-            return flash_prefill_paged(
-                q, k_pool, v_pool, tbls, o, interpret=interpret
-            )
-
-    else:
-        attn_fn = None            # gather + jnp reference
+    attn_fn = _chunk_attn_fn(
+        offs, lens, cfg=cfg, backend=backend, sched=sched,
+        interpret=interpret,
+    )
     logits, new_cache = prefill_chunks(
         params, cfg, cache, tokens, offs, lens, page_tbls, attn_fn=attn_fn
     )
@@ -596,39 +618,94 @@ def _chunk_prefill_step(
     return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
 
 
+def _spec_verify_step(
+    params,
+    cache,
+    tokens,          # (B, R) int32 — [last token, k drafts] per slot
+    offs,            # (B,) int32 — committed context (write offset)
+    lens,            # (B,) int32 — 1 + drafts actually proposed
+    page_tbls,       # (B, W) int32
+    *,
+    cfg: ModelConfig,
+    backend: str,
+    sched: LeanSchedule,
+    interpret: bool,
+):
+    """One speculative verify tick: R = k+1 stacked query rows per slot run
+    through the chunked-prefill attention path (KV scattered at positions
+    ``offs .. offs+lens-1``, row ``i`` attending causally through
+    ``offs + i``). Returns the per-row greedy tokens ``(B, R)`` plus a
+    per-slot finiteness verdict — the host sync moves B*R ints, never the
+    vocab-wide logits block."""
+    attn_fn = _chunk_attn_fn(
+        offs, lens, cfg=cfg, backend=backend, sched=sched,
+        interpret=interpret,
+    )
+    logits, new_cache = verify_step(
+        params, cfg, cache, tokens, offs, lens, page_tbls, attn_fn=attn_fn
+    )
+    return (
+        jnp.argmax(logits, axis=-1).astype(jnp.int32),
+        jnp.all(jnp.isfinite(logits), axis=(1, 2)),
+        new_cache,
+    )
+
+
 class DecodeEngine:
     def __init__(
         self,
         cfg: ModelConfig,
         params,
-        *,
-        max_batch: int = 4,
-        cache_len: int = 256,
-        attn_backend: str = "ref",
-        num_workers: int = 16,
-        rng_seed: int = 0,
-        use_fast_path: bool = True,
-        fused: bool = True,
-        interpret: Optional[bool] = None,
-        schedule_cache_entries: int = 128,
-        paged: bool = False,
-        page_size: Optional[int] = None,
-        num_pages: Optional[int] = None,
-        prefix_cache: bool = False,
-        cascade: bool = False,
-        cascade_fused: bool = True,
-        cascade_grouping: str = "lcp",
-        cascade_multi_level: bool = True,
-        cascade_stable_ticks: int = 2,
-        faults: Optional[FaultInjector] = None,
-        guards: Optional[GuardConfig] = None,
-        kv_dtype: Optional[str] = None,
-        tracer: Optional[Tracer] = None,
-        metrics: Optional[MetricsRegistry] = None,
-        flight: Optional[FlightRecorder] = None,
-        flight_dir: Optional[str] = None,
-        watchdog=None,
+        config: Optional[EngineConfig] = None,
+        **legacy,
     ):
+        """``config`` (an :class:`repro.serving.config.EngineConfig`) is
+        the one configuration argument. The legacy loose-keyword surface
+        (``paged=True, cascade_fused=..., tracer=...``) still works for one
+        release: it maps through :meth:`EngineConfig.from_legacy` and emits
+        a single :class:`DeprecationWarning` per construction."""
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    "pass either config=EngineConfig(...) or the legacy "
+                    "keyword arguments, not both"
+                )
+            warnings.warn(
+                "DecodeEngine(**loose_kwargs) is deprecated; pass "
+                "config=EngineConfig(...) (see repro.serving.config)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            config = EngineConfig.from_legacy(**legacy)
+        elif config is None:
+            config = EngineConfig()
+        self.config = config
+        # unpack the nest into the names the body below grew up with
+        max_batch = config.max_batch
+        cache_len = config.cache_len
+        attn_backend = config.attn_backend
+        num_workers = config.num_workers
+        use_fast_path = config.use_fast_path
+        fused = config.fused
+        interpret = config.interpret
+        schedule_cache_entries = config.schedule_cache_entries
+        paged = config.paged.enabled
+        page_size = config.paged.page_size
+        num_pages = config.paged.num_pages
+        prefix_cache = config.paged.prefix_cache
+        kv_dtype = config.paged.kv_dtype
+        cascade = config.cascade.enabled
+        cascade_fused = config.cascade.fused
+        cascade_grouping = config.cascade.grouping
+        cascade_multi_level = config.cascade.multi_level
+        cascade_stable_ticks = config.cascade.stable_ticks
+        faults = config.faults
+        guards = config.guards
+        tracer = config.obs.tracer
+        metrics = config.obs.metrics
+        flight = config.obs.flight
+        flight_dir = config.obs.flight_dir
+        watchdog = config.obs.watchdog
         # ``kv_dtype`` overrides the model config's KV storage dtype for
         # this engine — 'int8' turns on quantized paged pools (per-(page,
         # head) f32 scales, in-kernel dequant) for 2-4x effective capacity
@@ -872,6 +949,39 @@ class DecodeEngine:
             functools.partial(_fill_page, cfg=cfg), donate_argnums=(0,)
         )
         self._jit_screen = jax.jit(_screen_logits)
+
+        # speculative (draft-verify) decode: one verify sweep scores k
+        # drafts per slot. Requires the chunked-prefill machinery (paged
+        # pool + all-pooled-KV architecture) — the verify step IS a chunk
+        # step whose "chunk" is [last token, k drafts].
+        spec = config.spec
+        self.spec_k = int(spec.k) if spec.enabled else 0
+        self.proposer = spec.proposer
+        if self.spec_k:
+            if spec.k < 1:
+                raise ValueError(f"SpecConfig.k must be >= 1, got {spec.k}")
+            if not self.supports_chunked_prefill():
+                raise ValueError(
+                    "speculative decode runs the multi-row verify step "
+                    "through the chunked-prefill kernels — requires "
+                    "paged=True and an all-'attn' architecture "
+                    "(see supports_chunked_prefill)"
+                )
+            if self.proposer is None:
+                self.proposer = NGramProposer()
+            self.metrics.gauge_fn(
+                "engine_spec_accept_rate",
+                lambda: (
+                    self.stats.spec_accepted_tokens
+                    / max(1, self.stats.spec_draft_tokens)
+                ),
+                help="accepted / proposed draft tokens (cumulative)",
+            )
+        self._jit_spec_verify = jax.jit(
+            functools.partial(_spec_verify_step, cfg=cfg),
+            static_argnames=("backend", "sched", "interpret"),
+            donate_argnames=("cache",),
+        )
 
     # ------------------------------------------------------------- schedule
     def _tick_schedule(self, ctx_lens=None) -> LeanSchedule:
@@ -1478,7 +1588,9 @@ class DecodeEngine:
         return self.decode_tick()
 
     def decode_tick(self, exclude=None) -> Dict[int, int]:
-        """One decode step over the active slots. Returns {uid: new_token}.
+        """One decode step over the active slots. Returns {uid: new_token}
+        — or, with speculative decode on, {uid: [tokens...]} (1 to k+1
+        tokens per slot, variable per tick; see ``decode_token_width``).
 
         ``exclude`` masks slots out of this tick — the Scheduler passes its
         PREFILLING slots, whose pool pages hold a *partial* prompt that the
@@ -1535,18 +1647,27 @@ class DecodeEngine:
                 self._update_degraded_gauge()
             return {}
 
+        # speculative slots leave the single-token passes entirely: their
+        # tick is one multi-row verify sweep. Ineligible slots (degraded,
+        # near capacity, or starved of pages) fall back to the normal
+        # passes below — per-slot, per-tick, with no mode switch.
+        guard_on = self.guard_cfg is not None and self.guard_cfg.nan_guard
+        spec_slots: List[int] = []
+        if self.spec_k:
+            spec_slots = self._spec_select(active)
+        norm = [s for s in active if s not in spec_slots]
+
         # partition the batch by degraded-mode level: healthy slots stay
         # on the configured fast path (one pass, the common case is the
         # whole batch), quarantined slots re-decode in separate passes
         # down the fallback chain with everyone else masked out
-        guard_on = self.guard_cfg is not None and self.guard_cfg.nan_guard
         if self.guard_cfg is None or not any(
-            self._slot_degrade[s] for s in active
+            self._slot_degrade[s] for s in norm
         ):
-            passes = [(0, active)]
+            passes = [(0, norm)] if norm else []
         else:
             by_lvl: Dict[int, List[int]] = {}
-            for s in active:
+            for s in norm:
                 by_lvl.setdefault(self._effective_level(s), []).append(s)
             passes = sorted(by_lvl.items())
 
@@ -1561,6 +1682,11 @@ class DecodeEngine:
                     (slots, np.asarray(jnp.argmax(logits, axis=-1)), None)
                 )
 
+        spec = (
+            self._spec_verify(spec_slots, exclude, guard_on)
+            if spec_slots else None
+        )
+
         # fault point 'nan_output': flip one victim's finiteness verdict —
         # the guard reacts exactly as to a real non-finite logit row, with
         # no device-side corruption left behind
@@ -1573,8 +1699,10 @@ class DecodeEngine:
                 for slots, _, fin in results:
                     if v in slots:
                         fin[v] = False
+                if spec is not None and v in spec[0]:
+                    spec[2][v] = False
 
-        return self._emit_tokens(results, guard_on)
+        return self._emit_tokens(results, guard_on, spec=spec)
 
     def _decode_pass_main(self, active: List[int], ctx_np, ptbl_np):
         """The engine's configured (level-0) decode path: cascade grouping
@@ -1747,9 +1875,142 @@ class DecodeEngine:
             return 3
         return lvl
 
-    def _emit_tokens(self, results, guard_on: bool) -> Dict[int, int]:
+    # ------------------------------------------------------------ speculative
+    def decode_token_width(self) -> int:
+        """Most tokens one decode tick can emit per slot — k+1 when
+        speculative decode is on, 1 otherwise. Tick composers (the
+        Scheduler) charge this against their token budget."""
+        return self.spec_k + 1 if self.spec_k else 1
+
+    def _spec_select(self, active: List[int]) -> List[int]:
+        """The slots running a verify sweep this tick. A slot is eligible
+        when it is healthy (level 0), its context leaves room for the full
+        R = k+1 block, and its pages (grown + copy-on-written here, exactly
+        like a prefill chunk's) can cover the block's KV writes. Everyone
+        else falls back to the single-token passes for this tick."""
+        R = self.spec_k + 1
+        cap = min(self.cache_len, self.pages_per_slot * self.tile)
+        out = []
+        for s in active:
+            if self.guard_cfg is not None and self._slot_degrade[s]:
+                continue
+            ctx = int(self.ctx_lens[s])
+            if ctx + R > cap:
+                continue
+            if not self.ensure_chunk_pages(s, ctx + R, write_from=ctx):
+                continue          # pool pressure; plain decode this tick
+            out.append(s)
+        return out
+
+    def _spec_verify(self, slots: List[int], exclude, guard_on: bool):
+        """Run the verify sweep for ``slots``: one chunk-shaped forward
+        whose per-slot "chunk" is ``[last emitted token, drafts...]``,
+        scattered at positions ``ctx .. ctx+len-1``. Slots outside the
+        sweep are masked chunk-style (offs/lens 0, page-table rows nulled)
+        so their KV is neither read nor written. Returns
+        ``(slots, rows (B, R), finite_or_None, drafts)`` for
+        :meth:`_emit_tokens` — rejected drafts need no undo: their KV rows
+        sit beyond the committed ``ctx_lens`` and are overwritten by the
+        next sweep through the same trimmed page-table tail."""
+        R = self.spec_k + 1
+        N = self.max_batch
+        toks = np.zeros((N, R), dtype=np.int32)
+        offs = np.zeros(N, dtype=np.int32)
+        lens = np.zeros(N, dtype=np.int32)
+        drafts: Dict[int, List[int]] = {}
+        for s in slots:
+            req = self.slot_req[s]
+            d = [int(t) for t in self.proposer.propose(req, self.spec_k)]
+            d = d[: self.spec_k]
+            drafts[s] = d
+            ctx = int(self.ctx_lens[s])
+            toks[s, 0] = self.next_tokens[s, 0]
+            if d:
+                toks[s, 1 : 1 + len(d)] = d
+            offs[s] = ctx
+            lens[s] = 1 + len(d)
+        tbls = self.page_tbl.copy()
+        for s in range(N):
+            if s not in drafts:
+                tbls[s, :] = 0
+        sched = None
+        if self.attn_backend == "lean":
+            spec_ctx = [
+                int(self.ctx_lens[s]) if s in drafts else 0
+                for s in range(N)
+            ]
+            sched = make_spec_schedule(
+                spec_ctx, R, self.cfg.n_kv_heads, self.tile,
+                self.num_workers,
+                max_len=self.pages_per_slot * self.tile,
+                cache=self.sched_cache,
+            )
+        sp = self.tracer.span("spec_verify", slots=len(slots), rows=R)
+        with sp:
+            with _quiet_donation():
+                rows, fin, self.cache = self._jit_spec_verify(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(offs), jnp.asarray(lens),
+                    jnp.asarray(tbls),
+                    backend=self.attn_backend, sched=sched,
+                    interpret=self.interpret,
+                )
+            if sp:
+                t0 = time.perf_counter()
+                jax.block_until_ready(rows)
+                sp.add_sync(time.perf_counter() - t0)
+        return (
+            slots, np.asarray(rows),
+            np.array(fin) if guard_on else None, drafts,
+        )
+
+    def _emit_spec_tokens(self, spec, out, guard_on: bool, cap: int) -> int:
+        """Acceptance-rejection + emission for this tick's verify sweep.
+        Greedy accept: draft ``i+1`` stands iff row ``i``'s argmax equals
+        it and every earlier draft stood — so the emitted stream is
+        token-identical to plain greedy decode. Each slot emits its
+        accepted drafts plus the one bonus token from the first
+        disagreeing row; ``ctx_lens`` advances by exactly the emission
+        count, which is the whole rollback story (pages stay allocated,
+        the page-table tail past the new context is simply dead)."""
+        slots, rows, finite, drafts = spec
+        n_emitted = 0
+        for s in slots:
+            req = self.slot_req[s]
+            if finite is not None and not bool(finite[s]):
+                # quarantine, chunk-style: nothing emitted, context does
+                # not advance — the garbage KV the sweep wrote sits beyond
+                # ctx_lens, invisible to every masked read
+                self._on_bad_slot(s)
+                continue
+            d = drafts[s]
+            a = 0
+            while a < len(d) and int(rows[s, a]) == d[a]:
+                a += 1
+            ctx = int(self.ctx_lens[s])
+            rem = req.max_new_tokens - len(req.generated)
+            e = min(a + 1, rem, cap - 1 - ctx)
+            e = max(e, 1)
+            emitted = [int(rows[s, i]) for i in range(e)]
+            req.generated.extend(emitted)
+            self.next_tokens[s, 0] = emitted[-1]
+            self.ctx_lens[s] += e
+            out[req.uid] = emitted
+            n_emitted += e
+            self.stats.tokens_generated += e
+            self.stats.spec_draft_tokens += len(d)
+            self.stats.spec_accepted_tokens += a
+            if req.done or self.ctx_lens[s] >= cap - 1:
+                self.release_slot(s)
+        self.stats.spec_ticks += 1
+        return n_emitted
+
+    def _emit_tokens(self, results, guard_on: bool, spec=None) -> Dict[int, int]:
         """Token emission + guard bookkeeping over this tick's pass
-        results (``[(slots, next_tokens, finite_or_None), ...]``)."""
+        results (``[(slots, next_tokens, finite_or_None), ...]``), plus
+        the verify sweep's when one ran. In speculative mode every value
+        in the returned dict is a ``List[int]`` (single-token slots emit
+        one-element lists)."""
         # context cap: the cache row, and in paged mode also the whole
         # pool — a context allowed past usable_pages * tile could never be
         # re-admitted after a recompute-resume preemption (its regrown
@@ -1775,7 +2036,7 @@ class DecodeEngine:
                 req.generated.append(nxt)
                 self.next_tokens[s, 0] = nxt
                 self.ctx_lens[s] += 1
-                out[req.uid] = nxt
+                out[req.uid] = [nxt] if self.spec_k else nxt
                 n_emitted += 1
                 self.stats.tokens_generated += 1
                 if req.done or self.ctx_lens[s] >= cap - 1:
@@ -1784,6 +2045,8 @@ class DecodeEngine:
                     # this is what lets the pool admit more in-flight work
                     # than a dense worst-case cache could hold
                     self.release_slot(s)
+        if spec is not None:
+            n_emitted += self._emit_spec_tokens(spec, out, guard_on, cap)
         self.stats.ticks += 1
         self._log_tick_tokens(self.stats.tick_decode_tokens, n_emitted)
         self.stats.schedule_cache = self.sched_cache.stats.as_dict()

@@ -440,7 +440,14 @@ class Scheduler:
         ``[(sr, slot, chunk_tokens, off), ...]`` (at most ``prefill_pack``).
         """
         cfg = self.config
-        budget = max(0, cfg.token_budget - len(self._decoding_slots()))
+        # decode slots are charged at the engine's token width — with
+        # speculative decode on, every DECODING slot may emit up to k+1
+        # tokens this tick, and prefill only gets what is left
+        budget = max(
+            0,
+            cfg.token_budget
+            - len(self._decoding_slots()) * self.engine.decode_token_width(),
+        )
         if budget == 0:
             # liveness floor: a saturated decode batch must not starve
             # prefill forever — grant one token of prefill progress
@@ -638,8 +645,9 @@ class Scheduler:
     # ------------------------------------------------------------------ step
     def step(self) -> Dict[int, int]:
         """One scheduler tick: admit, pack prefill chunks, decode.
-        Returns {uid: token} for decode-produced tokens (first tokens
-        stream via callbacks and ``handle.generated``)."""
+        Returns {uid: token} for decode-produced tokens — token lists with
+        speculative decode on (first tokens stream via callbacks and
+        ``handle.generated``)."""
         self.stats.steps += 1
         self.stats.log_depth(len(self.queue))
         self._check_deadlines()
@@ -657,7 +665,13 @@ class Scheduler:
             # context cap is hit — either way this request is terminal, and
             # the stream contract owes its consumer a done=True token
             finished = self.engine.slot_req[sr.slot] is not sr.req
-            self._emit_decode_token(sr, tok, done=finished)
+            # speculative ticks emit token *lists* (1..k+1 per slot); the
+            # stream contract is per-token either way, done only on the last
+            toks = tok if isinstance(tok, list) else [tok]
+            for j, t in enumerate(toks):
+                self._emit_decode_token(
+                    sr, t, done=finished and j == len(toks) - 1
+                )
             if finished:
                 self._finish(sr)
         return out
@@ -702,6 +716,13 @@ class Scheduler:
             "cascade_stability_skips": es.cascade_stability_skips,
             "cascade_levels_max": es.cascade_levels_max,
             "prefix_cache": dict(es.prefix_cache),
+            # speculative decode telemetry (engine-side)
+            "spec_ticks": es.spec_ticks,
+            "spec_draft_tokens": es.spec_draft_tokens,
+            "spec_accepted_tokens": es.spec_accepted_tokens,
+            "spec_accept_rate": (
+                es.spec_accepted_tokens / max(1, es.spec_draft_tokens)
+            ),
             # self-healing / fault telemetry (engine-side)
             "nan_ticks": es.nan_ticks,
             "degrade_escalations": es.degrade_escalations,

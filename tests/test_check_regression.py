@@ -28,6 +28,7 @@ DOC = {
     "hardening": {"hardened_over_plain_throughput": 1.0},
     "observability": {"traced_over_untraced_throughput": 1.0},
     "quant": {"capacity_ratio_vs_bf16": 1.9, "token_agreement": 0.97},
+    "speculative": {"spec_speedup_k4": 1.35},
 }
 
 
@@ -94,6 +95,33 @@ def test_hardening_gated_at_tight_threshold():
     cur["hardening"]["hardened_over_plain_throughput"] = 0.99
     _rows, failures = check(cur, DOC)
     assert failures == []
+
+
+def test_speculative_floor_is_absolute():
+    """spec_speedup_k4 has a hard floor at 1.0: speculative decode slower
+    than plain decode must trip the gate even when the drop vs baseline
+    is inside the 15% relative noise bar."""
+    cur = copy.deepcopy(DOC)
+    base = copy.deepcopy(DOC)
+    cur["speculative"]["spec_speedup_k4"] = 0.95
+    base["speculative"]["spec_speedup_k4"] = 0.96   # -1% relative: fine
+    rows, failures = check(cur, base)
+    assert failures == ["speculative"]
+    verdicts = {r[0]: r[4] for r in rows}
+    assert verdicts["speculative"].startswith("FAIL (below floor")
+
+
+def test_speculative_floor_checked_without_baseline():
+    """A baseline that predates the speculative suite skips the relative
+    gate but the absolute floor still applies."""
+    base = copy.deepcopy(DOC)
+    del base["speculative"]
+    _rows, failures = check(DOC, base)
+    assert failures == []
+    slow = copy.deepcopy(DOC)
+    slow["speculative"]["spec_speedup_k4"] = 0.5
+    _rows, failures = check(slow, base)
+    assert failures == ["speculative"]
 
 
 def test_metric_missing_from_baseline_is_skipped():

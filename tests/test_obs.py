@@ -222,6 +222,39 @@ def test_telemetry_shim_warns_and_still_exports_old_names():
     assert h.as_dict()["count"] == 1
 
 
+def test_no_in_repo_module_imports_telemetry_shim():
+    """The deprecation is fully internalized: importing every repro module
+    must never trigger the shim. Checked two ways — no source file imports
+    the old path, and a fresh import sweep emits no shim warning."""
+    import importlib
+    import pathlib
+    import pkgutil
+    import sys
+    import warnings
+
+    import repro
+
+    root = pathlib.Path(next(iter(repro.__path__)))
+    for py in root.rglob("*.py"):
+        if py.name == "telemetry.py" and py.parent.name == "serving":
+            continue
+        text = py.read_text()
+        assert "serving.telemetry import" not in text, (
+            f"{py} imports the deprecated repro.serving.telemetry shim"
+        )
+
+    sys.modules.pop("repro.serving.telemetry", None)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        for mod in pkgutil.walk_packages(repro.__path__, "repro."):
+            if mod.name == "repro.serving.telemetry":
+                continue
+            importlib.import_module(mod.name)
+    shim = [w for w in caught
+            if "repro.serving.telemetry is deprecated" in str(w.message)]
+    assert not shim, f"shim triggered by an in-repo import: {shim}"
+
+
 # ------------------------------------------------------------------ flight
 def test_flight_ring_and_dump(tmp_path):
     fr = FlightRecorder(capacity=8, dump_dir=str(tmp_path))

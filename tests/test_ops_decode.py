@@ -1,0 +1,208 @@
+"""ops.decode(q, kv, plan=...) — the one dispatcher behind every decode
+entry point. Each legacy function is a thin wrapper that builds a
+:class:`DecodePlan` and delegates, so wrapper and dispatcher must be
+BIT-identical (same call, by construction — pinned here so a future
+wrapper "optimization" can't fork the paths), and the plan object must be
+hashable/static-safe since it is the jit key.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.leantile import (
+    cascade_fused_descriptors,
+    make_cascade_schedule,
+    make_chunk_schedule,
+    make_schedule,
+)
+from repro.kernels.ops import (
+    CascadeOperands,
+    DecodePlan,
+    cascade_tables,
+    decode,
+    flash_decode_from_lens,
+    lean_decode_cascade_from_schedule,
+    lean_decode_from_schedule,
+    lean_decode_paged_from_schedule,
+    lean_prefill_chunks,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+Hq, Hkv, d, tile = 4, 2, 16, 8
+
+
+def _dense_problem(rng, B=3, S=32):
+    q = jnp.asarray(rng.standard_normal((B, Hq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, S, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, S, d)), jnp.float32)
+    lens = [S, S - 5, S // 2]
+    seg = jnp.asarray(np.repeat(lens, Hkv), jnp.int32)
+    return q, k, v, lens, seg
+
+
+def _paged_problem(rng, B=3, W=4):
+    num_pages = 1 + B * W
+    kp = jnp.asarray(
+        rng.standard_normal((num_pages, Hkv, tile, d)), jnp.float32
+    )
+    vp = jnp.asarray(
+        rng.standard_normal((num_pages, Hkv, tile, d)), jnp.float32
+    )
+    q = jnp.asarray(rng.standard_normal((B, Hq, d)), jnp.float32)
+    lens = [W * tile, W * tile - 3, tile + 1]
+    tbl = np.zeros((B, W), np.int32)
+    for b, L in enumerate(lens):
+        n = -(-L // tile)
+        tbl[b, :n] = 1 + b * W + np.arange(n)
+    return q, kp, vp, lens, jnp.asarray(tbl)
+
+
+def test_dense_wrapper_is_dispatcher():
+    rng = np.random.default_rng(0)
+    q, k, v, lens, seg = _dense_problem(rng)
+    sched = make_schedule(lens, Hkv, tile, 4)
+    a = lean_decode_from_schedule(q, k, v, seg, sched, interpret=True)
+    plan = DecodePlan(kind="dense", sched=sched, interpret=True)
+    b = decode(q, (k, v), plan=plan, ctx=seg)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_paged_wrapper_is_dispatcher():
+    rng = np.random.default_rng(1)
+    q, kp, vp, lens, tbl = _paged_problem(rng)
+    seg = jnp.asarray(np.repeat(lens, Hkv), jnp.int32)
+    sched = make_schedule(lens, Hkv, tile, 4)
+    a = lean_decode_paged_from_schedule(q, kp, vp, seg, tbl, sched,
+                                        interpret=True)
+    plan = DecodePlan(kind="paged", sched=sched, interpret=True)
+    b = decode(q, (kp, vp), plan=plan, ctx=seg, page_tbl=tbl)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_flash_wrapper_is_dispatcher():
+    rng = np.random.default_rng(2)
+    q, k, v, lens, seg = _dense_problem(rng)
+    a = flash_decode_from_lens(q, k, v, seg, num_splits=2, tile=tile,
+                               interpret=True)
+    plan = DecodePlan(kind="flash", num_splits=2, tile=tile, interpret=True)
+    b = decode(q, (k, v), plan=plan, ctx=seg)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_verify_wrapper_is_dispatcher():
+    rng = np.random.default_rng(3)
+    _, kp, vp, _, tbl = _paged_problem(rng)
+    B, W = tbl.shape
+    C = 4
+    offs = [0, tile - 2, tile]
+    lens = [C, C - 1, C]
+    visible = [o + l for o, l in zip(offs, lens)]
+    q = jnp.asarray(rng.standard_normal((B, Hq, C, d)), jnp.float32)
+    sched = make_chunk_schedule(visible, Hkv, tile, 4, max_len=W * tile)
+    seg_ctx = jnp.asarray(np.repeat(visible, Hkv), jnp.int32)
+    seg_qs = jnp.asarray(np.repeat(offs, Hkv), jnp.int32)
+    a = lean_prefill_chunks(q, kp, vp, seg_ctx, seg_qs, tbl, sched,
+                            interpret=True)
+    plan = DecodePlan(kind="verify", sched=sched, spec_rows=C,
+                      interpret=True)
+    b = decode(q, (kp, vp), plan=plan, ctx=seg_ctx, page_tbl=tbl,
+               qstart=seg_qs)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_cascade_wrapper_is_dispatcher(fused):
+    rng = np.random.default_rng(4)
+    _, kp, vp, _, tbl_j = _paged_problem(rng)
+    tbl = np.array(tbl_j)
+    # first two sequences share their first page
+    tbl[1, 0] = tbl[0, 0]
+    B, W = tbl.shape
+    lens = [2 * tile, tile + 3, tile + 1]
+    q = jnp.asarray(rng.standard_normal((B, Hq, d)), jnp.float32)
+    csched, binding = make_cascade_schedule(
+        lens, [[0, 1]], [1], Hkv, tile, 4, max_len=W * tile
+    )
+    prefix_tbl, suffix_tbl = cascade_tables(tbl, binding)
+    fdesc = cascade_fused_descriptors(csched, binding)
+    seg_sfx = jnp.asarray(
+        np.repeat(np.asarray(lens) - np.asarray(binding.seq_prefix_len),
+                  Hkv),
+        jnp.int32,
+    )
+    arrs = dict(
+        prefix_lens=jnp.asarray(binding.prefix_lens, jnp.int32),
+        members=jnp.asarray(binding.members, jnp.int32),
+        prefix_tbl=jnp.asarray(prefix_tbl, jnp.int32),
+        suffix_tbl=jnp.asarray(suffix_tbl, jnp.int32),
+        fused_desc=jnp.asarray(fdesc, jnp.int32),
+    )
+    a = lean_decode_cascade_from_schedule(
+        q, kp, vp, seg_sfx, arrs["prefix_lens"], arrs["members"],
+        arrs["prefix_tbl"], arrs["suffix_tbl"], arrs["fused_desc"],
+        csched, fused=fused, interpret=True,
+    )
+    plan = DecodePlan(kind="cascade", sched=csched, fused=fused,
+                      interpret=True)
+    b = decode(q, (kp, vp), plan=plan, ctx=seg_sfx,
+               cascade=CascadeOperands(**arrs))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------- plan contract
+def test_plan_is_hashable_and_value_equal():
+    sched = make_schedule([16, 8], Hkv, tile, 4)
+    p1 = DecodePlan(kind="dense", sched=sched)
+    p2 = DecodePlan(kind="dense", sched=sched)
+    assert p1 == p2 and hash(p1) == hash(p2)
+    assert p1 != dataclasses.replace(p1, fused=False)
+    # usable as a dict/jit-static key
+    assert {p1: "trace"}[p2] == "trace"
+
+
+def test_plan_validation():
+    sched = make_schedule([16], Hkv, tile, 4)
+    with pytest.raises(ValueError, match="unknown plan kind"):
+        DecodePlan(kind="speculative", sched=sched)
+    with pytest.raises(ValueError, match="need num_splits"):
+        DecodePlan(kind="flash")
+    with pytest.raises(ValueError, match="need a schedule"):
+        DecodePlan(kind="dense")
+    with pytest.raises(ValueError, match="spec_rows"):
+        DecodePlan(kind="verify", sched=sched)
+
+
+def test_dispatcher_missing_operands():
+    rng = np.random.default_rng(5)
+    q, kp, vp, lens, tbl = _paged_problem(rng)
+    seg = jnp.asarray(np.repeat(lens, Hkv), jnp.int32)
+    sched = make_schedule(lens, Hkv, tile, 4)
+    with pytest.raises(ValueError, match="page_tbl"):
+        decode(q, (kp, vp), plan=DecodePlan(kind="paged", sched=sched),
+               ctx=seg)
+    with pytest.raises(ValueError, match="CascadeOperands"):
+        decode(q, (kp, vp), plan=DecodePlan(kind="cascade", sched=sched),
+               ctx=seg)
+
+
+def test_plan_as_jit_static_key():
+    """The plan IS the static key: one trace per plan, replayed across
+    runtime arrays — the property the engine's jitted steps rely on."""
+    rng = np.random.default_rng(6)
+    q, k, v, lens, seg = _dense_problem(rng)
+    sched = make_schedule(lens, Hkv, tile, 4)
+    plan = DecodePlan(kind="dense", sched=sched, interpret=True)
+    step = jax.jit(
+        lambda q, k, v, seg, plan: decode(q, (k, v), plan=plan, ctx=seg),
+        static_argnames=("plan",),
+    )
+    a = step(q, k, v, seg, plan)
+    b = step(q + 1, k, v, seg, plan)     # same plan -> cache hit
+    ref = lean_decode_from_schedule(q, k, v, seg, sched, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    assert b.shape == a.shape
